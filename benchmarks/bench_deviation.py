@@ -1,0 +1,55 @@
+"""Paper Table 6: query-distribution deviation (DA benchmark role).
+
+EHL* (known) built from Cluster-x history vs EHL* (unknown) vs EHL-1/2/4,
+evaluated on mixed workloads where only y% of queries follow the predicted
+clusters (y in 100/80/50/20).
+"""
+
+from __future__ import annotations
+
+from repro.core.workload import cluster_queries, mixed_queries, \
+    uniform_queries, workload_scores
+
+from . import common
+
+
+def run(map_name="rooms-M", budgets=(0.8, 0.4, 0.2),
+        adherences=(1.0, 0.8, 0.5, 0.2), clusters=(2, 4, 8), quick=False):
+    if quick:
+        budgets = (0.4,)
+        adherences = (1.0, 0.2)
+        clusters = (2,)
+    ctx = common.suite(map_name)
+    rows = []
+    n_eval = 120 if quick else 240
+    uni_eval = uniform_queries(ctx.scene, ctx.graph, n_eval, seed=31)
+
+    for k in clusters:
+        hist = cluster_queries(ctx.scene, ctx.graph, k, 1500, seed=41 + k,
+                               require_path=False)
+        clus_eval = cluster_queries(ctx.scene, ctx.graph, k, n_eval,
+                                    seed=51 + k)
+        for frac in budgets:
+            # known: workload-aware scores from history
+            idx_known, _, _ = common.ehl_star(ctx, frac)
+            scores = workload_scores(idx_known, hist)
+            idx_known, _, _ = common.ehl_star(ctx, frac, scores=scores,
+                                              alpha=0.2)
+            # unknown: uniform scores
+            idx_unk, _, _ = common.ehl_star(ctx, frac)
+            for y in adherences:
+                mixed = mixed_queries(clus_eval, uni_eval, y, seed=61)
+                us_k = common.time_queries(idx_known, mixed)
+                us_u = common.time_queries(idx_unk, mixed)
+                pct = int(frac * 100)
+                rows.append(common.emit(
+                    f"table6/{map_name}/C-{k}/y{int(y * 100)}/"
+                    f"EHL*known-{pct}", us_k, ""))
+                rows.append(common.emit(
+                    f"table6/{map_name}/C-{k}/y{int(y * 100)}/"
+                    f"EHL*unknown-{pct}", us_u, ""))
+    # EHL-1 reference row (distribution-independent)
+    idx, _ = common.fresh_ehl(ctx)
+    us = common.time_queries(idx, uni_eval)
+    rows.append(common.emit(f"table6/{map_name}/EHL-1/Unknown", us, ""))
+    return rows

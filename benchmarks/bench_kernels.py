@@ -1,0 +1,77 @@
+"""Kernel microbenchmarks: Pallas bodies vs jnp references.
+
+On this CPU container the Pallas kernels execute in interpret mode (Python —
+orders of magnitude slower than compiled; meaningless as wall time), so the
+numbers reported are (a) jnp-reference wall time per batch — the deployable
+CPU path, and (b) the analytic TPU roofline estimate for the kernel at its
+default BlockSpec tiling, derived from op counts (see EXPERIMENTS.md §Perf
+for the derivation and the hillclimb on these terms).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+from . import common
+
+V5E_VPU_FLOPS = 4e12          # f32 vector throughput per chip (approx)
+V5E_HBM = 819e9
+
+
+def _time(fn, *args, reps=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    best = np.inf
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run(quick=False):
+    rows = []
+    rng = np.random.default_rng(0)
+    B, L, E = (64, 256, 512) if quick else (256, 512, 1024)
+
+    # segvis: N = B*L segments vs E edges
+    N = B * L
+    p = jnp.asarray(rng.uniform(0, 100, (N, 2)), jnp.float32)
+    q = jnp.asarray(rng.uniform(0, 100, (N, 2)), jnp.float32)
+    ea = jnp.asarray(rng.uniform(0, 100, (E, 2)), jnp.float32)
+    eb = jnp.asarray(rng.uniform(0, 100, (E, 2)), jnp.float32)
+    f = jax.jit(lambda *a: ops.segvis_ref(*a))
+    sec = _time(f, p, q, ea, eb)
+    flops = N * E * 20
+    tpu_est = max(flops / V5E_VPU_FLOPS,
+                  (N * 16 + E * 16) / V5E_HBM)
+    rows.append(common.emit(
+        "kernel/segvis_ref", 1e6 * sec / B,
+        f"cpu_s={sec:.4f};flops={flops:.3g};tpu_roofline_s={tpu_est:.2e}"))
+
+    # label_join: [B, L] x [B, L]
+    hs = jnp.asarray(np.sort(rng.integers(0, 256, (B, L)), 1), jnp.int32)
+    ht = jnp.asarray(np.sort(rng.integers(0, 256, (B, L)), 1), jnp.int32)
+    vs = jnp.asarray(rng.uniform(0, 100, (B, L)), jnp.float32)
+    vt = jnp.asarray(rng.uniform(0, 100, (B, L)), jnp.float32)
+    g = jax.jit(lambda *a: ops.label_join_ref(*a))
+    sec = _time(g, hs, vs, ht, vt)
+    flops = B * L * L * 4
+    tpu_est = max(flops / V5E_VPU_FLOPS, (B * L * 16) / V5E_HBM)
+    rows.append(common.emit(
+        "kernel/label_join_ref", 1e6 * sec / B,
+        f"cpu_s={sec:.4f};flops={flops:.3g};tpu_roofline_s={tpu_est:.2e}"))
+
+    # beyond-paper hub-dense join
+    h = jax.jit(lambda *a: ops.label_join_hubdense_ref(*a, num_hubs=256))
+    sec = _time(h, hs, vs, ht, vt)
+    rows.append(common.emit(
+        "kernel/label_join_hubdense", 1e6 * sec / B,
+        f"cpu_s={sec:.4f};flops={B * (L + 256) * 8:.3g}"))
+    return rows

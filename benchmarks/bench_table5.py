@@ -1,0 +1,79 @@
+"""Paper Table 5: memory, build time, query runtime — EHL* vs competitors.
+
+Columns: EHL*-{80,60,40,20,10,5} / EHL-1/2/4 / visgraph-A* (the index-free
+online stand-in for Polyanya; see DESIGN.md §5 for the deviation note).
+Query sets: Unknown + Cluster-{2,4,8}; workload-aware EHL* uses historical
+cluster queries for scores (paper methodology).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.visgraph import astar
+from repro.core.workload import cluster_queries, workload_scores
+
+from . import common
+
+
+def run(maps=("rooms-M", "maze-M", "scatter-M"), n_queries=300,
+        budgets=common.BUDGETS, quick=False):
+    if quick:
+        maps = maps[:1]
+        budgets = (0.6, 0.2, 0.05)
+        n_queries = 120
+    rows = []
+    for m in maps:
+        ctx = common.suite(m)
+        qsets = common.query_sets(ctx, n=n_queries)
+
+        # EHL-k baselines
+        base_mem = None
+        for k in (1, 2, 4):
+            idx, t_build = common.fresh_ehl(ctx, k)
+            mem = idx.label_memory() / 1e6
+            if k == 1:
+                base_mem = idx.label_memory()
+            for qname, qs in qsets.items():
+                us = common.time_queries(idx, qs)
+                rows.append(common.emit(
+                    f"table5/{m}/EHL-{k}/{qname}", us,
+                    f"mem_mb={mem:.2f};build_s={t_build:.2f}"))
+
+        # EHL*-x (unknown workload)
+        for frac in budgets:
+            idx, t_build, stats = common.ehl_star(ctx, frac)
+            mem = idx.label_memory() / 1e6
+            for qname, qs in qsets.items():
+                us = common.time_queries(idx, qs)
+                rows.append(common.emit(
+                    f"table5/{m}/EHL*-{int(frac * 100)}/{qname}", us,
+                    f"mem_mb={mem:.2f};build_s={t_build:.2f};"
+                    f"budget_ok={stats.final_bytes <= stats.budget}"))
+
+        # workload-aware EHL* (known cluster distribution, paper Fig 1b)
+        for k in (2,):
+            hist = cluster_queries(ctx.scene, ctx.graph, k, 2000,
+                                   seed=77, require_path=False)
+            for frac in (budgets if not quick else (0.05,)):
+                idx, t_build, _ = common.ehl_star(ctx, frac)
+                scores = workload_scores(idx, hist)
+                idx2, t2, _ = common.ehl_star(ctx, frac, scores=scores,
+                                              alpha=0.2)
+                us = common.time_queries(idx2, qsets[f"Cluster-{k}"])
+                rows.append(common.emit(
+                    f"table5/{m}/EHL*w-{int(frac * 100)}/Cluster-{k}", us,
+                    f"mem_mb={idx2.label_memory() / 1e6:.2f};"
+                    f"build_s={t2:.2f}"))
+
+        # index-free online baseline (Polyanya's role): A* on the visgraph
+        qs = qsets["Unknown"]
+        t0 = time.perf_counter()
+        for s, t in zip(qs.s[:60], qs.t[:60]):
+            astar(ctx.graph, s, t)
+        us = 1e6 * (time.perf_counter() - t0) / 60
+        rows.append(common.emit(f"table5/{m}/visgraph-A*/Unknown", us,
+                                "mem_mb=0.0;online_baseline"))
+    return rows

@@ -1,0 +1,93 @@
+"""Shared benchmark plumbing: suite construction, timers, CSV emission."""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.core.compression import compress_to_fraction
+from repro.core.grid import build_ehl
+from repro.core.hublabel import build_hub_labels
+from repro.core.maps import make_map
+from repro.core.packed import pack_index
+from repro.core.visgraph import build_visgraph
+from repro.core.workload import (cluster_queries, mixed_queries,
+                                 uniform_queries, workload_scores)
+
+# map suite -> base cell size (EHL-1); EHL-k multiplies by k
+SUITE_CELLS = {"rooms-M": 2.0, "maze-M": 2.0, "scatter-M": 2.0}
+BUDGETS = (0.8, 0.6, 0.4, 0.2, 0.1, 0.05)
+
+
+@dataclasses.dataclass
+class SuiteContext:
+    name: str
+    scene: object
+    graph: object
+    hl: object
+    base_cell: float
+    build_graph_s: float
+
+
+_CACHE: dict = {}
+
+
+def suite(name: str, seed: int = 0) -> SuiteContext:
+    key = (name, seed)
+    if key not in _CACHE:
+        t0 = time.perf_counter()
+        scene = make_map(name, seed=seed)
+        graph = build_visgraph(scene)
+        hl = build_hub_labels(graph)
+        _CACHE[key] = SuiteContext(name, scene, graph, hl,
+                                   SUITE_CELLS.get(name, 2.0),
+                                   time.perf_counter() - t0)
+    return _CACHE[key]
+
+
+def fresh_ehl(ctx: SuiteContext, cell_mult: int = 1):
+    t0 = time.perf_counter()
+    idx = build_ehl(ctx.scene, ctx.base_cell * cell_mult, graph=ctx.graph,
+                    hl=ctx.hl)
+    return idx, time.perf_counter() - t0 + ctx.build_graph_s
+
+
+def ehl_star(ctx: SuiteContext, fraction: float, scores=None, alpha=0.0):
+    """EHL*-x: budget = x of EHL-1 label memory."""
+    idx, t_base = fresh_ehl(ctx)
+    t0 = time.perf_counter()
+    stats = compress_to_fraction(idx, fraction, cell_scores=scores,
+                                 alpha=alpha)
+    return idx, t_base + time.perf_counter() - t0, stats
+
+
+def query_sets(ctx: SuiteContext, n: int = 400, seed: int = 1):
+    out = {"Unknown": uniform_queries(ctx.scene, ctx.graph, n, seed=seed)}
+    for k in (2, 4, 8):
+        out[f"Cluster-{k}"] = cluster_queries(ctx.scene, ctx.graph, k, n,
+                                              seed=seed + k)
+    return out
+
+
+def time_queries(index, qs, batch_size: int = 256, reps: int = 3,
+                 use_kernels: bool = False) -> float:
+    """Mean us/query through the batched JAX engine (packed index)."""
+    from repro.serving.engine import PathServer
+    pk = pack_index(index)
+    srv = PathServer(pk, batch_size=batch_size, use_kernels=use_kernels)
+    srv.warmup()
+    best = np.inf
+    for _ in range(reps):
+        srv.stats.seconds = 0.0
+        srv.stats.queries = 0
+        srv.query(qs.s.astype(np.float32), qs.t.astype(np.float32))
+        best = min(best, srv.stats.us_per_query)
+    return best
+
+
+def emit(name: str, us: float, derived: str = "") -> str:
+    line = f"{name},{us:.3f},{derived}"
+    print(line, flush=True)
+    return line

@@ -1,0 +1,58 @@
+"""Assemble the generated tables into EXPERIMENTS.md §5.
+
+    PYTHONPATH=src python -m benchmarks.make_tables
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+EXP = os.path.join(HERE, "..", "EXPERIMENTS.md")
+MARK = "## 5. Generated tables"
+
+
+def dryrun_table() -> str:
+    rows = []
+    for f in sorted(glob.glob(os.path.join(HERE, "dryrun_artifacts",
+                                           "*.json"))):
+        d = json.load(open(f))
+        if d["status"] == "ok":
+            coll = sum(d["collectives"]["bytes"].values())
+            rows.append(
+                f"| {d['arch']} | {d['shape']} | {d['mesh']} | ok | "
+                f"{d['peak_device_bytes'] / 2**30:.2f} | "
+                f"{d['flops']:.3g} | {d['bytes_accessed']:.3g} | "
+                f"{coll / 1e6:.0f} |")
+        else:
+            rows.append(f"| {d['arch']} | {d['shape']} | {d['mesh']} | "
+                        f"{d['status']} | — | — | — | — |")
+    head = ("### Dry-run matrix (per-device; scan bodies counted once — see "
+            "§Roofline for calibrated totals)\n\n"
+            "| arch | shape | mesh | status | peak GiB | HLO flops | "
+            "HLO bytes | coll MB |\n|---|---|---|---|---|---|---|---|")
+    return head + "\n" + "\n".join(rows)
+
+
+def roofline_table() -> str:
+    path = os.path.join(HERE, "artifacts", "roofline_table.md")
+    if not os.path.exists(path):
+        return "(roofline_table.md not yet generated)"
+    return ("### Roofline (single-pod, calibrated totals)\n\n"
+            + open(path).read())
+
+
+def main():
+    text = open(EXP).read()
+    base = text.split(MARK)[0]
+    out = (base + MARK + "\n\n" + roofline_table() + "\n\n"
+           + dryrun_table() + "\n")
+    open(EXP, "w").write(out)
+    print(f"EXPERIMENTS.md updated "
+          f"({len(out.splitlines())} lines)")
+
+
+if __name__ == "__main__":
+    main()

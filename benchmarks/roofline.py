@@ -1,0 +1,251 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Roofline analysis — the three terms per (arch x shape) on the 16x16 pod.
+
+Terms (v5e constants per the brief):
+    compute_s    = HLO_FLOPs_per_device / 197 TF/s
+    memory_s     = HLO_bytes_per_device / 819 GB/s
+    collective_s = collective_bytes_per_device / ~45 GB/s effective ICI
+
+**Calibration.** XLA's cost_analysis counts while-loop bodies ONCE (measured:
+tinyllama flops identical for L = 2/4/8), so the production scan-over-layers
+lowering hides (L-1)/L of the flops.  We therefore lower small UNROLLED
+calibration configs at full width — unrolled layer loop, unrolled attention
+blocking (same block sizes => same memory pattern), unrolled CE chunks,
+remat recompute included — and fit the linear model
+
+    cost(L) = outside + L * body        (dense / ssm / hybrid / vlm)
+    cost    = outside + M*body_moe + Dn*body_dense      (moe: 3 lowerings)
+    cost    = outside + Ld*body_dec + Le*body_enc       (encdec: 3 lowerings)
+
+then extrapolate to the real depth.  flops / bytes / per-kind collective
+bytes all go through the same fit.  MODEL_FLOPS uses 6*N_active*D for train
+and 2*N_active*D for inference shapes (D = tokens processed).
+"""
+
+import argparse
+import dataclasses
+import json
+
+import numpy as np
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 45e9
+HBM_PER_CHIP = 16 * 2 ** 30
+
+ART = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                   "dryrun_artifacts")
+OUT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "artifacts")
+
+
+def _calib_cfg(cfg, n_layers, n_dense, enc_layers, seq_len):
+    big = seq_len >= 32768
+    return dataclasses.replace(
+        cfg, n_layers=n_layers, n_dense_layers=n_dense,
+        enc_layers=enc_layers, mtp=cfg.mtp,
+        unroll_layers=True,
+        attn_q_chunk=2048 if big else 512,
+        attn_kv_chunk=4096 if big else 1024)
+
+
+def _measure(cfg, shape, mesh):
+    """Lower + compile one calibration config; return cost vector."""
+    import jax
+    from repro.launch.dryrun import build_step, collective_bytes
+    with mesh:
+        fn, args, in_sh = build_step(cfg, shape, mesh)
+        compiled = jax.jit(fn, in_shardings=in_sh).lower(*args).compile()
+        ca = compiled.cost_analysis() or {}
+        coll = collective_bytes(compiled.as_text())
+    vec = {"flops": ca.get("flops", 0.0),
+           "bytes": ca.get("bytes accessed", 0.0)}
+    for k, v in coll["bytes"].items():
+        vec[f"coll/{k}"] = float(v)
+    return vec
+
+
+def _vsub(a, b):
+    return {k: a[k] - b.get(k, 0.0) for k in a}
+
+
+def _vadd(a, b, s=1.0):
+    return {k: a.get(k, 0.0) + s * b.get(k, 0.0) for k in set(a) | set(b)}
+
+
+def calibrate_cell(arch: str, shape, mesh) -> dict:
+    """Extrapolated per-device cost vector for the full-depth model."""
+    from repro.configs import get_config
+    cfg = get_config(arch)
+    S = shape.seq_len
+
+    if cfg.encdec:
+        c11 = _measure(_calib_cfg(cfg, 1, 0, 1, S), shape, mesh)
+        c21 = _measure(_calib_cfg(cfg, 2, 0, 1, S), shape, mesh)
+        c12 = _measure(_calib_cfg(cfg, 1, 0, 2, S), shape, mesh)
+        body_dec = _vsub(c21, c11)
+        body_enc = _vsub(c12, c11)
+        total = _vadd(_vadd(c11, body_dec, cfg.n_layers - 1),
+                      body_enc, cfg.enc_layers - 1)
+        parts = {"lowerings": 3}
+    elif cfg.moe:
+        nd = 1 if cfg.n_dense_layers else 0
+        m11 = _measure(_calib_cfg(cfg, nd + 1, nd, 0, S), shape, mesh)
+        m12 = _measure(_calib_cfg(cfg, nd + 2, nd, 0, S), shape, mesh)
+        body_moe = _vsub(m12, m11)
+        if nd:
+            m21 = _measure(_calib_cfg(cfg, nd + 2, nd + 1, 0, S), shape, mesh)
+            body_dense = _vsub(m21, m12)
+        else:
+            body_dense = {k: 0.0 for k in m11}
+        M_real = cfg.n_layers - cfg.n_dense_layers
+        total = _vadd(_vadd(m11, body_moe, M_real - 1),
+                      body_dense, cfg.n_dense_layers - nd)
+        parts = {"lowerings": 3 if nd else 2}
+    else:
+        c1 = _measure(_calib_cfg(cfg, 1, 0, 0, S), shape, mesh)
+        c2 = _measure(_calib_cfg(cfg, 2, 0, 0, S), shape, mesh)
+        body = _vsub(c2, c1)
+        total = _vadd(c1, body, cfg.n_layers - 1)
+        parts = {"lowerings": 2}
+    total.update(parts)
+    return total
+
+
+def model_flops(cfg, shape) -> float:
+    """Analytic MODEL_FLOPS (6*N_active*D train, 2*N_active*D inference)."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch          # decode: one token per seq
+
+
+def analyse_cell(arch: str, shape, mesh, artifact: dict) -> dict:
+    from repro.configs import get_config
+    cfg = get_config(arch)
+    cal = calibrate_cell(arch, shape, mesh)
+    n_dev = mesh.devices.size
+
+    flops_pd = cal["flops"]
+    bytes_pd = cal["bytes"]
+    coll_pd = sum(v for k, v in cal.items() if k.startswith("coll/"))
+
+    compute_s = flops_pd / PEAK_FLOPS
+    memory_s = bytes_pd / HBM_BW
+    collective_s = coll_pd / ICI_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+
+    mf = model_flops(cfg, shape)
+    hlo_total = flops_pd * n_dev
+    useful = mf / hlo_total if hlo_total else 0.0
+    peak = artifact.get("peak_device_bytes", 0)
+
+    moves = {
+        "compute_s": "raise arithmetic efficiency: larger MXU tiles / fewer "
+                     "remat recomputes / drop redundant gathers",
+        "memory_s": "cut HBM traffic: keep KV/latents in bf16, fuse "
+                    "norm+matmul, larger attention blocks",
+        "collective_s": "reshard to cut all-gathers: overlap collectives "
+                        "with the layer scan, reduce-scatter gradients",
+    }
+    return {
+        "arch": arch, "shape": shape.name,
+        "flops_per_dev": flops_pd, "bytes_per_dev": bytes_pd,
+        "collective_bytes_per_dev": coll_pd,
+        **{k: round(v, 6) for k, v in terms.items()},
+        "dominant": dominant,
+        "model_flops": mf,
+        "useful_flop_ratio": round(useful, 4),
+        "roofline_fraction": round(useful, 4),
+        "peak_device_bytes": peak,
+        "fits_16g": bool(peak and peak <= HBM_PER_CHIP),
+        "note": moves[dominant],
+        "calib": {k: v for k, v in cal.items() if k.startswith("coll/")},
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args(argv)
+
+    from repro.configs import ARCH_IDS, get_config
+    from repro.launch.mesh import make_production_mesh
+    from repro.models.config import LM_SHAPES, shape_applicable
+    from repro.distributed.hints import set_mesh_hints
+
+    mesh = make_production_mesh()
+    set_mesh_hints(mesh)
+    os.makedirs(OUT, exist_ok=True)
+
+    rows = []
+    for arch in ([args.arch] if args.arch else ARCH_IDS):
+        for shape in LM_SHAPES:
+            if args.shape and shape.name != args.shape:
+                continue
+            runs, reason = shape_applicable(get_config(arch), shape)
+            out_path = os.path.join(OUT, f"roofline_{arch}__{shape.name}.json")
+            if not runs:
+                rec = {"arch": arch, "shape": shape.name, "status": "skipped",
+                       "reason": reason}
+                json.dump(rec, open(out_path, "w"), indent=1)
+                rows.append(rec)
+                continue
+            if args.skip_existing and os.path.exists(out_path):
+                rows.append(json.load(open(out_path)))
+                print(f"[cached] {arch} {shape.name}")
+                continue
+            art_path = os.path.join(ART, f"{arch}__{shape.name}__pod.json")
+            artifact = json.load(open(art_path)) if os.path.exists(art_path) \
+                else {}
+            print(f"[roofline] {arch} {shape.name} ...", flush=True)
+            try:
+                rec = analyse_cell(arch, shape, mesh, artifact)
+                rec["status"] = "ok"
+            except Exception as e:     # noqa: BLE001
+                import traceback
+                rec = {"arch": arch, "shape": shape.name, "status": "error",
+                       "error": f"{type(e).__name__}: {e}",
+                       "trace": traceback.format_exc()[-1500:]}
+            json.dump(rec, open(out_path, "w"), indent=1)
+            rows.append(rec)
+            if rec["status"] == "ok":
+                print(f"  compute={rec['compute_s']:.4f}s "
+                      f"mem={rec['memory_s']:.4f}s "
+                      f"coll={rec['collective_s']:.4f}s "
+                      f"dom={rec['dominant']} useful={rec['useful_flop_ratio']}",
+                      flush=True)
+            else:
+                print("  " + rec.get("error", rec["status"]), flush=True)
+
+    # markdown table
+    md = ["| arch | shape | compute_s | memory_s | collective_s | dominant "
+          "| MODEL/HLO | fits 16G |",
+          "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["status"] == "ok":
+            md.append(
+                f"| {r['arch']} | {r['shape']} | {r['compute_s']:.4f} | "
+                f"{r['memory_s']:.4f} | {r['collective_s']:.4f} | "
+                f"{r['dominant'].replace('_s', '')} | "
+                f"{r['useful_flop_ratio']:.3f} | "
+                f"{'y' if r.get('fits_16g') else 'n'} |")
+        elif r["status"] == "skipped":
+            md.append(f"| {r['arch']} | {r['shape']} | — | — | — | skipped | "
+                      f"— | — |")
+    table = "\n".join(md)
+    open(os.path.join(OUT, "roofline_table.md"), "w").write(table + "\n")
+    print("\n" + table)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+"""Benchmark harness entry — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only table5,...]
+
+Emits ``name,us_per_call,derived`` CSV lines (one per measurement).  The
+dry-run / roofline artifacts are produced by their own entry points
+(``repro.launch.dryrun``, ``benchmarks.roofline``) because they force a
+512-device jax runtime; this harness reports them if present.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smallest sizes (single map, 3 budgets)")
+    ap.add_argument("--full", action="store_true",
+                    help="the paper-scale sweep (3 maps x 6 budgets x 4 "
+                         "query sets; ~1h on one CPU core)")
+    ap.add_argument("--only", default="",
+                    help="comma list: table5,table6,fig5,kernels,roofline")
+    args = ap.parse_args(argv)
+    only = set(args.only.split(",")) if args.only else None
+
+    t0 = time.time()
+    print("name,us_per_call,derived")
+
+    def want(name):
+        return only is None or name in only
+
+    # default = mid-size (one map family per table, all budgets); --full
+    # widens to the paper-scale sweep, --quick shrinks to CI size.
+    if want("table5"):
+        from . import bench_table5
+        if args.full:
+            bench_table5.run()
+        else:
+            bench_table5.run(maps=("rooms-M",), n_queries=160,
+                             budgets=(0.8, 0.6, 0.4, 0.2, 0.1, 0.05)
+                             if not args.quick else (0.6, 0.2, 0.05),
+                             quick=False)
+    if want("table6"):
+        from . import bench_deviation
+        bench_deviation.run(quick=args.quick or not args.full)
+    if want("fig5"):
+        from . import bench_regions
+        bench_regions.run(quick=args.quick)
+    if want("kernels"):
+        from . import bench_kernels
+        bench_kernels.run(quick=args.quick)
+    if want("ehlperf"):
+        from . import bench_ehl_perf
+        bench_ehl_perf.run(quick=True)
+
+    if want("roofline"):
+        art = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                           "artifacts")
+        n = 0
+        if os.path.isdir(art):
+            for f in sorted(os.listdir(art)):
+                if f.startswith("roofline_") and f.endswith(".json"):
+                    r = json.load(open(os.path.join(art, f)))
+                    if r.get("status") == "ok":
+                        print(f"roofline/{r['arch']}/{r['shape']},0.0,"
+                              f"dom={r['dominant']};"
+                              f"useful={r['useful_flop_ratio']}")
+                        n += 1
+        if n == 0:
+            print("roofline/none,0.0,run `python -m benchmarks.roofline`")
+
+    print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""End-to-end serving driver: EHL* index answering batched ESPP queries.
+
+Builds the index under a memory budget (workload-aware if --clusters > 0),
+then serves a stream of query batches through the jitted engine and reports
+throughput — the paper's online phase as a service.
+
+    PYTHONPATH=src python examples/pathfind_serve.py --budget 0.2 --clusters 2
+"""
+
+import argparse
+
+import numpy as np
+
+from repro.core import build_ehl, build_visgraph, compress_to_fraction
+from repro.core.maps import make_map
+from repro.core.packed import pack_index
+from repro.core.workload import (cluster_queries, uniform_queries,
+                                 workload_scores)
+from repro.serving.engine import PathServer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--map", default="rooms-M")
+    ap.add_argument("--budget", type=float, default=0.2)
+    ap.add_argument("--clusters", type=int, default=0)
+    ap.add_argument("--queries", type=int, default=2000)
+    ap.add_argument("--batch", type=int, default=256)
+    ap.add_argument("--kernels", action="store_true",
+                    help="route through the Pallas kernels (interpret on CPU)")
+    args = ap.parse_args()
+
+    scene = make_map(args.map, seed=0)
+    graph = build_visgraph(scene)
+    index = build_ehl(scene, cell_size=2.0, graph=graph)
+    full_mb = index.label_memory() / 1e6
+
+    scores, alpha = None, 0.0
+    if args.clusters > 0:
+        hist = cluster_queries(scene, graph, args.clusters, 2000, seed=9,
+                               require_path=False)
+        scores, alpha = workload_scores(index, hist), 0.2
+    stats = compress_to_fraction(index, args.budget, cell_scores=scores,
+                                 alpha=alpha)
+    print(f"index: {full_mb:.1f} MB -> {stats.final_bytes / 1e6:.1f} MB "
+          f"({args.budget:.0%} budget, workload-aware={args.clusters > 0})")
+
+    pk = pack_index(index)
+    print(f"packed: {pk.num_regions} regions x {pk.label_width} labels, "
+          f"{pk.device_bytes() / 1e6:.1f} MB on device")
+
+    if args.clusters > 0:
+        qs = cluster_queries(scene, graph, args.clusters, args.queries,
+                             seed=33, require_path=False)
+    else:
+        qs = uniform_queries(scene, graph, args.queries, seed=33,
+                             require_path=False)
+    srv = PathServer(pk, batch_size=args.batch, use_kernels=args.kernels)
+    srv.warmup()
+    d = srv.query(qs.s.astype(np.float32), qs.t.astype(np.float32))
+    print(f"served {srv.stats.queries} queries in {srv.stats.seconds:.3f}s "
+          f"-> {srv.stats.us_per_query:.1f} us/query "
+          f"({srv.stats.qps:,.0f} qps); {np.isfinite(d).sum()} reachable")
+
+
+if __name__ == "__main__":
+    main()

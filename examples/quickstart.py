@@ -1,0 +1,50 @@
+"""Quickstart: build EHL* on a synthetic map, compress to a budget, query.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+from repro.core import (astar, build_ehl, build_visgraph,
+                        compress_to_fraction, query)
+from repro.core.maps import make_map
+from repro.core.packed import pack_index, query_batch
+from repro.core.workload import uniform_queries
+
+import jax.numpy as jnp
+
+
+def main():
+    # 1. a scene: polygonal obstacles on a 60x60 map
+    scene = make_map("rooms-S", seed=1)
+    print(f"scene: {len(scene.polygons)} obstacles, "
+          f"{int(scene.convex_mask.sum())} convex vertices")
+
+    # 2. offline: visibility graph -> hub labels -> EHL grid index
+    graph = build_visgraph(scene)
+    index = build_ehl(scene, cell_size=2.0, graph=graph)
+    print(f"EHL: {index.nx}x{index.ny} cells, "
+          f"{index.label_memory() / 1e6:.2f} MB of labels")
+
+    # 3. EHL*: compress to 25% of the EHL memory (Algorithm 1)
+    stats = compress_to_fraction(index, 0.25)
+    print(f"EHL*-25: {stats.final_bytes / 1e6:.2f} MB after {stats.merges} "
+          f"merges, {stats.regions} regions (budget "
+          f"{'met' if stats.final_bytes <= stats.budget else 'MISSED'})")
+
+    # 4. query: single pair, with optimal path
+    qs = uniform_queries(scene, graph, 5, seed=7)
+    for s, t in zip(qs.s[:3], qs.t[:3]):
+        d, path = query(index, s, t)
+        dref, _ = astar(graph, s, t)
+        print(f"  d({np.round(s, 1)} -> {np.round(t, 1)}) = {d:.3f} "
+              f"(A* says {dref:.3f}), path via {len(path)} points")
+
+    # 5. batched TPU-style engine on the packed index
+    pk = pack_index(index)
+    d = query_batch(pk, jnp.asarray(qs.s), jnp.asarray(qs.t))
+    print("batched distances:", np.round(np.asarray(d), 3))
+
+
+if __name__ == "__main__":
+    main()

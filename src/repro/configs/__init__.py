@@ -1,0 +1,3 @@
+"""Per-architecture configs (exact published dims) + the paper's own suites."""
+
+from .registry import ARCH_IDS, all_cells, get_config, input_specs  # noqa: F401

@@ -1,0 +1,66 @@
+"""Architecture registry: ``--arch <id>`` resolution + per-arch input specs.
+
+Each assigned architecture lives in its own module exporting ``CONFIG``; the
+registry also owns the (arch x shape) dry-run cell enumeration and the
+``input_specs`` ShapeDtypeStruct builders (no allocation — the dry-run
+pattern)."""
+
+from __future__ import annotations
+
+import importlib
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import LM_SHAPES, ModelConfig, ShapeSpec, shape_applicable
+
+ARCH_IDS = (
+    "llama4-scout-17b-a16e",
+    "deepseek-v3-671b",
+    "tinyllama-1.1b",
+    "nemotron-4-340b",
+    "gemma2-27b",
+    "gemma3-12b",
+    "hymba-1.5b",
+    "mamba2-780m",
+    "qwen2-vl-72b",
+    "whisper-large-v3",
+)
+
+_MODULE_OF = {a: a.replace("-", "_").replace(".", "_") for a in ARCH_IDS}
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _MODULE_OF:
+        raise KeyError(f"unknown arch {arch!r}; known: {list(ARCH_IDS)}")
+    mod = importlib.import_module(f"repro.configs.{_MODULE_OF[arch]}")
+    return mod.CONFIG
+
+
+def all_cells():
+    """Yield (arch, shape, runs, reason) for the 10 x 4 dry-run matrix."""
+    for a in ARCH_IDS:
+        cfg = get_config(a)
+        for shape in LM_SHAPES:
+            runs, reason = shape_applicable(cfg, shape)
+            yield a, shape, runs, reason
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    B, S = shape.global_batch, shape.seq_len
+    tok = jnp.int32
+    if shape.kind == "train":
+        specs = {"tokens": jax.ShapeDtypeStruct((B, S), tok)}
+        if cfg.encdec:
+            specs["enc_frames"] = jax.ShapeDtypeStruct(
+                (B, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
+        return specs
+    if shape.kind == "prefill":
+        specs = {"tokens": jax.ShapeDtypeStruct((B, S), tok)}
+        if cfg.encdec:
+            specs["enc_frames"] = jax.ShapeDtypeStruct(
+                (B, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
+        return specs
+    # decode: one new token against a cache of S positions
+    return {"tokens": jax.ShapeDtypeStruct((B, 1), tok)}

@@ -1,0 +1,16 @@
+"""EHL* core — the paper's contribution.
+
+Offline: Scene -> visibility graph -> hub labels -> EHL grid index ->
+EHL* budgeted compression (Algorithm 1).  Online: Eq. 1-3 query processing
+(scalar reference here; batched JAX/Pallas engine in ``repro.core.packed`` +
+``repro.kernels``).
+"""
+
+from .geometry import Scene, edist, visible, visible_batch  # noqa: F401
+from .visgraph import VisGraph, build_visgraph, astar       # noqa: F401
+from .hublabel import HubLabels, build_hub_labels           # noqa: F401
+from .grid import EHLIndex, Region, build_ehl, LABEL_BYTES  # noqa: F401
+from .compression import (compress, compress_to_fraction,   # noqa: F401
+                          CompressionStats, jaccard)
+from .query import query, query_distance, path_length       # noqa: F401
+from . import maps, workload                                # noqa: F401

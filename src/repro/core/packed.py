@@ -1,0 +1,258 @@
+"""Dense padded tensor form of an EHL/EHL* index — the TPU-resident artifact.
+
+The host-side index (``repro.core.grid``) stores ragged per-region label
+lists.  The online engine needs contiguous, gatherable tensors:
+
+* ``hub_ids / via_ids / via_xy / via_d``: ``[R, L]`` region-major label slabs,
+  sorted by hub id inside each region and padded to ``L = Lmax`` (rounded up
+  to a multiple of ``lane``) with a sentinel hub — EHL*'s memory budget
+  directly caps ``Lmax`` and hence the padding waste, which is exactly why
+  the compression phase matters on TPU.
+* ``edges_*``: flat obstacle-edge tensors for the query-time visibility
+  predicate (strict proper-crossing semantics; see DESIGN.md on the
+  measure-zero deviation from the exact host predicate).
+* ``mapper``: cell -> region row, so point location stays O(1).
+
+Everything is float32/int32; the host oracle is float64 — tests compare with
+~1e-5 tolerances.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from .grid import EHLIndex
+
+HUB_PAD = np.int32(2 ** 30)     # sorts after every real hub id
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PackedIndex:
+    """Pytree of device arrays (static geometry in ``aux``)."""
+
+    hub_ids: jnp.ndarray    # [R, L] int32, HUB_PAD padded, sorted per row
+    via_xy: jnp.ndarray     # [R, L, 2] float32
+    via_d: jnp.ndarray      # [R, L] float32 (+inf on pads)
+    via_ids: jnp.ndarray    # [R, L] int32 (-1 pads) — for path unwinding
+    mapper: jnp.ndarray     # [C] int32 cell -> region row
+    edges_a: jnp.ndarray    # [E, 2] float32 (repeat-padded)
+    edges_b: jnp.ndarray    # [E, 2] float32
+    # static metadata
+    nx: int
+    ny: int
+    cell_size: float
+    width: float
+    height: float
+
+    # -- pytree protocol ----------------------------------------------------
+    def tree_flatten(self):
+        children = (self.hub_ids, self.via_xy, self.via_d, self.via_ids,
+                    self.mapper, self.edges_a, self.edges_b)
+        aux = (self.nx, self.ny, self.cell_size, self.width, self.height)
+        return children, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+    # -- properties ----------------------------------------------------------
+    @property
+    def num_regions(self) -> int:
+        return self.hub_ids.shape[0]
+
+    @property
+    def label_width(self) -> int:
+        return self.hub_ids.shape[1]
+
+    @property
+    def num_edges(self) -> int:
+        return self.edges_a.shape[0]
+
+    def device_bytes(self) -> int:
+        return sum(np.prod(a.shape) * a.dtype.itemsize for a in
+                   (self.hub_ids, self.via_xy, self.via_d, self.via_ids,
+                    self.mapper, self.edges_a, self.edges_b))
+
+
+def pack_index(index: EHLIndex, lane: int = 128,
+               region_pad_multiple: int = 1) -> PackedIndex:
+    """Freeze a (possibly compressed) host index into dense device tensors."""
+    live = sorted(index.regions.keys())
+    row_of = {rid: i for i, rid in enumerate(live)}
+    R = _round_up(len(live), region_pad_multiple)
+
+    packs = [index.pack_region(index.regions[rid]) for rid in live]
+    Lmax = max((len(p["hubs"]) for p in packs), default=1)
+    L = _round_up(max(Lmax, 1), lane)
+
+    hub_ids = np.full((R, L), HUB_PAD, dtype=np.int32)
+    via_xy = np.zeros((R, L, 2), dtype=np.float32)
+    via_d = np.full((R, L), np.inf, dtype=np.float32)
+    via_ids = np.full((R, L), -1, dtype=np.int32)
+    for i, p in enumerate(packs):
+        k = len(p["hubs"])
+        hub_ids[i, :k] = p["hubs"]
+        via_xy[i, :k] = p["via_xy"]
+        via_d[i, :k] = p["d"]
+        via_ids[i, :k] = p["vias"]
+
+    mapper = np.zeros(index.mapper.size, dtype=np.int32)
+    for ci, rid in enumerate(index.mapper):
+        mapper[ci] = row_of[int(rid)]
+
+    E = index.scene.edges.shape[0]
+    Ep = _round_up(max(E, 1), lane)
+    ea = np.zeros((Ep, 2), dtype=np.float32)
+    eb = np.zeros((Ep, 2), dtype=np.float32)
+    if E:
+        ea[:E] = index.scene.edges[:, 0]
+        eb[:E] = index.scene.edges[:, 1]
+        ea[E:] = index.scene.edges[0, 0]   # repeat-pad: degenerate repeats
+        eb[E:] = index.scene.edges[0, 1]   # never change the OR-reduction
+    return PackedIndex(
+        hub_ids=jnp.asarray(hub_ids), via_xy=jnp.asarray(via_xy),
+        via_d=jnp.asarray(via_d), via_ids=jnp.asarray(via_ids),
+        mapper=jnp.asarray(mapper), edges_a=jnp.asarray(ea),
+        edges_b=jnp.asarray(eb), nx=index.nx, ny=index.ny,
+        cell_size=float(index.cell_size), width=float(index.scene.width),
+        height=float(index.scene.height))
+
+
+def narrow_view(pk: PackedIndex, width: int) -> tuple[PackedIndex, jnp.ndarray]:
+    """Width-bucketed view: the first ``width`` label slots of every region.
+
+    Beyond-paper optimization (EXPERIMENTS.md §Perf iteration D): global
+    padding is governed by the single largest merged region, so most queries
+    pay O(Lmax^2) join + O(Lmax*E) visibility for labels that are padding.
+    Queries whose BOTH endpoint regions hold <= width labels are answered
+    exactly by this truncated view; the returned [R] mask says which regions
+    qualify.  Routing happens in the serving engine / query_batch_bucketed.
+    """
+    ok = jnp.asarray((np.asarray(pk.hub_ids) != HUB_PAD).sum(1) <= width)
+    nv = PackedIndex(
+        hub_ids=pk.hub_ids[:, :width], via_xy=pk.via_xy[:, :width],
+        via_d=pk.via_d[:, :width], via_ids=pk.via_ids[:, :width],
+        mapper=pk.mapper, edges_a=pk.edges_a, edges_b=pk.edges_b,
+        nx=pk.nx, ny=pk.ny, cell_size=pk.cell_size, width=pk.width,
+        height=pk.height)
+    return nv, ok
+
+
+def query_batch_bucketed(pk: PackedIndex, nv: PackedIndex, ok: jnp.ndarray,
+                         s: jnp.ndarray, t: jnp.ndarray,
+                         use_kernels: bool = False) -> jnp.ndarray:
+    """Two-tier routing: narrow view where both regions fit, full otherwise.
+
+    Shapes stay static (both paths run over the full batch with masking), so
+    on TPU this trades a cheap narrow pass + a masked wide pass; the wide
+    pass only pays for the (rare) oversized-region queries when batches are
+    region-sorted upstream (PathServer does this).
+    """
+    rs = locate_regions(pk, s)
+    rt = locate_regions(pk, t)
+    fast = ok[rs] & ok[rt]
+    d_narrow = query_batch(nv, s, t, use_kernels=use_kernels)
+    d_full = query_batch(pk, s, t, use_kernels=use_kernels)
+    return jnp.where(fast, d_narrow, d_full)
+
+
+# ---------------------------------------------------------------------------
+# batched query engine (pure jnp; kernels plug in via repro.kernels.ops)
+# ---------------------------------------------------------------------------
+
+def locate_regions(idx: PackedIndex, pts: jnp.ndarray) -> jnp.ndarray:
+    """[B] region rows for query points (floor-div + mapper, O(1))."""
+    ix = jnp.clip((pts[:, 0] / idx.cell_size).astype(jnp.int32), 0, idx.nx - 1)
+    iy = jnp.clip((pts[:, 1] / idx.cell_size).astype(jnp.int32), 0, idx.ny - 1)
+    return idx.mapper[iy * idx.nx + ix]
+
+
+@partial(jax.jit, static_argnames=("use_kernels",))
+def query_batch(idx: PackedIndex, s: jnp.ndarray, t: jnp.ndarray,
+                use_kernels: bool = False) -> jnp.ndarray:
+    """Batched Eq. 1-3: shortest distances for query pairs [B,2]x[B,2].
+
+    use_kernels=True routes visibility + join through the Pallas kernels
+    (``repro.kernels.ops``); False uses their jnp references — identical
+    semantics, asserted by tests.
+    """
+    from repro.kernels import ops
+
+    s = s.astype(jnp.float32)
+    t = t.astype(jnp.float32)
+    rs = locate_regions(idx, s)
+    rt = locate_regions(idx, t)
+
+    hub_s = idx.hub_ids[rs]          # [B, L]
+    hub_t = idx.hub_ids[rt]
+    xy_s = idx.via_xy[rs]            # [B, L, 2]
+    xy_t = idx.via_xy[rt]
+    d_s = idx.via_d[rs]              # [B, L]
+    d_t = idx.via_d[rt]
+
+    segvis = ops.segvis_kernel if use_kernels else ops.segvis_ref
+    join = ops.label_join_kernel if use_kernels else ops.label_join_ref
+
+    B, L = hub_s.shape
+    # visibility of each via vertex from its query point  [B, L]
+    vis_s = segvis(jnp.repeat(s, L, axis=0), xy_s.reshape(-1, 2),
+                   idx.edges_a, idx.edges_b).reshape(B, L)
+    vis_t = segvis(jnp.repeat(t, L, axis=0), xy_t.reshape(-1, 2),
+                   idx.edges_a, idx.edges_b).reshape(B, L)
+
+    inf = jnp.float32(jnp.inf)
+    vd_s = jnp.where(vis_s, jnp.linalg.norm(s[:, None] - xy_s, axis=-1) + d_s, inf)
+    vd_t = jnp.where(vis_t, jnp.linalg.norm(t[:, None] - xy_t, axis=-1) + d_t, inf)
+
+    d_label = join(hub_s, vd_s, hub_t, vd_t)            # [B]
+
+    covis = segvis(s, t, idx.edges_a, idx.edges_b)       # [B]
+    d_direct = jnp.linalg.norm(s - t, axis=-1)
+    return jnp.where(covis, d_direct, d_label)
+
+
+@partial(jax.jit, static_argnames=())
+def query_batch_argmin(idx: PackedIndex, s: jnp.ndarray, t: jnp.ndarray):
+    """Distances + winning (via_s, hub, via_t) label ids (path unwinding)."""
+    from repro.kernels import ops
+
+    s = s.astype(jnp.float32)
+    t = t.astype(jnp.float32)
+    rs = locate_regions(idx, s)
+    rt = locate_regions(idx, t)
+    hub_s, hub_t = idx.hub_ids[rs], idx.hub_ids[rt]
+    xy_s, xy_t = idx.via_xy[rs], idx.via_xy[rt]
+    d_s, d_t = idx.via_d[rs], idx.via_d[rt]
+    B, L = hub_s.shape
+    vis_s = ops.segvis_ref(jnp.repeat(s, L, axis=0), xy_s.reshape(-1, 2),
+                           idx.edges_a, idx.edges_b).reshape(B, L)
+    vis_t = ops.segvis_ref(jnp.repeat(t, L, axis=0), xy_t.reshape(-1, 2),
+                           idx.edges_a, idx.edges_b).reshape(B, L)
+    inf = jnp.float32(jnp.inf)
+    vd_s = jnp.where(vis_s, jnp.linalg.norm(s[:, None] - xy_s, axis=-1) + d_s, inf)
+    vd_t = jnp.where(vis_t, jnp.linalg.norm(t[:, None] - xy_t, axis=-1) + d_t, inf)
+
+    eq = hub_s[:, :, None] == hub_t[:, None, :]
+    tot = jnp.where(eq, vd_s[:, :, None] + vd_t[:, None, :], inf)   # [B,L,L]
+    flat = tot.reshape(B, -1)
+    k = jnp.argmin(flat, axis=1)
+    i, j = k // L, k % L
+    d_label = jnp.take_along_axis(flat, k[:, None], axis=1)[:, 0]
+
+    covis = ops.segvis_ref(s, t, idx.edges_a, idx.edges_b)
+    d = jnp.where(covis, jnp.linalg.norm(s - t, axis=-1), d_label)
+    via_s = jnp.take_along_axis(idx.via_ids[rs], i[:, None], 1)[:, 0]
+    via_t = jnp.take_along_axis(idx.via_ids[rt], j[:, None], 1)[:, 0]
+    hub = jnp.take_along_axis(hub_s, i[:, None], 1)[:, 0]
+    return d, covis, via_s, hub, via_t

@@ -1,0 +1,1 @@
+from .pipeline import CorpusReader, DataConfig, synthetic_batch  # noqa: F401

@@ -1,0 +1,67 @@
+"""Activation sharding hints — with_sharding_constraint that degrades to a
+no-op off-mesh.
+
+The model code calls ``hint(x, ("pod", "data"), None, "model")`` at the few
+places GSPMD propagation needs an anchor (post-embedding residual stream,
+unembedding logits).  When no mesh is registered (CPU unit tests) or an axis
+doesn't exist / doesn't divide, the axis is dropped — the same model code
+runs everywhere.
+"""
+
+from __future__ import annotations
+
+import contextlib
+
+import numpy as np
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_MESH = None
+
+
+def set_mesh_hints(mesh) -> None:
+    global _MESH
+    _MESH = mesh
+
+
+@contextlib.contextmanager
+def mesh_hints(mesh):
+    global _MESH
+    old = _MESH
+    _MESH = mesh
+    try:
+        yield
+    finally:
+        _MESH = old
+
+
+def current_mesh():
+    return _MESH
+
+
+def hint(x, *axes):
+    """Constrain array sharding; silently drops impossible axes."""
+    if _MESH is None:
+        return x
+    names = set(_MESH.axis_names)
+
+    def live(a):
+        if a is None:
+            return None
+        if isinstance(a, (tuple, list)):
+            t = tuple(b for b in a if b in names)
+            return t if t else None
+        return a if a in names else None
+
+    fixed = []
+    for i, a in enumerate(axes[:x.ndim]):
+        a = live(a)
+        if a is None:
+            fixed.append(None)
+            continue
+        size = int(np.prod([_MESH.shape[b] for b in
+                            (a if isinstance(a, tuple) else (a,))]))
+        fixed.append(a if x.shape[i] % size == 0 else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(_MESH, P(*fixed)))

@@ -1,0 +1,154 @@
+"""Sharding rules: parameter / activation / cache PartitionSpecs per arch.
+
+Strategy (GSPMD via jit in/out shardings):
+
+* **FSDP + TP**: every weight matrix shards its feature axes over ``model``
+  (TP) and, when the remaining axis is large, over ``data`` (ZeRO-3-style
+  FSDP) — XLA inserts the all-gathers and overlaps them with the layer scan.
+* **EP**: MoE expert tensors [L, E, d, f] shard E over ``model`` — expert
+  parallelism; the dispatch scatter lowers to an all-to-all.
+* **SP**: long-context activations shard the sequence axis over ``model``
+  (norms/MLP are pointwise over tokens; attention gathers KV per chunk).
+* **pod** joins the batch axes (pure DP across the DCN) unless pipeline
+  mode assigns it to stages (repro.distributed.pipeline).
+
+Rules are name-pattern based over the param pytree path — one table drives
+all 10 architectures.
+"""
+
+from __future__ import annotations
+
+import re
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+# (path regex, spec builder) — first match wins.  `dp` is the FSDP axis name
+# tuple, `mp` the tensor axis name.  Layer-stacked leaves have a leading L
+# axis (never sharded).
+def _rules(dp, mp):
+    return [
+        # embeddings / unembed: vocab over model, feature over data
+        (r"embed$",               P(mp, dp)),
+        (r"unembed$",             P(dp, mp)),
+        # MoE: experts over model (EP), expert-internal over data (FSDP)
+        (r"moe/router$",          P(None, dp, None)),
+        (r"moe/w[gud]$",          P(None, mp, dp, None)),
+        (r"moe/shared/w[gud]$",   P(None, dp, mp)),
+        # attention projections: [L, d, H*hd] -> feature over model
+        (r"attn/w[qkv]$",         P(None, dp, mp)),
+        (r"attn/wo$",             P(None, mp, dp)),
+        (r"xattn/w[qkv]$",        P(None, dp, mp)),
+        (r"xattn/wo$",            P(None, mp, dp)),
+        # MLA factorizations
+        (r"attn/wdq$",            P(None, dp, mp)),
+        (r"attn/wuq$",            P(None, dp, mp)),
+        (r"attn/wdkv$",           P(None, dp, mp)),
+        (r"attn/wukv$",           P(None, dp, mp)),
+        # SSM mixers
+        (r"ssm/in_proj$",         P(None, dp, mp)),
+        (r"ssm/out_proj$",        P(None, mp, dp)),
+        (r"ssm/conv_w$",          P(None, None, mp)),
+        (r"ssm/conv_b$",          P(None, mp)),
+        # dense MLPs: [L, d, ff] / [L, ff, d]
+        (r"mlp/w[gu]$",           P(None, dp, mp)),
+        (r"mlp/wd$",              P(None, mp, dp)),
+        (r"encoder/blocks/w[qkv]$", P(None, dp, mp)),
+        (r"encoder/blocks/wo$",   P(None, mp, dp)),
+        (r"encoder/blocks/mlp/w[gu]$", P(None, dp, mp)),
+        (r"encoder/blocks/mlp/wd$", P(None, mp, dp)),
+        (r"mtp_proj$",            P(dp, mp)),
+        # norms / scales / biases: replicated
+        (r".*",                   None),
+    ]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        parts.append(str(getattr(k, "key", getattr(k, "idx", k))))
+    return "/".join(parts)
+
+
+def param_specs(params, mesh, *, fsdp: bool = True):
+    """PartitionSpec pytree for a parameter pytree (pattern table above)."""
+    dp = "data" if fsdp else None
+    mp = "model"
+    rules = [(re.compile(pat), spec) for pat, spec in _rules(dp, mp)]
+
+    def assign(path, leaf):
+        s = _path_str(path)
+        for pat, spec in rules:
+            if pat.search(s):
+                if spec is None:
+                    return P()
+                # drop axes that don't divide the dim (small tensors)
+                dims = list(spec)
+                shape = leaf.shape
+                fixed = []
+                for i, ax in enumerate(dims[:len(shape)]):
+                    if ax is None:
+                        fixed.append(None)
+                        continue
+                    size = np.prod([mesh.shape[a] for a in
+                                    (ax if isinstance(ax, tuple) else (ax,))])
+                    fixed.append(ax if shape[i] % size == 0 else None)
+                return P(*fixed)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(assign, params)
+
+
+def param_shardings(params, mesh, **kw):
+    specs = param_specs(params, mesh, **kw)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_spec(mesh, seq_sharded: bool = False) -> P:
+    """[B, S] token sharding: batch over (pod+)data; seq over model (SP)."""
+    from repro.launch.mesh import data_axes
+    da = data_axes(mesh)
+    da = da[0] if len(da) == 1 else da
+    return P(da, "model" if seq_sharded else None)
+
+
+def cache_specs(cache, mesh, seq_axis_sharded: bool = True):
+    """KV-cache shardings for serving: batch over data when it divides,
+    otherwise shard the sequence axis of the KV slabs over data
+    (flash-decode layout for long-context, B=1 cells); heads/latent over
+    model when divisible."""
+    from repro.launch.mesh import data_axes
+    da = data_axes(mesh)
+    da = da[0] if len(da) == 1 else da
+    dsize = np.prod([mesh.shape[a] for a in (da if isinstance(da, tuple)
+                                             else (da,))])
+    msize = mesh.shape["model"]
+
+    def assign(path, leaf):
+        s = _path_str(path)
+        if s.endswith("step"):
+            return P()
+        shape = leaf.shape
+        if "ssm" in s:
+            # [L,B,...] state: batch over data if divisible
+            return P(None, da) if shape[1] % dsize == 0 else P()
+        # attention slabs [L, B, S, K, hd] or [L, B, S, latent]
+        b_ok = shape[1] % dsize == 0
+        spec = [None, da if b_ok else None, None]
+        if len(shape) >= 4:
+            heads_ok = shape[3] % msize == 0
+            spec.append("model" if heads_ok else None)
+            spec.extend([None] * (len(shape) - 4))
+            if not heads_ok and seq_axis_sharded and shape[2] % msize == 0:
+                spec[2] = "model"   # flash-decode: shard the sequence axis
+        else:
+            spec[2] = None
+        if not b_ok and seq_axis_sharded and spec[2] is None \
+                and shape[2] % dsize == 0:
+            spec[2] = da            # B=1 long-context: seq over data
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(assign, cache)

@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the EHL* online phase (+ jnp oracles).
+
+segvis     — batched segment-vs-obstacle visibility predicate (VPU)
+label_join — dense hub-label merge-join, Eq. 3 of the paper
+ops        — jit'd dispatch wrappers (kernel vs reference)
+ref        — pure-jnp oracles; also the non-TPU production path
+"""
+
+from . import ops, ref  # noqa: F401

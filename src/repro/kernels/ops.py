@@ -1,0 +1,36 @@
+"""Jit'd public wrappers: kernel / reference dispatch.
+
+``*_kernel`` entry points run the Pallas kernels (interpret=True off-TPU, so
+CPU CI exercises the exact kernel bodies); ``*_ref`` entry points are the
+pure-jnp oracles.  ``repro.core.packed.query_batch`` picks via its
+``use_kernels`` flag; tests assert both paths agree.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from . import ref as _ref
+from .label_join import label_join as _label_join_pallas
+from .segvis import segvis as _segvis_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# -- references (also the non-TPU production path) ---------------------------
+segvis_ref = _ref.segvis_ref
+label_join_ref = _ref.label_join_ref
+label_join_rowmin_ref = _ref.label_join_rowmin_ref
+label_join_hubdense_ref = _ref.label_join_hubdense_ref
+
+
+def segvis_kernel(p, q, ea, eb, **kw):
+    kw.setdefault("interpret", _interpret())
+    return _segvis_pallas(p, q, ea, eb, **kw)
+
+
+def label_join_kernel(hub_s, vd_s, hub_t, vd_t, **kw):
+    kw.setdefault("interpret", _interpret())
+    return _label_join_pallas(hub_s, vd_s, hub_t, vd_t, **kw)

@@ -1,0 +1,76 @@
+"""Pure-jnp oracles for the Pallas kernels (bit-for-bit semantics).
+
+Every kernel in this package has its reference here; tests sweep shapes and
+assert allclose(kernel(interpret=True), ref).  These references are also the
+production fallback on non-TPU backends.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cross3(ax, ay, bx, by, px, py):
+    """2D cross product (b - a) x (p - a), broadcasting."""
+    return (bx - ax) * (py - ay) - (by - ay) * (px - ax)
+
+
+def segvis_ref(p: jnp.ndarray, q: jnp.ndarray,
+               ea: jnp.ndarray, eb: jnp.ndarray) -> jnp.ndarray:
+    """[N] bool — True where segment p[i]->q[i] crosses NO obstacle edge.
+
+    Strict proper-crossing predicate (scale-invariant sign tests): grazing a
+    vertex or sliding along an edge counts as visible, matching ESPP
+    semantics.  p, q: [N,2]; ea, eb: [E,2].
+    """
+    px, py = p[:, 0, None], p[:, 1, None]      # [N,1]
+    qx, qy = q[:, 0, None], q[:, 1, None]
+    ax, ay = ea[None, :, 0], ea[None, :, 1]    # [1,E]
+    bx, by = eb[None, :, 0], eb[None, :, 1]
+
+    d1 = cross3(ax, ay, bx, by, px, py)        # [N,E]
+    d2 = cross3(ax, ay, bx, by, qx, qy)
+    d3 = cross3(px, py, qx, qy, ax, ay)
+    d4 = cross3(px, py, qx, qy, bx, by)
+    proper = (((d1 > 0) & (d2 < 0)) | ((d1 < 0) & (d2 > 0))) & \
+             (((d3 > 0) & (d4 < 0)) | ((d3 < 0) & (d4 > 0)))
+    return ~proper.any(axis=1)
+
+
+def label_join_rowmin_ref(hub_s: jnp.ndarray, vd_s: jnp.ndarray,
+                          hub_t: jnp.ndarray, vd_t: jnp.ndarray
+                          ) -> jnp.ndarray:
+    """[B, L] — per s-label: vd_s[i] + min over t-labels with equal hub.
+
+    The dense-TPU form of the paper's sorted merge-join (Eq. 3): hub match is
+    an L x L equality mask instead of a two-pointer scan.
+    """
+    inf = jnp.float32(jnp.inf)
+    eq = hub_s[:, :, None] == hub_t[:, None, :]           # [B,L,L]
+    matchmin = jnp.min(jnp.where(eq, vd_t[:, None, :], inf), axis=-1)
+    return vd_s + matchmin
+
+
+def label_join_ref(hub_s, vd_s, hub_t, vd_t) -> jnp.ndarray:
+    """[B] — Eq. 3 distance through the best common hub."""
+    return label_join_rowmin_ref(hub_s, vd_s, hub_t, vd_t).min(axis=-1)
+
+
+def label_join_hubdense_ref(hub_s, vd_s, hub_t, vd_t, num_hubs: int
+                            ) -> jnp.ndarray:
+    """[B] — beyond-paper 'hub-scatter' join: segmented min into dense hub
+    space then a min-plus reduction.  O(B*(L+H)) instead of O(B*L^2) and
+    shardable over the label axis (each shard scatters locally, combine with
+    a min-reduction collective).  Pads (hub id >= num_hubs) are dropped.
+    """
+    inf = jnp.float32(jnp.inf)
+    B, L = hub_s.shape
+    safe_s = jnp.clip(hub_s, 0, num_hubs - 1)
+    safe_t = jnp.clip(hub_t, 0, num_hubs - 1)
+    valid_s = hub_s < num_hubs
+    valid_t = hub_t < num_hubs
+    dense_s = jnp.full((B, num_hubs), inf).at[
+        jnp.arange(B)[:, None], safe_s].min(jnp.where(valid_s, vd_s, inf))
+    dense_t = jnp.full((B, num_hubs), inf).at[
+        jnp.arange(B)[:, None], safe_t].min(jnp.where(valid_t, vd_t, inf))
+    return (dense_s + dense_t).min(axis=-1)

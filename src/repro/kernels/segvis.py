@@ -1,0 +1,101 @@
+"""Pallas TPU kernel: batched segment-vs-obstacle visibility predicate.
+
+The query-phase hot spot of EHL on TPU (DESIGN.md §3): every query point must
+test visibility against every via vertex of its region — N = B*L segments
+against E obstacle edges, ~20 fused VPU ops per (segment, edge) pair with an
+OR-reduction over edges.
+
+TPU adaptation: segments stream through the grid's parallel axis in
+``(2, SEG_BLK)`` coordinate tiles (coords transposed so the lane dimension is
+the segment index); edges stream through an arbitrary-order reduction axis in
+``(2, EDGE_BLK)`` tiles that stay resident in VMEM while a whole segment tile
+is processed.  The [SEG_BLK, EDGE_BLK] predicate tile never leaves VMEM; only
+the per-segment OR accumulator is written back.  Arithmetic intensity per
+segment-tile pass = EDGE_BLK * ~20 flops per 16 bytes of edge traffic, so
+EDGE_BLK >= 256 keeps the kernel compute-bound (see EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+DEF_SEG_BLK = 256
+DEF_EDGE_BLK = 512
+
+
+def _segvis_kernel(p_ref, q_ref, ea_ref, eb_ref, out_ref):
+    """Grid = (num_seg_blocks, num_edge_blocks); out revisited over axis 1."""
+    j = pl.program_id(1)
+
+    px = p_ref[0, :][:, None]       # [SB,1]
+    py = p_ref[1, :][:, None]
+    qx = q_ref[0, :][:, None]
+    qy = q_ref[1, :][:, None]
+    ax = ea_ref[0, :][None, :]      # [1,EB]
+    ay = ea_ref[1, :][None, :]
+    bx = eb_ref[0, :][None, :]
+    by = eb_ref[1, :][None, :]
+
+    # d1/d2: query endpoints vs edge line; d3/d4: edge endpoints vs segment
+    d1 = (bx - ax) * (py - ay) - (by - ay) * (px - ax)
+    d2 = (bx - ax) * (qy - ay) - (by - ay) * (qx - ax)
+    d3 = (qx - px) * (ay - py) - (qy - py) * (ax - px)
+    d4 = (qx - px) * (by - py) - (qy - py) * (bx - px)
+    proper = (((d1 > 0) & (d2 < 0)) | ((d1 < 0) & (d2 > 0))) & \
+             (((d3 > 0) & (d4 < 0)) | ((d3 < 0) & (d4 > 0)))
+    blocked = proper.any(axis=1).astype(jnp.int32)      # [SB]
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[0, :] = blocked
+
+    @pl.when(j > 0)
+    def _acc():
+        out_ref[0, :] = out_ref[0, :] | blocked
+
+
+@functools.partial(jax.jit, static_argnames=("seg_blk", "edge_blk", "interpret"))
+def segvis(p: jnp.ndarray, q: jnp.ndarray, ea: jnp.ndarray, eb: jnp.ndarray,
+           *, seg_blk: int = DEF_SEG_BLK, edge_blk: int = DEF_EDGE_BLK,
+           interpret: bool = False) -> jnp.ndarray:
+    """[N] bool visibility via the Pallas kernel (pads handled here).
+
+    Padding is loss-free: padded segments are degenerate points at the
+    origin (never properly cross), padded edges are degenerate repeats of a
+    real edge (d3 = d4 = 0 -> never proper).
+    """
+    N = p.shape[0]
+    E = ea.shape[0]
+    n_pad = (-N) % seg_blk
+    e_pad = (-E) % edge_blk
+    pT = jnp.pad(p.astype(jnp.float32), ((0, n_pad), (0, 0))).T  # [2, Np]
+    qT = jnp.pad(q.astype(jnp.float32), ((0, n_pad), (0, 0))).T
+    eaT = jnp.pad(ea.astype(jnp.float32), ((0, e_pad), (0, 0)),
+                  mode="edge" if E else "constant").T             # [2, Ep]
+    ebT = jnp.pad(eb.astype(jnp.float32), ((0, e_pad), (0, 0)),
+                  mode="edge" if E else "constant").T
+    Np = N + n_pad
+    Ep = E + e_pad
+
+    out = pl.pallas_call(
+        _segvis_kernel,
+        grid=(Np // seg_blk, Ep // edge_blk),
+        in_specs=[
+            pl.BlockSpec((2, seg_blk), lambda i, j: (0, i)),
+            pl.BlockSpec((2, seg_blk), lambda i, j: (0, i)),
+            pl.BlockSpec((2, edge_blk), lambda i, j: (0, j)),
+            pl.BlockSpec((2, edge_blk), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, seg_blk), lambda i, j: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, Np), jnp.int32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(pT, qT, eaT, ebT)
+    return out[0, :N] == 0

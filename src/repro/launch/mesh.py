@@ -1,0 +1,33 @@
+"""Production mesh construction (function, not module constant — importing
+this module never touches jax device state)."""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single-pod (v5e-256) or 2x16x16 multi-pod mesh.
+
+    Axes: ``pod`` spans the DCN link between pods (data-parallel by default,
+    pipeline stages opt-in); ``data`` is batch/FSDP; ``model`` is
+    tensor/expert parallel.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(model_axis: int = 1):
+    """Tiny mesh over whatever devices exist — tests / CPU smoke runs."""
+    n = len(jax.devices())
+    model_axis = min(model_axis, n)
+    return jax.make_mesh(
+        (n // model_axis, model_axis), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def data_axes(mesh) -> tuple:
+    """The axes a global batch shards over (pod included when present)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)

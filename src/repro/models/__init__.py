@@ -1,0 +1,4 @@
+"""Model zoo: unified decoder/enc-dec covering the 10 assigned archs."""
+from .config import LM_SHAPES, MLAConfig, ModelConfig, ShapeSpec, SSMConfig  # noqa: F401
+from .transformer import (decode_step, forward, init_cache, init_params,    # noqa: F401
+                          loss_fn, encode)

@@ -1,0 +1,417 @@
+"""Model building blocks — pure JAX, parameter pytrees, no framework deps.
+
+Conventions
+-----------
+* Layer parameters are STACKED on axis 0 ([L, ...]) so the decoder runs as a
+  single ``jax.lax.scan`` over layers — one compiled block regardless of
+  depth (compile time, HLO size, and remat policy all benefit).
+* Compute dtype is configurable (bf16 on TPU, f32 for CPU smoke tests);
+  norms, softmax and rope run in f32.
+* Attention is the flash pattern in pure JAX: query chunks mapped, KV chunks
+  scanned with a running (max, denom, acc) — activation memory is
+  O(q_chunk * kv_chunk), never O(S^2), which is what makes the 32k cells
+  lowerable.  Sliding windows and logit softcap are masks/transforms on the
+  chunk tile.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, dtype, scale: float | None = None):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    scale = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def split_keys(key, n):
+    return list(jax.random.split(key, n))
+
+
+# ---------------------------------------------------------------------------
+# norms / rope
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, w, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    xf = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (xf * (1.0 + w.astype(jnp.float32))).astype(x.dtype)
+
+
+def rope_angles(positions, head_dim, theta):
+    """positions [...,S] -> cos/sin [...,S, head_dim//2] (f32)."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x [..., S, H, hd]; cos/sin [..., S, hd//2] (broadcast over heads)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate([xf1 * c - xf2 * s, xf2 * c + xf1 * s],
+                           axis=-1).astype(x.dtype)
+
+
+def apply_mrope(x, positions3, theta, sections):
+    """Qwen2-VL M-RoPE: three position streams rotate disjoint sections.
+
+    x [B,S,H,hd]; positions3 [3,B,S]; sections: per-stream pair counts
+    summing to hd//2 (text-only inputs pass identical streams).
+    """
+    half = x.shape[-1] // 2
+    assert sum(sections) == half, (sections, half)
+    cs, ss = [], []
+    off = 0
+    for i, sec in enumerate(sections):
+        freqs = theta ** (-(jnp.arange(off, off + sec, dtype=jnp.float32))
+                          / half)
+        ang = positions3[i].astype(jnp.float32)[..., None] * freqs
+        cs.append(jnp.cos(ang))
+        ss.append(jnp.sin(ang))
+        off += sec
+    cos = jnp.concatenate(cs, axis=-1)
+    sin = jnp.concatenate(ss, axis=-1)
+    return apply_rope(x, cos, sin)
+
+
+# ---------------------------------------------------------------------------
+# flash attention (pure JAX, chunked, f32 accumulators)
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def _softcap(scores, cap):
+    return jnp.tanh(scores / cap) * cap if cap > 0 else scores
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
+                    q_offset=0, q_chunk=512, kv_chunk=1024, unroll=False):
+    """q [B,Sq,H,hd], k/v [B,Skv,K,hd or vd] (GQA: H % K == 0) -> [B,Sq,H,vd].
+
+    window > 0 limits attention to the last `window` keys (sliding window);
+    q_offset shifts query positions (prefill continuation / enc-dec not
+    needed: encoder passes causal=False).  unroll=True replaces the block
+    loops with python loops — identical math and blocking, but every block
+    appears in the HLO so cost_analysis counts all flops (roofline
+    calibration; XLA counts while bodies once).
+    """
+    B, Sq, H, hd = q.shape
+    _, Skv, K, vd = v.shape
+    rep = H // K
+    scale = hd ** -0.5
+
+    qc = min(q_chunk, Sq)
+    kc = min(kv_chunk, Skv)
+    nq = -(-Sq // qc)
+    nk = -(-Skv // kc)
+    q_pad = nq * qc - Sq
+    k_pad = nk * kc - Skv
+    qp = jnp.pad(q, ((0, 0), (0, q_pad), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, k_pad), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, k_pad), (0, 0), (0, 0)))
+
+    qp = qp.reshape(B, nq, qc, H, hd)
+    kp = kp.reshape(B, nk, kc, K, hd)
+    vp = vp.reshape(B, nk, kc, K, vd)
+
+    q_pos_base = jnp.arange(qc) + q_offset
+    k_pos_base = jnp.arange(kc)
+
+    def q_block(qi, qblk):
+        # qblk [B, qc, H, hd]
+        q_pos = q_pos_base + qi * qc
+
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            ki, kblk, vblk = inp
+            k_pos = k_pos_base + ki * kc
+            # scores [B, H, qc, kc]
+            kr = jnp.repeat(kblk, rep, axis=2)
+            s = jnp.einsum("bqhd,bkhd->bhqk", qblk, kr,
+                           preferred_element_type=jnp.float32) * scale
+            s = _softcap(s, softcap)
+            # window may be a traced per-layer scalar (scan over layers);
+            # 0 means unlimited
+            w = jnp.asarray(window, jnp.int32)
+            w_eff = jnp.where(w > 0, w, jnp.int32(2 ** 30))
+            mask = (k_pos < Skv)[None, :] & jnp.ones((qc, 1), bool)
+            if causal:
+                mask &= q_pos[:, None] >= k_pos[None, :]
+            mask &= q_pos[:, None] - k_pos[None, :] < w_eff
+            s = jnp.where(mask[None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            vr = jnp.repeat(vblk, rep, axis=2)
+            pv = jnp.einsum("bhqk,bkhd->bhqd", p,
+                            vr.astype(jnp.float32),
+                            preferred_element_type=jnp.float32)
+            return (m_new, l * corr + p.sum(-1), acc * corr[..., None] + pv), None
+
+        m0 = jnp.full((B, H, qc), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, H, qc), jnp.float32)
+        a0 = jnp.zeros((B, H, qc, vd), jnp.float32)
+        if unroll:
+            carry = (m0, l0, a0)
+            for ki in range(nk):
+                carry, _ = kv_step(carry, (jnp.int32(ki), kp[:, ki], vp[:, ki]))
+            m, l, acc = carry
+        else:
+            ks = jnp.arange(nk)
+            (m, l, acc), _ = jax.lax.scan(
+                kv_step, (m0, l0, a0),
+                (ks, jnp.moveaxis(kp, 1, 0), jnp.moveaxis(vp, 1, 0)))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return jnp.moveaxis(out, 1, 2)          # [B, qc, H, vd]
+
+    if unroll:
+        outs = [q_block(jnp.int32(qi), qp[:, qi]) for qi in range(nq)]
+        out = jnp.concatenate(outs, axis=1).reshape(B, nq * qc, H, vd)[:, :Sq]
+    else:
+        outs = jax.lax.map(lambda t: q_block(t[0], t[1]),
+                           (jnp.arange(nq), jnp.moveaxis(qp, 1, 0)))
+        out = jnp.moveaxis(outs, 0, 1).reshape(B, nq * qc, H, vd)[:, :Sq]
+    return out.astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, cur_len, *, window=0, softcap=0.0):
+    """Single-position attention against a prefilled cache.
+
+    q [B,1,H,hd]; k_cache/v_cache [B,Smax,K,*]; cur_len: #valid cache slots
+    (the new token's position is cur_len-1).
+    """
+    B, Smax, K, vd = v_cache.shape
+    H = q.shape[2]
+    rep = H // K
+    scale = q.shape[-1] ** -0.5
+    kr = jnp.repeat(k_cache, rep, axis=2)
+    vr = jnp.repeat(v_cache, rep, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhk", q, kr,
+                   preferred_element_type=jnp.float32) * scale
+    s = _softcap(s, softcap)
+    pos = jnp.arange(Smax)
+    cur = jnp.asarray(cur_len).reshape(-1, 1)          # [B or 1, 1]
+    w = jnp.asarray(window, jnp.int32)
+    w_eff = jnp.where(w > 0, w, jnp.int32(2 ** 30))
+    mask = (pos[None, :] < cur) & (pos[None, :] > cur - 1 - w_eff)
+    s = jnp.where(mask[:, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhk,bkhd->bhd", p, vr.astype(jnp.float32))
+    return out[:, None].astype(q.dtype)        # [B,1,H,vd]
+
+
+# ---------------------------------------------------------------------------
+# GQA attention block
+# ---------------------------------------------------------------------------
+
+def init_gqa(cfg, key, L, dtype):
+    d, H, K, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = split_keys(key, 4)
+    p = dict(
+        wq=dense_init(ks[0], (L, d, H * hd), dtype),
+        wk=dense_init(ks[1], (L, d, K * hd), dtype),
+        wv=dense_init(ks[2], (L, d, K * hd), dtype),
+        wo=dense_init(ks[3], (L, H * hd, d), dtype),
+    )
+    if cfg.qk_norm:
+        p["q_scale"] = jnp.zeros((L, hd), dtype)
+        p["k_scale"] = jnp.zeros((L, hd), dtype)
+    return p
+
+
+def gqa_qkv(cfg, p, x, positions):
+    """x [B,S,d] -> q [B,S,H,hd], k/v [B,S,K,hd] with rope applied."""
+    B, S, _ = x.shape
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(B, S, H, hd)
+    k = (x @ p["wk"]).reshape(B, S, K, hd)
+    v = (x @ p["wv"]).reshape(B, S, K, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_scale"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_scale"], cfg.norm_eps)
+    if cfg.rope == "rope":
+        cos, sin = rope_angles(positions, hd, cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    elif cfg.rope == "mrope":
+        half = hd // 2
+        sec = (half // 4, half - half // 4 - (half - half // 4) // 2,
+               (half - half // 4) // 2)
+        pos3 = jnp.broadcast_to(positions[None], (3,) + positions.shape)
+        q = apply_mrope(q, pos3, cfg.rope_theta, sec)
+        k = apply_mrope(k, pos3, cfg.rope_theta, sec)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+def init_mla(cfg, key, L, dtype):
+    m = cfg.mla
+    d, H = cfg.d_model, cfg.n_heads
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = split_keys(key, 5)
+    return dict(
+        wdq=dense_init(ks[0], (L, d, m.q_lora_rank), dtype),
+        q_norm=jnp.zeros((L, m.q_lora_rank), dtype),
+        wuq=dense_init(ks[1], (L, m.q_lora_rank, H * qk), dtype),
+        wdkv=dense_init(ks[2], (L, d, m.kv_lora_rank + m.qk_rope_head_dim),
+                        dtype),
+        kv_norm=jnp.zeros((L, m.kv_lora_rank), dtype),
+        wukv=dense_init(ks[3], (L, m.kv_lora_rank,
+                                H * (m.qk_nope_head_dim + m.v_head_dim)),
+                        dtype),
+        wo=dense_init(ks[4], (L, H * m.v_head_dim, d), dtype),
+    )
+
+
+def mla_qkv(cfg, p, x, positions):
+    """Returns q [B,S,H,qk], k [B,S,H,qk], v [B,S,H,vd].
+
+    The compressed latent (kv_lora + rope key) is what a serving cache would
+    store — ``mla_latent`` below returns it for the decode path.
+    """
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    nope, rope_d, vd = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+
+    q = rmsnorm(x @ p["wdq"], p["q_norm"], cfg.norm_eps) @ p["wuq"]
+    q = q.reshape(B, S, H, nope + rope_d)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+
+    dkv = x @ p["wdkv"]
+    c = rmsnorm(dkv[..., :m.kv_lora_rank], p["kv_norm"], cfg.norm_eps)
+    k_rope = dkv[..., m.kv_lora_rank:].reshape(B, S, 1, rope_d)
+
+    cos, sin = rope_angles(positions, rope_d, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+    k_rope = apply_rope(k_rope, cos, sin)
+
+    ukv = (c @ p["wukv"]).reshape(B, S, H, nope + vd)
+    k_nope, v = ukv[..., :nope], ukv[..., nope:]
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, q_rope.shape)], -1)
+    q = jnp.concatenate([q_nope, q_rope], -1)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def init_mlp(cfg, key, L, dtype, d_ff=None):
+    d = cfg.d_model
+    ff = d_ff or cfg.d_ff
+    ks = split_keys(key, 3)
+    if "glu" in cfg.act:
+        return dict(wg=dense_init(ks[0], (L, d, ff), dtype),
+                    wu=dense_init(ks[1], (L, d, ff), dtype),
+                    wd=dense_init(ks[2], (L, ff, d), dtype))
+    return dict(wu=dense_init(ks[0], (L, d, ff), dtype),
+                wd=dense_init(ks[1], (L, ff, d), dtype))
+
+
+def mlp(cfg, p, x):
+    if cfg.act == "silu_glu":
+        return (jax.nn.silu(x @ p["wg"]) * (x @ p["wu"])) @ p["wd"]
+    if cfg.act == "gelu_glu":
+        return (jax.nn.gelu(x @ p["wg"]) * (x @ p["wu"])) @ p["wd"]
+    if cfg.act == "gelu":
+        return jax.nn.gelu(x @ p["wu"]) @ p["wd"]
+    if cfg.act == "relu2":
+        h = jax.nn.relu(x @ p["wu"])
+        return (h * h) @ p["wd"]
+    raise ValueError(cfg.act)
+
+
+# ---------------------------------------------------------------------------
+# MoE (capacity-based dispatch, EP-shardable over the expert axis)
+# ---------------------------------------------------------------------------
+
+def init_moe(cfg, key, L, dtype):
+    d, E, ff = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    ks = split_keys(key, 5)
+    p = dict(
+        router=dense_init(ks[0], (L, d, E), jnp.float32, scale=0.02),
+        wg=dense_init(ks[1], (L, E, d, ff), dtype),
+        wu=dense_init(ks[2], (L, E, d, ff), dtype),
+        wd=dense_init(ks[3], (L, E, ff, d), dtype),
+    )
+    if cfg.n_shared:
+        sub = jax.random.fold_in(ks[4], 1)
+        p["shared"] = init_mlp(cfg, sub, L, dtype,
+                               d_ff=cfg.moe_d_ff * cfg.n_shared)
+    return p
+
+
+def moe_block(cfg, p, x, capacity: int):
+    """x [B,S,d] -> [B,S,d].  Top-k routing with static per-expert capacity.
+
+    EP layout: the [E, C, d] expert buffer shards E over 'model' and the
+    capacity queue over the batch axes; dispatch/combine run as k scatters /
+    gathers whose [T, d] operands keep the token sharding (never the
+    [T*k, d] replicated blow-up) — XLA lowers the cross-shard scatter to
+    all-to-all traffic.  Overflowed tokens are dropped (capacity-factor
+    semantics); the always-on shared expert keeps them covered in
+    DeepSeek-style configs.
+    """
+    from repro.distributed.hints import hint
+
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.topk
+    T = B * S
+    xf = hint(x.reshape(T, d), ("pod", "data"), None)
+
+    scores = (xf.astype(jnp.float32) @ p["router"])          # [T, E]
+    if cfg.router == "sigmoid":
+        probs = jax.nn.sigmoid(scores)
+    else:
+        probs = jax.nn.softmax(scores, axis=-1)
+    gate_v, exp_i = jax.lax.top_k(probs, k)                  # [T, k]
+    gate_v = gate_v / jnp.maximum(gate_v.sum(-1, keepdims=True), 1e-9)
+
+    # slot assignment: token-major priority over the flattened [T*k] queue
+    flat_e = exp_i.reshape(-1)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)
+    pos = (jnp.cumsum(onehot, axis=0) * onehot - 1).max(-1)  # [T*k]
+    pos = pos.reshape(T, k)
+    keep = (pos >= 0) & (pos < capacity)
+    pos_c = jnp.clip(pos, 0, capacity - 1)
+
+    buf = hint(jnp.zeros((E, capacity, d), xf.dtype),
+               "model", ("pod", "data"), None)
+    for j in range(k):                                       # k sharded scatters
+        upd = jnp.where(keep[:, j, None], xf, 0)
+        buf = buf.at[exp_i[:, j], pos_c[:, j]].add(upd, mode="drop")
+
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["wg"])) * \
+        jnp.einsum("ecd,edf->ecf", buf, p["wu"])
+    h = hint(h, "model", ("pod", "data"), None)
+    out_buf = hint(jnp.einsum("ecf,efd->ecd", h, p["wd"]),
+                   "model", ("pod", "data"), None)           # [E, C, d]
+
+    y = jnp.zeros_like(xf)
+    for j in range(k):                                       # k sharded gathers
+        got = out_buf[exp_i[:, j], pos_c[:, j]]              # [T, d]
+        w = (keep[:, j] * gate_v[:, j]).astype(xf.dtype)
+        y = y + got * w[:, None]
+    y = hint(y, ("pod", "data"), None)
+
+    if cfg.n_shared:
+        y = y + mlp(cfg, p["shared"], xf)
+    return y.reshape(B, S, d)

@@ -1,0 +1,217 @@
+"""Mamba-2 SSD block (state-space duality) — chunked scan + step decode.
+
+The SSD forward is the blocked algorithm of Dao & Gu (2024): sequence split
+into chunks; *intra-chunk* terms computed as a masked attention-like matmul
+(MXU-friendly), *inter-chunk* terms carried through a ``lax.scan`` over a
+[B,H,N,P] state.  The per-token recurrence is
+
+    h_t = exp(A * dt_t) * h_{t-1} + dt_t * B_t (x) x_t
+    y_t = C_t . h_t + D * x_t
+
+``ssd_sequential`` is the O(S) reference the chunked form is tested against;
+``ssm_decode_step`` is the O(1)-per-token serving path (the whole point of
+the long_500k shape: state is [B,H,N,P], no KV cache).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, rmsnorm, split_keys
+
+
+def init_ssm(cfg, key, L, dtype):
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in = s.n_heads * s.head_dim
+    conv_ch = d_in + 2 * s.state_dim          # x, B, C share the causal conv
+    ks = split_keys(key, 4)
+    return dict(
+        in_proj=dense_init(ks[0], (L, d, 2 * d_in + 2 * s.state_dim
+                                   + s.n_heads), dtype),
+        conv_w=dense_init(ks[1], (L, s.conv_width, conv_ch), dtype,
+                          scale=s.conv_width ** -0.5),
+        conv_b=jnp.zeros((L, conv_ch), dtype),
+        A_log=jnp.zeros((L, s.n_heads), jnp.float32),
+        dt_bias=jnp.zeros((L, s.n_heads), jnp.float32),
+        D=jnp.ones((L, s.n_heads), jnp.float32),
+        norm=jnp.zeros((L, d_in), dtype),
+        out_proj=dense_init(ks[2], (L, d_in, d), dtype),
+    )
+
+
+def _split_proj(cfg, proj):
+    s = cfg.ssm
+    d_in = s.n_heads * s.head_dim
+    z = proj[..., :d_in]
+    xBC = proj[..., d_in:d_in + d_in + 2 * s.state_dim]
+    dt = proj[..., -s.n_heads:]
+    return z, xBC, dt
+
+
+def _causal_conv(xBC, w, b, state=None):
+    """Depthwise causal conv1d, width W.  xBC [B,S,C]; w [W,C]; b [C].
+
+    state (decode): [B, W-1, C] previous inputs; returns (out, new_state).
+    """
+    W = w.shape[0]
+    if state is None:
+        pad = jnp.pad(xBC, ((0, 0), (W - 1, 0), (0, 0)))
+    else:
+        pad = jnp.concatenate([state.astype(xBC.dtype), xBC], axis=1)
+    out = sum(pad[:, i:i + xBC.shape[1]] * w[i] for i in range(W)) + b
+    new_state = pad[:, -(W - 1):] if W > 1 else None
+    return jax.nn.silu(out), new_state
+
+
+def _gates(cfg, p_dt_bias, p_A_log, dt_raw):
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p_dt_bias)   # [B,S,H]
+    A = -jnp.exp(p_A_log)                                          # [H]
+    return dt, A * dt                                              # dt, logdecay
+
+
+def ssd_chunked(cfg, x, Bm, Cm, dt, log_dA, init_state=None, unroll=False):
+    """Blocked SSD scan.
+
+    x [B,S,H,P]; Bm/Cm [B,S,N]; dt/log_dA [B,S,H].
+    Returns (y [B,S,H,P], final_state [B,H,N,P]).
+
+    The intra-chunk quadratic form lives INSIDE the chunk scan, so the live
+    working set is one [B,Q,Q,H] tile (~MBs), never the [B,nc,Q,Q,H]
+    all-chunks tensor (measured 84.5 -> 15.7 GiB peak on hymba train_4k;
+    EXPERIMENTS.md §Perf iteration 1).  ``unroll`` replaces the scan with a
+    python loop for roofline calibration (cost_analysis counts while bodies
+    once).
+    """
+    s = cfg.ssm
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(s.chunk, S)
+    pad = (-S) % Q
+    if pad:
+        # identity pads: dt=0 and log_dA=0 contribute nothing to y or state
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        log_dA = jnp.pad(log_dA, ((0, 0), (0, pad), (0, 0)))
+    Sp = S + pad
+    nc = Sp // Q
+
+    xc = jnp.moveaxis(x.reshape(B, nc, Q, H, P), 1, 0)      # [nc,B,Q,H,P]
+    Bc = jnp.moveaxis(Bm.reshape(B, nc, Q, N), 1, 0)
+    Cc = jnp.moveaxis(Cm.reshape(B, nc, Q, N), 1, 0)
+    dtc = jnp.moveaxis(dt.reshape(B, nc, Q, H), 1, 0)
+    ldc = jnp.moveaxis(log_dA.reshape(B, nc, Q, H), 1, 0)
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+
+    def chunk_step(state, inp):
+        xq, Bq, Cq, dtq, ldq = inp               # one chunk: [B,Q,...]
+        cum = jnp.cumsum(ldq, axis=1)            # [B,Q,H] inclusive
+        # intra: scores[i,j] = (C_i . B_j) exp(cum_i - cum_j) dt_j, j <= i
+        scores = jnp.einsum("bqn,bkn->bqk", Cq.astype(jnp.float32),
+                            Bq.astype(jnp.float32))
+        decay = cum[:, :, None, :] - cum[:, None, :, :]     # [B,Q,Q,H]
+        w = jnp.where(causal[None, :, :, None],
+                      jnp.exp(decay) * dtq[:, None, :, :], 0.0)
+        y = jnp.einsum("bqk,bqkh,bkhp->bqhp", scores, w,
+                       xq.astype(jnp.float32))
+        # inter: contribution of the carried state
+        y = y + jnp.einsum("bqn,bqh,bhnp->bqhp", Cq.astype(jnp.float32),
+                           jnp.exp(cum), state)
+        # state update
+        tail = jnp.exp(cum[:, -1:, :] - cum) * dtq          # [B,Q,H]
+        c_state = jnp.einsum("bqh,bqn,bqhp->bhnp", tail,
+                             Bq.astype(jnp.float32), xq.astype(jnp.float32))
+        state = state * jnp.exp(cum[:, -1, :])[..., None, None] + c_state
+        return state, y
+
+    init = (jnp.zeros((B, H, N, P), jnp.float32) if init_state is None
+            else init_state.astype(jnp.float32))
+    if unroll:
+        state, ys = init, []
+        for c in range(nc):
+            state, yc = chunk_step(state, (xc[c], Bc[c], Cc[c], dtc[c],
+                                           ldc[c]))
+            ys.append(yc)
+        final_state = state
+        y = jnp.stack(ys, axis=0)
+    else:
+        final_state, y = jax.lax.scan(chunk_step, init,
+                                      (xc, Bc, Cc, dtc, ldc))
+    y = jnp.moveaxis(y, 0, 1).reshape(B, Sp, H, P)[:, :S]
+    return y.astype(x.dtype), final_state
+
+
+def ssd_sequential(cfg, x, Bm, Cm, dt, log_dA, init_state=None):
+    """O(S) per-token reference recurrence (oracle for tests)."""
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    init = (jnp.zeros((B, H, N, P), jnp.float32) if init_state is None
+            else init_state.astype(jnp.float32))
+
+    def step(h, inp):
+        xt, Bt, Ct, dtt, ldt = inp
+        h = h * jnp.exp(ldt)[..., None, None] + \
+            jnp.einsum("bh,bn,bhp->bhnp", dtt, Bt.astype(jnp.float32),
+                       xt.astype(jnp.float32))
+        y = jnp.einsum("bn,bhnp->bhp", Ct.astype(jnp.float32), h)
+        return h, y
+
+    final, ys = jax.lax.scan(
+        step, init,
+        (jnp.moveaxis(x, 1, 0), jnp.moveaxis(Bm, 1, 0),
+         jnp.moveaxis(Cm, 1, 0), jnp.moveaxis(dt, 1, 0),
+         jnp.moveaxis(log_dA, 1, 0)))
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), final
+
+
+def ssm_forward(cfg, p, x, *, chunked=True, init_state=None, unroll=False):
+    """Full mamba2 mixer: in_proj -> conv -> SSD -> gated norm -> out_proj.
+
+    x [B,S,d] -> (y [B,S,d], (conv_state, ssd_state)) for decode handoff.
+    """
+    s = cfg.ssm
+    B, S, _ = x.shape
+    z, xBC, dt_raw = _split_proj(cfg, x @ p["in_proj"])
+    xBC, conv_state = _causal_conv(xBC, p["conv_w"], p["conv_b"])
+    d_in = s.n_heads * s.head_dim
+    xs = xBC[..., :d_in].reshape(B, S, s.n_heads, s.head_dim)
+    Bm = xBC[..., d_in:d_in + s.state_dim]
+    Cm = xBC[..., d_in + s.state_dim:]
+    dt, log_dA = _gates(cfg, p["dt_bias"], p["A_log"], dt_raw)
+    if chunked:
+        y, state = ssd_chunked(cfg, xs, Bm, Cm, dt, log_dA,
+                               init_state=init_state, unroll=unroll)
+    else:
+        y, state = ssd_sequential(cfg, xs, Bm, Cm, dt, log_dA,
+                                  init_state=init_state)
+    y = y + (p["D"][None, None, :, None] * xs.astype(jnp.float32)
+             ).astype(y.dtype)
+    y = y.reshape(B, S, d_in) * jax.nn.silu(z)
+    y = rmsnorm(y, p["norm"], cfg.norm_eps)
+    return y @ p["out_proj"], (conv_state, state)
+
+
+def ssm_decode_step(cfg, p, x, conv_state, ssd_state):
+    """One-token step.  x [B,1,d]; states from prefill.  O(1) in seq len."""
+    s = cfg.ssm
+    B = x.shape[0]
+    z, xBC, dt_raw = _split_proj(cfg, x @ p["in_proj"])
+    xBC, conv_state = _causal_conv(xBC, p["conv_w"], p["conv_b"],
+                                   state=conv_state)
+    d_in = s.n_heads * s.head_dim
+    xs = xBC[..., :d_in].reshape(B, 1, s.n_heads, s.head_dim)[:, 0]
+    Bm = xBC[:, 0, d_in:d_in + s.state_dim]
+    Cm = xBC[:, 0, d_in + s.state_dim:]
+    dt, log_dA = _gates(cfg, p["dt_bias"], p["A_log"], dt_raw[:, 0])
+
+    h = ssd_state * jnp.exp(log_dA)[..., None, None] + \
+        jnp.einsum("bh,bn,bhp->bhnp", dt, Bm.astype(jnp.float32),
+                   xs.astype(jnp.float32))
+    y = jnp.einsum("bn,bhnp->bhp", Cm.astype(jnp.float32), h)
+    y = y + p["D"][None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(B, 1, d_in).astype(x.dtype) * jax.nn.silu(z)
+    y = rmsnorm(y, p["norm"], cfg.norm_eps)
+    return y @ p["out_proj"], conv_state, h

@@ -1,0 +1,598 @@
+"""Unified decoder LM + enc-dec — one code path for all 10 architectures.
+
+Layer stack layout:
+
+* ``dense_blocks`` — the leading ``n_dense_layers`` blocks (DeepSeek's first
+  3 layers are dense even in MoE configs), unrolled.
+* ``blocks`` — the remaining homogeneous blocks, parameters stacked on axis 0
+  and executed with ``jax.lax.scan`` (+ optional per-block remat).  Per-layer
+  heterogeneity (gemma's local/global alternation) rides along as a traced
+  ``windows[L]`` vector, not as separate code paths.
+* families: dense/moe/vlm -> attention blocks; ssm -> mamba2 mixer blocks;
+  hybrid -> parallel attention + mamba2 heads sharing the block input
+  (Hymba); audio -> whisper-style encoder + cross-attention decoder.
+
+Public entry points: ``init_params``, ``forward`` (train/prefill),
+``init_cache`` + ``decode_step`` (serving), ``loss_fn``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as ll
+from . import ssm as ssm_mod
+from .config import ModelConfig
+from repro.distributed.hints import hint
+
+BATCH_AXES = ("pod", "data")
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_block_group(cfg: ModelConfig, key, L: int, dtype, moe: bool):
+    """One stacked group of L identical blocks."""
+    ks = ll.split_keys(key, 6)
+    p = {"ln1": jnp.zeros((L, cfg.d_model), dtype),
+         "ln2": jnp.zeros((L, cfg.d_model), dtype)}
+    if cfg.attn == "gqa":
+        p["attn"] = ll.init_gqa(cfg, ks[0], L, dtype)
+    elif cfg.attn == "mla":
+        p["attn"] = ll.init_mla(cfg, ks[0], L, dtype)
+    if cfg.ssm is not None:
+        p["ssm"] = ssm_mod.init_ssm(cfg, ks[1], L, dtype)
+    if moe:
+        p["moe"] = ll.init_moe(cfg, ks[2], L, dtype)
+    elif cfg.d_ff > 0:
+        p["mlp"] = ll.init_mlp(cfg, ks[2], L, dtype)
+    if cfg.encdec:
+        d = cfg.d_model
+        p["xattn"] = dict(
+            wq=ll.dense_init(ks[3], (L, d, cfg.n_heads * cfg.head_dim), dtype),
+            wk=ll.dense_init(ks[4], (L, d, cfg.n_kv_heads * cfg.head_dim), dtype),
+            wv=ll.dense_init(ks[5], (L, d, cfg.n_kv_heads * cfg.head_dim), dtype),
+            wo=ll.dense_init(jax.random.fold_in(ks[3], 7),
+                             (L, cfg.n_heads * cfg.head_dim, d), dtype),
+        )
+        p["lnx"] = jnp.zeros((L, d), dtype)
+    return p
+
+
+def init_params(cfg: ModelConfig, key, dtype=jnp.bfloat16):
+    ks = ll.split_keys(key, 8)
+    params = {
+        "embed": ll.dense_init(ks[0], (cfg.vocab, cfg.d_model), dtype,
+                               scale=1.0),
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+    }
+    n_moe = cfg.n_layers - cfg.n_dense_layers if cfg.moe else 0
+    n_plain = cfg.n_layers - n_moe
+    if cfg.moe:
+        if n_plain:
+            params["dense_blocks"] = _init_block_group(
+                cfg, ks[1], n_plain, dtype, moe=False)
+        params["blocks"] = _init_block_group(cfg, ks[2], n_moe, dtype, moe=True)
+    else:
+        params["blocks"] = _init_block_group(
+            cfg, ks[2], cfg.n_layers, dtype, moe=False)
+    if not cfg.tie_embeddings:
+        params["unembed"] = ll.dense_init(ks[3], (cfg.d_model, cfg.vocab), dtype)
+    if cfg.mtp:
+        params["mtp_proj"] = ll.dense_init(ks[4], (2 * cfg.d_model,
+                                                   cfg.d_model), dtype)
+        params["mtp_block"] = _init_block_group(cfg, ks[5], 1, dtype, moe=False)
+    if cfg.encdec:
+        params["encoder"] = {
+            "blocks": _init_encoder_blocks(cfg, ks[6], dtype),
+            "norm": jnp.zeros((cfg.d_model,), dtype),
+        }
+    return params
+
+
+def _init_encoder_blocks(cfg, key, dtype):
+    d = cfg.d_model
+    L = cfg.enc_layers
+    ks = ll.split_keys(key, 5)
+    return dict(
+        ln1=jnp.zeros((L, d), dtype), ln2=jnp.zeros((L, d), dtype),
+        wq=ll.dense_init(ks[0], (L, d, cfg.n_heads * cfg.head_dim), dtype),
+        wk=ll.dense_init(ks[1], (L, d, cfg.n_heads * cfg.head_dim), dtype),
+        wv=ll.dense_init(ks[2], (L, d, cfg.n_heads * cfg.head_dim), dtype),
+        wo=ll.dense_init(ks[3], (L, cfg.n_heads * cfg.head_dim, d), dtype),
+        mlp=ll.init_mlp(dataclasses.replace(cfg, act="gelu"), ks[4], L, dtype),
+    )
+
+
+def _windows(cfg: ModelConfig, L: int, offset: int = 0) -> jnp.ndarray:
+    """Per-layer sliding-window vector (0 = full attention)."""
+    return jnp.array(
+        [0 if cfg.layer_is_global(l + offset) else cfg.local_window
+         for l in range(L)], dtype=jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# blocks (shared by forward and decode)
+# ---------------------------------------------------------------------------
+
+def _attn_full(cfg, p, x, positions, window):
+    if cfg.attn == "mla":
+        q, k, v = ll.mla_qkv(cfg, p, x, positions)
+    else:
+        q, k, v = ll.gqa_qkv(cfg, p, x, positions)
+    o = ll.flash_attention(q, k, v, causal=True, window=window,
+                           softcap=cfg.softcap_attn,
+                           q_chunk=cfg.attn_q_chunk,
+                           kv_chunk=cfg.attn_kv_chunk,
+                           unroll=cfg.unroll_layers)
+    B, S = x.shape[:2]
+    return o.reshape(B, S, -1) @ p["wo"]
+
+
+def _xattn_full(cfg, p, x, enc_out):
+    B, S, _ = x.shape
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(B, S, H, hd)
+    k = (enc_out @ p["wk"]).reshape(B, enc_out.shape[1], K, hd)
+    v = (enc_out @ p["wv"]).reshape(B, enc_out.shape[1], K, hd)
+    o = ll.flash_attention(q, k, v, causal=False, window=0,
+                           q_chunk=cfg.attn_q_chunk,
+                           kv_chunk=cfg.attn_kv_chunk,
+                           unroll=cfg.unroll_layers)
+    return o.reshape(B, S, -1) @ p["wo"]
+
+
+def _block_fwd(cfg: ModelConfig, p, x, positions, window, moe: bool,
+               capacity: int, enc_out=None):
+    # NOTE: a Megatron-style sequence-parallel carry hint was measured here
+    # and REGRESSED peak memory 164->442 GiB on deepseek train_4k (XLA
+    # re-materializes the gathered activations around each attention) —
+    # recorded as a refuted hypothesis in EXPERIMENTS.md §Perf.
+    h = ll.rmsnorm(x, p["ln1"], cfg.norm_eps)
+    delta = jnp.zeros_like(x)
+    if "attn" in p:
+        delta = delta + _attn_full(cfg, p["attn"], h, positions, window)
+    if "ssm" in p:
+        d_ssm, _ = ssm_mod.ssm_forward(cfg, p["ssm"], h,
+                                       unroll=cfg.unroll_layers)
+        delta = delta + d_ssm
+    if "attn" in p and "ssm" in p:
+        delta = delta * 0.5          # hymba: mean-combine parallel heads
+    x = x + delta
+    if "xattn" in p:
+        hx = ll.rmsnorm(x, p["lnx"], cfg.norm_eps)
+        x = x + _xattn_full(cfg, p["xattn"], hx, enc_out)
+    if moe:
+        from repro.distributed.moe_ep import moe_block_ep
+        h2 = ll.rmsnorm(x, p["ln2"], cfg.norm_eps)
+        x = x + moe_block_ep(cfg, p["moe"], h2, capacity)
+    elif "mlp" in p:
+        h2 = ll.rmsnorm(x, p["ln2"], cfg.norm_eps)
+        x = x + ll.mlp(cfg, p["mlp"], h2)
+    return x
+
+
+def _remat(cfg: ModelConfig, body):
+    """Activation-checkpoint policy for the layer scan.
+
+    'full'  — save only the carry; recompute everything (min memory, but the
+              recomputed forward re-triggers every FSDP weight all-gather);
+    'dots'  — save matmul outputs (jax dots_with_no_batch_dims_saveable):
+              backward skips the matmul recompute and its weight gathers —
+              the collective-term lever for gather-bound cells (§Perf 4.4);
+    'none'  — no checkpointing.
+    """
+    if cfg.remat == "full":
+        return jax.checkpoint(body)
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            body,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return body
+
+
+def _capacity(cfg: ModelConfig, n_tokens: int) -> int:
+    if not cfg.moe:
+        return 0
+    c = int(n_tokens * cfg.topk / cfg.n_experts * cfg.capacity_factor) + 1
+    return max(8, -(-c // 8) * 8)
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def encode(cfg: ModelConfig, params, enc_frames):
+    """Whisper-style encoder over precomputed frame embeddings (stub
+    frontend per the brief: conv downsampling happens upstream)."""
+    eb = params["encoder"]["blocks"]
+    B, S, d = enc_frames.shape
+    pos = jnp.arange(S)
+    half = d // 2
+    freqs = 10000 ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    pe = jnp.concatenate([jnp.sin(pos[:, None] * freqs),
+                          jnp.cos(pos[:, None] * freqs)], axis=1)
+    x = enc_frames + pe[None].astype(enc_frames.dtype)
+
+    def enc_block(x, bp):
+        h = ll.rmsnorm(x, bp["ln1"], cfg.norm_eps)
+        H, hd = cfg.n_heads, cfg.head_dim
+        q = (h @ bp["wq"]).reshape(B, S, H, hd)
+        k = (h @ bp["wk"]).reshape(B, S, H, hd)
+        v = (h @ bp["wv"]).reshape(B, S, H, hd)
+        o = ll.flash_attention(q, k, v, causal=False, window=0,
+                               q_chunk=cfg.attn_q_chunk,
+                               kv_chunk=cfg.attn_kv_chunk,
+                               unroll=cfg.unroll_layers)
+        x = x + o.reshape(B, S, -1) @ bp["wo"]
+        h2 = ll.rmsnorm(x, bp["ln2"], cfg.norm_eps)
+        c2 = dataclasses.replace(cfg, act="gelu")
+        return x + ll.mlp(c2, bp["mlp"], h2), None
+
+    if cfg.unroll_layers:
+        for l in range(cfg.enc_layers):
+            x, _ = enc_block(x, jax.tree.map(lambda a: a[l], eb))
+    else:
+        fn = jax.checkpoint(enc_block) if cfg.remat == "full" else enc_block
+        x, _ = jax.lax.scan(fn, x, eb)
+    return ll.rmsnorm(x, params["encoder"]["norm"], cfg.norm_eps)
+
+
+def forward(cfg: ModelConfig, params, tokens, enc_frames=None,
+            positions=None, embeds=None, return_hidden=False):
+    """tokens [B,S] -> logits [B,S,V].  enc_frames for enc-dec configs;
+    ``embeds`` overrides the token embedding (VLM patch-stub path)."""
+    B, S = tokens.shape
+    x = params["embed"][tokens] if embeds is None else embeds
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    x = hint(x, BATCH_AXES, None, None)
+    positions = (jnp.broadcast_to(jnp.arange(S), (B, S))
+                 if positions is None else positions)
+    enc_out = encode(cfg, params, enc_frames) if cfg.encdec else None
+    cap = _capacity(cfg, B * S)
+
+    if "dense_blocks" in params:
+        db = params["dense_blocks"]
+        Ld = db["ln1"].shape[0]
+        for l in range(Ld):
+            bp = jax.tree.map(lambda a: a[l], db)
+            x = _block_fwd(cfg, bp, x, positions, _windows(cfg, 1, l)[0],
+                           moe=False, capacity=0, enc_out=enc_out)
+        off = Ld
+    else:
+        off = 0
+
+    blocks = params["blocks"]
+    Lm = blocks["ln1"].shape[0]
+    wins = _windows(cfg, Lm, off)
+
+    def body(x, inp):
+        bp, w = inp
+        return _block_fwd(cfg, bp, x, positions, w, moe=cfg.moe,
+                          capacity=cap, enc_out=enc_out), None
+
+    if cfg.unroll_layers:
+        bfn = _remat(cfg, body)
+        for l in range(Lm):
+            x, _ = bfn(x, (jax.tree.map(lambda a: a[l], blocks), wins[l]))
+    else:
+        x, _ = jax.lax.scan(_remat(cfg, body), x, (blocks, wins))
+
+    xn = ll.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = _unembed(cfg, params, xn)
+    return (logits, x) if return_hidden else logits
+
+
+def forward_hidden(cfg: ModelConfig, params, tokens, enc_frames=None,
+                   positions=None, embeds=None):
+    """Like ``forward`` but stops at the final-normed hidden state —
+    the memory-sane entry for chunked losses and serving prefill (no
+    [B, S, V] logits tensor is ever materialized)."""
+    _, x = forward(cfg, params, tokens, enc_frames=enc_frames,
+                   positions=positions, embeds=embeds, return_hidden=True)
+    return ll.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+
+
+def prefill(cfg: ModelConfig, params, tokens, enc_frames=None):
+    """Serving prefill: run the stack over the prompt, emit ONLY the
+    last-position logits (what a decode loop actually consumes)."""
+    h = forward_hidden(cfg, params, tokens, enc_frames=enc_frames)
+    return _unembed(cfg, params, h[:, -1:])
+
+
+CE_CHUNK = 512   # default; cfg.ce_chunk overrides
+
+
+def _chunked_ce(cfg, params, hidden, targets, mask):
+    """Mean CE over valid targets, computed in CE_CHUNK-token slices so the
+    [B, chunk, V] logits tile (sharded over model) is the only vocab-sized
+    live tensor; jax.checkpoint recomputes it in the backward pass."""
+    B, S, d = hidden.shape
+    c = min(cfg.ce_chunk, S)
+    pad = (-S) % c
+    h = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+    t = jnp.pad(targets, ((0, 0), (0, pad)))
+    m = jnp.pad(mask, ((0, 0), (0, pad)))
+    nc = (S + pad) // c
+    h = jnp.moveaxis(h.reshape(B, nc, c, d), 1, 0)       # [nc,B,c,d]
+    t = jnp.moveaxis(t.reshape(B, nc, c), 1, 0)
+    m = jnp.moveaxis(m.reshape(B, nc, c), 1, 0)
+
+    @jax.checkpoint
+    def body(tot, inp):
+        hc, tc, mc = inp
+        logits = _unembed(cfg, params, hc)               # [B,c,V] f32
+        lp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(lp, tc[..., None], axis=-1)[..., 0]
+        return tot + jnp.sum(nll * mc), None
+
+    if cfg.unroll_layers:
+        total = jnp.zeros((), jnp.float32)
+        for i in range(nc):
+            total, _ = body(total, (h[i], t[i], m[i]))
+    else:
+        total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (h, t, m))
+    return total / jnp.maximum(mask.sum(), 1)
+
+
+def _unembed(cfg, params, x):
+    w = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    logits = (x @ w).astype(jnp.float32)
+    if cfg.softcap_logits > 0:
+        logits = jnp.tanh(logits / cfg.softcap_logits) * cfg.softcap_logits
+    return hint(logits, BATCH_AXES, None, "model")
+
+
+def mtp_logits(cfg: ModelConfig, params, hidden, tokens):
+    """DeepSeek MTP head: depth-1 extra block predicting token t+2 from
+    [h_t ; emb(t+1)] — returns logits aligned to targets shifted by 2."""
+    B, S = tokens.shape
+    emb_next = params["embed"][tokens[:, 1:]]              # [B,S-1,d]
+    h = jnp.concatenate([hidden[:, :-1], emb_next], axis=-1) @ params["mtp_proj"]
+    bp = jax.tree.map(lambda a: a[0], params["mtp_block"])
+    pos = jnp.broadcast_to(jnp.arange(S - 1), (B, S - 1))
+    h = _block_fwd(cfg, bp, h, pos, jnp.int32(0), moe=False, capacity=0)
+    return _unembed(cfg, params, ll.rmsnorm(h, params["final_norm"],
+                                            cfg.norm_eps))
+
+
+def loss_fn(cfg: ModelConfig, params, tokens, enc_frames=None,
+            mtp_weight: float = 0.3):
+    """Next-token CE (+ DeepSeek MTP auxiliary loss when configured).
+
+    Uses the chunked CE (see ``_chunked_ce``) — the full [B,S,V] logits
+    tensor is never materialized, which is what keeps the 4k x 256 train
+    cells inside per-device HBM at 32k..262k vocab sizes.
+    """
+    _, hidden = forward(cfg, params, tokens, enc_frames=enc_frames,
+                        return_hidden=True)
+    hn = ll.rmsnorm(hidden, params["final_norm"], cfg.norm_eps)
+    B, S = tokens.shape
+    tgt = tokens[:, 1:]
+    mask = jnp.ones_like(tgt, jnp.float32)
+    loss = _chunked_ce(cfg, params, hn[:, :-1], tgt, mask)
+    if cfg.mtp:
+        emb_next = params["embed"][tokens[:, 1:]]
+        h2 = jnp.concatenate([hidden[:, :-1], emb_next], axis=-1) \
+            @ params["mtp_proj"]
+        bp = jax.tree.map(lambda a: a[0], params["mtp_block"])
+        pos = jnp.broadcast_to(jnp.arange(S - 1), (B, S - 1))
+        h2 = _block_fwd(cfg, bp, h2, pos, jnp.int32(0), moe=False, capacity=0)
+        h2 = ll.rmsnorm(h2, params["final_norm"], cfg.norm_eps)
+        tgt2 = tokens[:, 2:]
+        m2 = jnp.ones_like(tgt2, jnp.float32)
+        loss = loss + mtp_weight * _chunked_ce(cfg, params, h2[:, :-1],
+                                               tgt2, m2)
+    return loss
+
+
+# ---------------------------------------------------------------------------
+# decode (serving)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16,
+               enc_out=None, params=None):
+    """Stacked per-layer cache pytree sized for ``max_len`` positions."""
+    n_moe = cfg.n_layers - cfg.n_dense_layers if cfg.moe else 0
+    n_plain = cfg.n_layers - n_moe
+
+    def attn_cache(L):
+        if cfg.attn == "mla":
+            m = cfg.mla
+            return dict(
+                c=jnp.zeros((L, batch, max_len, m.kv_lora_rank), dtype),
+                k_rope=jnp.zeros((L, batch, max_len, m.qk_rope_head_dim),
+                                 dtype))
+        return dict(
+            k=jnp.zeros((L, batch, max_len, cfg.n_kv_heads, cfg.head_dim),
+                        dtype),
+            v=jnp.zeros((L, batch, max_len, cfg.n_kv_heads, cfg.head_dim),
+                        dtype))
+
+    def ssm_cache(L):
+        s = cfg.ssm
+        conv_ch = s.n_heads * s.head_dim + 2 * s.state_dim
+        return dict(
+            conv=jnp.zeros((L, batch, s.conv_width - 1, conv_ch), dtype),
+            state=jnp.zeros((L, batch, s.n_heads, s.state_dim, s.head_dim),
+                            jnp.float32))
+
+    def group_cache(L):
+        c = {}
+        if cfg.attn != "none":
+            c["attn"] = attn_cache(L)
+        if cfg.ssm is not None:
+            c["ssm"] = ssm_cache(L)
+        if cfg.encdec:
+            assert enc_out is not None and params is not None
+            eb = params["blocks"]["xattn"]
+            Se = enc_out.shape[1]
+            k = jnp.einsum("bsd,ldk->lbsk", enc_out, eb["wk"])
+            v = jnp.einsum("bsd,ldk->lbsk", enc_out, eb["wv"])
+            K, hd = cfg.n_kv_heads, cfg.head_dim
+            c["xk"] = k.reshape(L, batch, Se, K, hd)
+            c["xv"] = v.reshape(L, batch, Se, K, hd)
+        return c
+
+    cache = {"step": jnp.zeros((), jnp.int32)}
+    if n_plain and cfg.moe:
+        cache["dense"] = group_cache(n_plain)
+        cache["main"] = group_cache(n_moe)
+    else:
+        cache["main"] = group_cache(cfg.n_layers if not cfg.moe else n_moe)
+    return cache
+
+
+def _attn_decode(cfg, p, h, cache_l, pos, window):
+    """h [B,1,d]; cache_l holds this layer's slabs; returns (out, new cache)."""
+    from repro.distributed import hints
+    from repro.distributed.flash_decode import (
+        decode_attention_dist, seq_sharded_decode_applicable)
+
+    B = h.shape[0]
+    if cfg.attn == "mla":
+        return _mla_decode(cfg, p, h, cache_l, pos, window)
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    posv = jnp.full((B, 1), pos)
+    q, k, v = ll.gqa_qkv(cfg, p, h, posv)
+    Smax = cache_l["k"].shape[1]
+    if seq_sharded_decode_applicable(hints.current_mesh(), B, Smax, K):
+        o, kc, vc = decode_attention_dist(
+            q, cache_l["k"], cache_l["v"], k, v, pos,
+            window=window, softcap=cfg.softcap_attn)
+        return o.reshape(B, 1, -1) @ p["wo"], dict(k=kc, v=vc)
+    kc = jax.lax.dynamic_update_slice_in_dim(cache_l["k"], k, pos, axis=1)
+    vc = jax.lax.dynamic_update_slice_in_dim(cache_l["v"], v, pos, axis=1)
+    o = ll.decode_attention(q, kc, vc, pos + 1, window=window,
+                            softcap=cfg.softcap_attn)
+    return o.reshape(B, 1, -1) @ p["wo"], dict(k=kc, v=vc)
+
+
+def _mla_decode(cfg, p, h, cache_l, pos, window):
+    """Absorbed-matrix MLA decode: attention runs in the latent space, the
+    cache stores only (c, k_rope) — the MLA serving memory win."""
+    m = cfg.mla
+    B = h.shape[0]
+    H = cfg.n_heads
+    nope, rd, vd = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+    posv = jnp.full((B, 1), pos)
+
+    q = ll.rmsnorm(h @ p["wdq"], p["q_norm"], cfg.norm_eps) @ p["wuq"]
+    q = q.reshape(B, 1, H, nope + rd)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    cos, sin = ll.rope_angles(posv, rd, cfg.rope_theta)
+    q_rope = ll.apply_rope(q_rope, cos, sin)
+
+    dkv = h @ p["wdkv"]
+    c_new = ll.rmsnorm(dkv[..., :m.kv_lora_rank], p["kv_norm"], cfg.norm_eps)
+    k_rope_new = ll.apply_rope(
+        dkv[..., m.kv_lora_rank:].reshape(B, 1, 1, rd), cos, sin
+    ).reshape(B, 1, rd)
+
+    cc = jax.lax.dynamic_update_slice_in_dim(cache_l["c"], c_new, pos, axis=1)
+    kr = jax.lax.dynamic_update_slice_in_dim(cache_l["k_rope"], k_rope_new,
+                                             pos, axis=1)
+
+    wukv = p["wukv"].reshape(m.kv_lora_rank, H, nope + vd)
+    wuk, wuv = wukv[..., :nope], wukv[..., nope:]
+    q_eff = jnp.einsum("bqhn,khn->bqhk", q_nope, wuk)       # [B,1,H,kvlora]
+    s = (jnp.einsum("bqhk,bsk->bhs", q_eff.astype(jnp.float32),
+                    cc.astype(jnp.float32))
+         + jnp.einsum("bqhr,bsr->bhs", q_rope.astype(jnp.float32),
+                      kr.astype(jnp.float32))) * (nope + rd) ** -0.5
+    Smax = cc.shape[1]
+    posi = jnp.arange(Smax)
+    s = jnp.where((posi <= pos)[None, None, :], s, ll.NEG_INF)
+    pweights = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bhs,bsk->bhk", pweights, cc.astype(jnp.float32))
+    o = jnp.einsum("bhk,khv->bhv", ctx, wuv.astype(jnp.float32))
+    out = o.reshape(B, 1, H * vd).astype(h.dtype) @ p["wo"]
+    return out, dict(c=cc, k_rope=kr)
+
+
+def _block_decode(cfg, p, cache_l, x, pos, window):
+    h = ll.rmsnorm(x, p["ln1"], cfg.norm_eps)
+    new_cache = dict(cache_l)
+    delta = jnp.zeros_like(x)
+    if "attn" in p:
+        o, new_cache["attn"] = _attn_decode(cfg, p["attn"], h,
+                                            cache_l["attn"], pos, window)
+        delta = delta + o
+    if "ssm" in p:
+        o, conv, st = ssm_mod.ssm_decode_step(cfg, p["ssm"], h,
+                                              cache_l["ssm"]["conv"],
+                                              cache_l["ssm"]["state"])
+        new_cache["ssm"] = dict(conv=conv, state=st)
+        delta = delta + o
+    if "attn" in p and "ssm" in p:
+        delta = delta * 0.5
+    x = x + delta
+    if "xattn" in p:
+        hx = ll.rmsnorm(x, p["lnx"], cfg.norm_eps)
+        B = x.shape[0]
+        H, hd = cfg.n_heads, cfg.head_dim
+        q = (hx @ p["xattn"]["wq"]).reshape(B, 1, H, hd)
+        o = ll.decode_attention(q, cache_l["xk"], cache_l["xv"],
+                                cache_l["xk"].shape[1], window=0)
+        x = x + o.reshape(B, 1, -1) @ p["xattn"]["wo"]
+    if "moe" in p:
+        h2 = ll.rmsnorm(x, p["ln2"], cfg.norm_eps)
+        x = x + ll.moe_block(cfg, p["moe"], h2, _capacity(cfg, x.shape[0]))
+    elif "mlp" in p:
+        h2 = ll.rmsnorm(x, p["ln2"], cfg.norm_eps)
+        x = x + ll.mlp(cfg, p["mlp"], h2)
+    return x, new_cache
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens):
+    """One serving step: tokens [B,1] -> (logits [B,1,V], new cache)."""
+    pos = cache["step"]
+    x = params["embed"][tokens]
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+
+    new_cache = {"step": pos + 1}
+    if "dense" in cache:
+        db = params["dense_blocks"]
+        Ld = db["ln1"].shape[0]
+        groups = []
+        for l in range(Ld):
+            bp = jax.tree.map(lambda a: a[l], db)
+            cl = jax.tree.map(lambda a: a[l], cache["dense"])
+            x, ncl = _block_decode(cfg, bp, cl, x, pos, _windows(cfg, 1, l)[0])
+            groups.append(ncl)
+        new_cache["dense"] = jax.tree.map(
+            lambda *xs: jnp.stack(xs), *groups)
+        off = Ld
+    else:
+        off = cfg.n_dense_layers if cfg.moe else 0
+
+    blocks = params["blocks"]
+    Lm = blocks["ln1"].shape[0]
+    wins = _windows(cfg, Lm, off)
+
+    def body(x, inp):
+        bp, cl, w = inp
+        x, ncl = _block_decode(cfg, bp, cl, x, pos, w)
+        return x, ncl
+
+    if cfg.unroll_layers:
+        outs = []
+        for l in range(Lm):
+            x, ncl = body(x, (jax.tree.map(lambda a: a[l], blocks),
+                              jax.tree.map(lambda a: a[l], cache["main"]),
+                              wins[l]))
+            outs.append(ncl)
+        main_cache = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+    else:
+        x, main_cache = jax.lax.scan(body, x, (blocks, cache["main"], wins))
+    new_cache["main"] = main_cache
+
+    x = ll.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return _unembed(cfg, params, x), new_cache

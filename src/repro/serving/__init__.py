@@ -1,0 +1,1 @@
+from .engine import LMServer, PathServer, ServeStats  # noqa: F401

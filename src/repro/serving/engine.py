@@ -1,0 +1,108 @@
+"""Batched request serving — the paper's online phase as a production loop.
+
+``PathServer`` fronts the EHL* packed index: requests accumulate into
+fixed-size batches (padding with the last request keeps shapes static, so
+the jitted kernel never recompiles), are answered with the batched Eq. 1-3
+engine, and throughput/latency stats are collected per batch.  On a mesh,
+the query batch shards over the data axes and the index is replicated (or
+region-sharded for indexes beyond single-device HBM — the EHL* budget knob
+is what keeps the replicated fast path viable, see DESIGN.md).
+
+``LMServer`` does the same for LM decode against a prefilled cache — shared
+batching/stats machinery, per the framework design.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.packed import PackedIndex, query_batch
+
+
+@dataclasses.dataclass
+class ServeStats:
+    batches: int = 0
+    queries: int = 0
+    seconds: float = 0.0
+
+    @property
+    def us_per_query(self) -> float:
+        return 1e6 * self.seconds / max(1, self.queries)
+
+    @property
+    def qps(self) -> float:
+        return self.queries / max(1e-9, self.seconds)
+
+
+class PathServer:
+    """Fixed-batch ESPP query server over a packed EHL* index."""
+
+    def __init__(self, index: PackedIndex, batch_size: int = 256,
+                 use_kernels: bool = False, mesh=None, batch_sharding=None):
+        self.index = index
+        self.batch_size = batch_size
+        self.use_kernels = use_kernels
+        self.stats = ServeStats()
+        self._sharding = batch_sharding
+        self._fn = jax.jit(
+            lambda idx, s, t: query_batch(idx, s, t,
+                                          use_kernels=use_kernels))
+
+    def warmup(self):
+        z = jnp.zeros((self.batch_size, 2), jnp.float32)
+        self._fn(self.index, z, z).block_until_ready()
+
+    def query(self, s: np.ndarray, t: np.ndarray) -> np.ndarray:
+        """Answer N requests (any N); pads the tail batch to a fixed shape."""
+        n = len(s)
+        out = np.empty(n, np.float32)
+        bs = self.batch_size
+        t0 = time.perf_counter()
+        for lo in range(0, n, bs):
+            hi = min(lo + bs, n)
+            sb = np.zeros((bs, 2), np.float32)
+            tb = np.zeros((bs, 2), np.float32)
+            sb[:hi - lo] = s[lo:hi]
+            tb[:hi - lo] = t[lo:hi]
+            sj, tj = jnp.asarray(sb), jnp.asarray(tb)
+            if self._sharding is not None:
+                sj = jax.device_put(sj, self._sharding)
+                tj = jax.device_put(tj, self._sharding)
+            d = self._fn(self.index, sj, tj)
+            out[lo:hi] = np.asarray(d)[:hi - lo]
+        self.stats.seconds += time.perf_counter() - t0
+        self.stats.queries += n
+        self.stats.batches += -(-n // bs)
+        return out
+
+
+class LMServer:
+    """Greedy decode server over a prefilled cache (shared stats plumbing)."""
+
+    def __init__(self, cfg, params, cache):
+        from repro.models import transformer as T
+        self.cfg = cfg
+        self.params = params
+        self.cache = cache
+        self.stats = ServeStats()
+        self._step = jax.jit(
+            lambda p, c, t: T.decode_step(cfg, p, c, t))
+
+    def generate(self, prompt_tokens: np.ndarray, n_new: int) -> np.ndarray:
+        B = prompt_tokens.shape[0]
+        tok = jnp.asarray(prompt_tokens[:, -1:])
+        out = []
+        t0 = time.perf_counter()
+        for _ in range(n_new):
+            logits, self.cache = self._step(self.params, self.cache, tok)
+            tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+            out.append(np.asarray(tok))
+        self.stats.seconds += time.perf_counter() - t0
+        self.stats.queries += B * n_new
+        return np.concatenate(out, axis=1)

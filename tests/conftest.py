@@ -1,0 +1,46 @@
+"""Shared fixtures: small scenes + prebuilt indexes reused across modules.
+
+Note: NO XLA_FLAGS device-count override here — smoke tests and benches must
+see the single real CPU device.  Only launch/dryrun.py forces 512 devices.
+"""
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def scene_s():
+    from repro.core.maps import make_map
+    return make_map("rooms-S", seed=1)
+
+
+@pytest.fixture(scope="session")
+def graph_s(scene_s):
+    from repro.core.visgraph import build_visgraph
+    return build_visgraph(scene_s)
+
+
+@pytest.fixture(scope="session")
+def hl_s(graph_s):
+    from repro.core.hublabel import build_hub_labels
+    return build_hub_labels(graph_s)
+
+
+@pytest.fixture(scope="session")
+def ehl_s(scene_s, graph_s, hl_s):
+    """Uncompressed EHL index on the small rooms map."""
+    from repro.core.grid import build_ehl
+    return build_ehl(scene_s, cell_size=2.0, graph=graph_s, hl=hl_s)
+
+
+@pytest.fixture(scope="session")
+def queries_s(scene_s, graph_s):
+    from repro.core.workload import uniform_queries
+    return uniform_queries(scene_s, graph_s, 40, seed=11)
+
+
+@pytest.fixture()
+def fresh_ehl(scene_s, graph_s, hl_s):
+    """Mutable copy-equivalent index for compression tests."""
+    from repro.core.grid import build_ehl
+    return build_ehl(scene_s, cell_size=2.0, graph=graph_s, hl=hl_s)

@@ -1,0 +1,125 @@
+"""EHL* compression (Algorithm 1): budget adherence + optimality invariance."""
+
+import numpy as np
+import pytest
+
+from repro.core.compression import (compress, compress_to_fraction, jaccard,
+                                    adjacent_regions, select_merge_target)
+from repro.core.query import query
+from repro.core.visgraph import astar
+from repro.core.workload import (cluster_queries, workload_scores,
+                                 uniform_queries)
+
+
+def test_jaccard():
+    a = np.array([1, 2, 3], dtype=np.int64)
+    b = np.array([2, 3, 4], dtype=np.int64)
+    assert jaccard(a, b) == pytest.approx(2 / 4)
+    assert jaccard(a, a) == 1.0
+    assert jaccard(np.zeros(0, np.int64), np.zeros(0, np.int64)) == 1.0
+    assert jaccard(a, np.zeros(0, np.int64)) == 0.0
+
+
+@pytest.mark.parametrize("frac", [0.6, 0.3, 0.1])
+def test_budget_satisfied(fresh_ehl, frac):
+    stats = compress_to_fraction(fresh_ehl, frac)
+    assert stats.final_bytes <= stats.budget or stats.hit_single_region
+    assert fresh_ehl.label_memory() == stats.final_bytes
+
+
+def test_optimality_preserved_across_budgets(fresh_ehl, graph_s, queries_s):
+    """The paper's core guarantee: merging never breaks optimality."""
+    refs = [astar(graph_s, s, t)[0]
+            for s, t in zip(queries_s.s[:20], queries_s.t[:20])]
+    for frac in (0.5, 0.2, 0.08):
+        compress_to_fraction(fresh_ehl, frac)
+        for (s, t), dref in zip(zip(queries_s.s[:20], queries_s.t[:20]), refs):
+            d, _ = query(fresh_ehl, s, t, want_path=False)
+            assert d == pytest.approx(dref, abs=1e-8)
+
+
+def test_merged_region_is_label_superset(fresh_ehl):
+    """Region labels must be the union of member-cell labels (correctness)."""
+    import copy
+    before = {ci: fresh_ehl.regions[int(fresh_ehl.mapper[ci])].keys.copy()
+              for ci in range(fresh_ehl.nx * fresh_ehl.ny)}
+    compress_to_fraction(fresh_ehl, 0.25)
+    for ci, keys in before.items():
+        r = fresh_ehl.regions[int(fresh_ehl.mapper[ci])]
+        assert np.isin(keys, r.keys).all()
+
+
+def test_mapper_consistency_after_compression(fresh_ehl):
+    compress_to_fraction(fresh_ehl, 0.2)
+    C = fresh_ehl.nx * fresh_ehl.ny
+    cells_seen = []
+    for rid, r in fresh_ehl.regions.items():
+        assert r.rid == rid
+        cells_seen.extend(r.cells)
+        for ci in r.cells:
+            assert int(fresh_ehl.mapper[ci]) == rid
+    assert sorted(cells_seen) == list(range(C))
+
+
+def test_regions_stay_grid_connected(fresh_ehl):
+    """Merging only adjacent regions keeps every region 4-connected."""
+    compress_to_fraction(fresh_ehl, 0.15)
+    nx = fresh_ehl.nx
+    for r in fresh_ehl.regions.values():
+        cells = set(r.cells)
+        start = next(iter(cells))
+        seen = {start}
+        stack = [start]
+        while stack:
+            c = stack.pop()
+            for nb in fresh_ehl.cell_neighbors(c):
+                if nb in cells and nb not in seen:
+                    seen.add(nb)
+                    stack.append(nb)
+        assert seen == cells, f"region {r.rid} disconnected"
+
+
+def test_compress_to_single_region_halts(fresh_ehl):
+    stats = compress(fresh_ehl, budget_bytes=0)
+    assert stats.hit_single_region
+    assert len(fresh_ehl.regions) == 1
+    # even at one region the index still answers queries (worst-case EHL*)
+
+
+def test_single_region_still_optimal(fresh_ehl, graph_s, queries_s):
+    compress(fresh_ehl, budget_bytes=0)
+    for s, t in zip(queries_s.s[:10], queries_s.t[:10]):
+        dref, _ = astar(graph_s, s, t)
+        d, _ = query(fresh_ehl, s, t, want_path=False)
+        assert d == pytest.approx(dref, abs=1e-8)
+
+
+def test_workload_aware_keeps_cluster_cells_finer(scene_s, graph_s, hl_s):
+    """Fig. 5 behaviour: hot cells end up in smaller regions."""
+    from repro.core.grid import build_ehl
+    idx_u = build_ehl(scene_s, 2.0, graph=graph_s, hl=hl_s)
+    idx_w = build_ehl(scene_s, 2.0, graph=graph_s, hl=hl_s)
+    hist = cluster_queries(scene_s, graph_s, k=2, n=150, seed=5,
+                           require_path=False)
+    scores = workload_scores(idx_w, hist)
+    compress_to_fraction(idx_u, 0.10)
+    compress_to_fraction(idx_w, 0.10, cell_scores=scores, alpha=0.2)
+
+    hot = np.nonzero(scores > 1.0)[0]
+    def mean_hot_region_size(idx):
+        return np.mean([len(idx.regions[int(idx.mapper[c])].cells) for c in hot])
+    assert mean_hot_region_size(idx_w) < mean_hot_region_size(idx_u)
+
+
+def test_workload_aware_optimality(scene_s, graph_s, hl_s):
+    from repro.core.grid import build_ehl
+    idx = build_ehl(scene_s, 2.0, graph=graph_s, hl=hl_s)
+    hist = cluster_queries(scene_s, graph_s, k=2, n=100, seed=6,
+                           require_path=False)
+    scores = workload_scores(idx, hist)
+    compress_to_fraction(idx, 0.08, cell_scores=scores, alpha=0.2)
+    ev = uniform_queries(scene_s, graph_s, 15, seed=13)
+    for s, t in zip(ev.s, ev.t):
+        dref, _ = astar(graph_s, s, t)
+        d, _ = query(idx, s, t, want_path=False)
+        assert d == pytest.approx(dref, abs=1e-8)

@@ -1,0 +1,81 @@
+"""EHL index + query engine vs the exact A* oracle (optimality)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.geometry import random_free_points, visible_batch, edist
+from repro.core.query import query, path_length
+from repro.core.visgraph import astar
+
+
+def test_ehl_distances_match_astar(ehl_s, graph_s, queries_s):
+    for s, t in zip(queries_s.s, queries_s.t):
+        dref, _ = astar(graph_s, s, t)
+        d, path = query(ehl_s, s, t)
+        assert d == pytest.approx(dref, abs=1e-8)
+        assert path_length(path) == pytest.approx(d, abs=1e-8)
+
+
+def test_path_is_obstacle_avoiding(ehl_s, queries_s):
+    scene = ehl_s.scene
+    for s, t in zip(queries_s.s[:15], queries_s.t[:15]):
+        _, path = query(ehl_s, s, t)
+        P = np.array(path[:-1])
+        Q = np.array(path[1:])
+        assert visible_batch(scene, P, Q).all()
+
+
+def test_covisible_shortcut(ehl_s):
+    s = np.array([1.0, 1.0])
+    t = np.array([2.0, 2.0])
+    d, path = query(ehl_s, s, t)
+    assert d == pytest.approx(edist(s, t))
+    assert len(path) == 2
+
+
+def test_same_point_query(ehl_s):
+    p = np.array([1.0, 1.0])
+    d, _ = query(ehl_s, p, p)
+    assert d == pytest.approx(0.0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_property_random_pairs_optimal(ehl_s, graph_s, seed):
+    """Hypothesis sweep: EHL distance == A* for random free-space pairs."""
+    rng = np.random.default_rng(seed)
+    pts = random_free_points(ehl_s.scene, 2, rng)
+    dref, _ = astar(graph_s, pts[0], pts[1])
+    d, _ = query(ehl_s, pts[0], pts[1], want_path=False)
+    if np.isfinite(dref):
+        assert d == pytest.approx(dref, abs=1e-8)
+    else:
+        assert not np.isfinite(d)
+
+
+def test_mapper_partitions_grid(ehl_s):
+    C = ehl_s.nx * ehl_s.ny
+    assert ehl_s.mapper.shape == (C,)
+    for ci in range(C):
+        rid = int(ehl_s.mapper[ci])
+        assert rid in ehl_s.regions
+        assert ci in ehl_s.regions[rid].cells
+    total = sum(len(r.cells) for r in ehl_s.regions.values())
+    assert total == C
+
+
+def test_label_memory_accounting(ehl_s):
+    from repro.core.grid import LABEL_BYTES
+    n = sum(r.n_labels for r in ehl_s.regions.values())
+    assert ehl_s.label_memory() == n * LABEL_BYTES
+    assert ehl_s.total_memory() > ehl_s.label_memory()
+
+
+def test_ehl_grid_scaling_reduces_memory(scene_s, graph_s, hl_s):
+    """EHL-2/EHL-4 behaviour: larger cells -> less memory (paper Table 5)."""
+    from repro.core.grid import build_ehl
+    m1 = build_ehl(scene_s, 2.0, graph=graph_s, hl=hl_s).label_memory()
+    m2 = build_ehl(scene_s, 4.0, graph=graph_s, hl=hl_s).label_memory()
+    m4 = build_ehl(scene_s, 8.0, graph=graph_s, hl=hl_s).label_memory()
+    assert m1 > m2 > m4

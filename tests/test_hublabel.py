@@ -1,0 +1,62 @@
+"""Hub labeling: Eq. (1) correctness, coverage, next-hop unwinding."""
+
+import numpy as np
+import pytest
+
+from repro.core.hublabel import build_hub_labels
+from repro.core.maps import make_map
+from repro.core.visgraph import build_visgraph, dijkstra
+
+
+@pytest.mark.parametrize("mapname,seed", [
+    ("rooms-S", 1), ("maze-S", 2), ("scatter-S", 3)])
+def test_hl_query_matches_dijkstra(mapname, seed):
+    scene = make_map(mapname, seed=seed)
+    g = build_visgraph(scene)
+    hl = build_hub_labels(g)
+    for s in range(0, g.num_nodes, 3):
+        dist, _ = dijkstra(g, s)
+        for t in range(g.num_nodes):
+            got = hl.query(s, t)
+            if np.isfinite(dist[t]):
+                assert got == pytest.approx(dist[t], abs=1e-9)
+            else:
+                assert not np.isfinite(got)
+
+
+def test_labels_sorted_and_self_label(graph_s, hl_s):
+    for v in range(graph_s.num_nodes):
+        hs, ds, nh = hl_s.labels[v]
+        assert (np.diff(hs) > 0).all()           # strictly sorted, unique hubs
+        k = np.searchsorted(hs, v)
+        assert hs[k] == v and ds[k] == 0.0 and nh[k] == v  # canonical self label
+
+
+def test_unwind_reconstructs_label_distance(graph_s, hl_s):
+    nodes = graph_s.nodes
+    checked = 0
+    for v in range(graph_s.num_nodes):
+        hs, ds, _ = hl_s.labels[v]
+        for h, d in zip(hs[:5], ds[:5]):
+            seq = hl_s.unwind(v, int(h))
+            assert seq[0] == v and seq[-1] == h
+            plen = sum(np.linalg.norm(nodes[a] - nodes[b])
+                       for a, b in zip(seq, seq[1:]))
+            assert plen == pytest.approx(d, abs=1e-9)
+            checked += 1
+    assert checked > 0
+
+
+def test_coverage_property(graph_s, hl_s):
+    """For every reachable pair some common hub lies ON a shortest path."""
+    for s in range(0, graph_s.num_nodes, 5):
+        dist, _ = dijkstra(graph_s, s)
+        for t in range(graph_s.num_nodes):
+            if not np.isfinite(dist[t]) or s == t:
+                continue
+            hs, ds, _ = hl_s.labels[s]
+            ht, dt, _ = hl_s.labels[t]
+            common, ia, ib = np.intersect1d(hs, ht, return_indices=True)
+            assert len(common) > 0
+            best = (ds[ia] + dt[ib]).min()
+            assert best == pytest.approx(dist[t], abs=1e-9)

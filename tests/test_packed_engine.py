@@ -1,0 +1,80 @@
+"""Batched JAX query engine vs the exact host oracle, at several budgets."""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core.compression import compress_to_fraction
+from repro.core.grid import build_ehl
+from repro.core.packed import (pack_index, query_batch, query_batch_argmin,
+                               locate_regions)
+from repro.core.query import query
+
+
+@pytest.fixture(scope="module")
+def packed_and_truth(scene_s, graph_s, hl_s, queries_s):
+    idx = build_ehl(scene_s, cell_size=2.0, graph=graph_s, hl=hl_s)
+    truth = np.array([query(idx, s, t, want_path=False)[0]
+                      for s, t in zip(queries_s.s, queries_s.t)])
+    return idx, truth
+
+
+def test_locate_regions_matches_host(packed_and_truth, queries_s):
+    idx, _ = packed_and_truth
+    pk = pack_index(idx)
+    live = sorted(idx.regions.keys())
+    row_of = {rid: i for i, rid in enumerate(live)}
+    rows = np.asarray(locate_regions(pk, jnp.asarray(queries_s.s)))
+    for p, row in zip(queries_s.s, rows):
+        assert row_of[idx.region_of_point(p).rid] == row
+
+
+@pytest.mark.parametrize("use_kernels", [False, True])
+def test_query_batch_matches_host(packed_and_truth, queries_s, use_kernels):
+    idx, truth = packed_and_truth
+    pk = pack_index(idx)
+    d = np.asarray(query_batch(pk, jnp.asarray(queries_s.s),
+                               jnp.asarray(queries_s.t),
+                               use_kernels=use_kernels))
+    np.testing.assert_allclose(d, truth, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("frac", [0.4, 0.15])
+def test_query_batch_after_compression(scene_s, graph_s, hl_s, queries_s, frac):
+    idx = build_ehl(scene_s, cell_size=2.0, graph=graph_s, hl=hl_s)
+    truth = np.array([query(idx, s, t, want_path=False)[0]
+                      for s, t in zip(queries_s.s, queries_s.t)])
+    compress_to_fraction(idx, frac)
+    pk = pack_index(idx)
+    d = np.asarray(query_batch(pk, jnp.asarray(queries_s.s),
+                               jnp.asarray(queries_s.t)))
+    np.testing.assert_allclose(d, truth, rtol=1e-4, atol=1e-4)
+
+
+def test_compression_shrinks_device_tensor(scene_s, graph_s, hl_s):
+    idx = build_ehl(scene_s, cell_size=2.0, graph=graph_s, hl=hl_s)
+    full = pack_index(idx).device_bytes()
+    compress_to_fraction(idx, 0.2)
+    small = pack_index(idx).device_bytes()
+    assert small < full
+
+
+def test_argmin_distances_match(packed_and_truth, queries_s):
+    idx, truth = packed_and_truth
+    pk = pack_index(idx)
+    d, covis, via_s, hub, via_t = query_batch_argmin(
+        pk, jnp.asarray(queries_s.s), jnp.asarray(queries_s.t))
+    np.testing.assert_allclose(np.asarray(d), truth, rtol=1e-4, atol=1e-4)
+    # winning labels must be real (not pads) for reachable non-covisible pairs
+    m = ~np.asarray(covis) & np.isfinite(truth)
+    assert (np.asarray(via_s)[m] >= 0).all()
+    assert (np.asarray(via_t)[m] >= 0).all()
+
+
+def test_packed_pytree_roundtrip(packed_and_truth):
+    import jax
+    idx, _ = packed_and_truth
+    pk = pack_index(idx)
+    leaves, treedef = jax.tree.flatten(pk)
+    pk2 = jax.tree.unflatten(treedef, leaves)
+    assert pk2.nx == pk.nx and pk2.label_width == pk.label_width

@@ -1,0 +1,61 @@
+"""Serving engine: PathServer batching/stats + LMServer decode loop."""
+
+import numpy as np
+import pytest
+
+from repro.core.compression import compress_to_fraction
+from repro.core.grid import build_ehl
+from repro.core.packed import pack_index
+from repro.core.query import query
+from repro.serving.engine import LMServer, PathServer
+
+
+@pytest.fixture(scope="module")
+def server_setup(scene_s, graph_s, hl_s, queries_s):
+    idx = build_ehl(scene_s, 2.0, graph=graph_s, hl=hl_s)
+    truth = np.array([query(idx, s, t, want_path=False)[0]
+                      for s, t in zip(queries_s.s, queries_s.t)])
+    compress_to_fraction(idx, 0.3)
+    return pack_index(idx), truth
+
+
+def test_path_server_answers_match_oracle(server_setup, queries_s):
+    pk, truth = server_setup
+    srv = PathServer(pk, batch_size=16)
+    srv.warmup()
+    d = srv.query(queries_s.s.astype(np.float32),
+                  queries_s.t.astype(np.float32))
+    np.testing.assert_allclose(d, truth, rtol=1e-4, atol=1e-4)
+
+
+def test_path_server_ragged_tail_batch(server_setup, queries_s):
+    pk, truth = server_setup
+    srv = PathServer(pk, batch_size=32)
+    n = 37                                   # not a multiple of 32
+    d = srv.query(queries_s.s[:n].astype(np.float32),
+                  queries_s.t[:n].astype(np.float32))
+    assert d.shape == (n,)
+    np.testing.assert_allclose(d, truth[:n], rtol=1e-4, atol=1e-4)
+    assert srv.stats.queries == n
+    assert srv.stats.batches == 2
+    assert srv.stats.us_per_query > 0
+
+
+def test_lm_server_greedy_decode():
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_config
+    from repro.models import transformer as T
+    cfg = get_config("tinyllama-1.1b").reduced()
+    params = T.init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
+    B, S = 2, 8
+    cache = T.init_cache(cfg, B, S + 16, dtype=jnp.float32)
+    prompt = np.array([[1, 2, 3], [4, 5, 6]], dtype=np.int32)
+    # prefill by stepping the prompt
+    srv = LMServer(cfg, params, cache)
+    for i in range(prompt.shape[1] - 1):
+        srv._step(params, srv.cache, jnp.asarray(prompt[:, i:i + 1]))
+    out = srv.generate(prompt, n_new=5)
+    assert out.shape == (B, 5)
+    assert (out >= 0).all() and (out < cfg.vocab).all()
+    assert srv.stats.queries == B * 5
