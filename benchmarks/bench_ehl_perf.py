@@ -10,7 +10,10 @@ Measured (CPU wall-clock, real executions — unlike the TPU dry-run cells):
   reproduced structurally on the batched engine);
 * **iteration B — beyond-paper hub-dense join**: scatter-min into dense hub
   space, O(L + H_vocab) per query instead of O(L^2);
-* **iteration C — batch sizing**: amortize dispatch overhead.
+* **iteration C — batch sizing**: amortize dispatch overhead;
+* **iteration D — bucketed packed layout**: width-bucketed slabs + per-
+  bucket dispatch (DESIGN.md §4) kill the global-Lmax padding in both
+  device bytes and per-query join width.
 
 Each variant also gets analytic v5e roofline terms for the kernels
 (VPU-bound predicate evaluation): see EXPERIMENTS.md §Perf.
@@ -142,28 +145,36 @@ def run(quick=False):
     for B in ((64, 1024) if not quick else (64,)):
         measure(f"iterC/EHL*-20/hubdense/B{B}", pk20, hd_fn, B)
 
-    # iteration D: bucketed padding — route queries whose regions fit a
-    # narrow view (beyond-paper; global Lmax is set by one huge region)
-    from repro.core.packed import locate_regions, narrow_view
-    for width in (128, 256):
-        nv, ok = narrow_view(pk20, width)
-        okn = np.asarray(ok)
-        rs = np.asarray(locate_regions(pk20, jnp.asarray(
-            qs.s.astype(np.float32))))
-        rt = np.asarray(locate_regions(pk20, jnp.asarray(
-            qs.t.astype(np.float32))))
-        fast_frac = float((okn[rs] & okn[rt]).mean())
-        nv_fn = _hubdense_query(idx, num_hubs=V)
-        rec_n = measure(f"iterD/EHL*-20/narrow{width}", nv, nv_fn, B0)
-        # effective us/query = fast_frac * narrow + (1-fast_frac) * full
-        full_us = next(r for r in iterations
-                       if r["tag"] == "iterB/EHL*-20/hubdense")["us_per_query"]
-        eff = fast_frac * rec_n["us_per_query"] + (1 - fast_frac) * full_us
-        rows.append(common.emit(
-            f"ehlperf/iterD/EHL*-20/bucketed{width}/effective", eff,
-            f"fast_frac={fast_frac:.2f}"))
-        iterations.append(dict(tag=f"iterD/bucketed{width}/effective",
-                               us_per_query=eff, fast_frac=fast_frac))
+    # iteration D: bucketed packed layout — per-bucket dispatch replaces
+    # global-Lmax padding (beyond-paper; Lmax is set by one huge region).
+    # Real end-to-end routing through PathServer, not an extrapolation.
+    from repro.core.packed import dispatch_buckets, pack_bucketed
+    from repro.serving.engine import PathServer
+    bx20 = pack_bucketed(idx)
+    srv = PathServer(bx20, batch_size=B0)
+    srv.warmup()
+    d_b = srv.query(qs.s.astype(np.float32), qs.t.astype(np.float32))
+    best_us = np.inf
+    for _ in range(3):
+        srv.stats.seconds = 0.0
+        srv.stats.queries = 0
+        srv.query(qs.s.astype(np.float32), qs.t.astype(np.float32))
+        best_us = min(best_us, srv.stats.us_per_query)
+    buckets = dispatch_buckets(bx20, qs.s, qs.t)
+    occ = {int(k): float((buckets == k).mean()) for k in np.unique(buckets)}
+    max_err = float(np.nanmax(np.abs(np.where(
+        np.isfinite(truth), d_b - truth, 0.0))))
+    dev_mb = bx20.device_bytes() / 1e6
+    slab_mb = pk20.device_bytes() / 1e6
+    rows.append(common.emit(
+        "ehlperf/iterD/EHL*-20/bucketed", best_us,
+        f"dev_mb={dev_mb:.1f};slab_mb={slab_mb:.1f};"
+        f"byte_ratio={slab_mb / max(dev_mb, 1e-9):.2f};"
+        f"widths={list(bx20.widths)};max_err={max_err:.2e}"))
+    iterations.append(dict(tag="iterD/EHL*-20/bucketed",
+                           us_per_query=best_us, device_mb=dev_mb,
+                           slab_mb=slab_mb, widths=list(bx20.widths),
+                           bucket_query_frac=occ, max_err=max_err))
 
     os.makedirs(OUT, exist_ok=True)
     json.dump(iterations, open(os.path.join(OUT, "ehl_perf.json"), "w"),

@@ -2,7 +2,9 @@
 
 Quantifies the figure's visual claim: with workload-aware compression the
 cells inside query clusters stay in much smaller regions than cells outside.
-Emits region-size statistics + an ASCII region map artifact.
+Emits region-size statistics + an ASCII region map artifact, plus per-bucket
+padding-waste rows for the width-bucketed device layout (DESIGN.md §4) so
+the memory win over the single global-Lmax slab is tracked in BENCH_*.json.
 """
 
 from __future__ import annotations
@@ -11,6 +13,7 @@ import os
 
 import numpy as np
 
+from repro.core.packed import pack_bucketed, slab_device_bytes, slab_label_slots
 from repro.core.workload import cluster_queries, workload_scores
 
 from . import common
@@ -59,6 +62,34 @@ def run(map_name="rooms-M", budget=0.05, clusters=(2, 4, 8), quick=False):
             f"fig5/{map_name}/Cluster-{k}", 0.0,
             f"mean_region_cells_in_cluster={mean_in:.1f};"
             f"outside={mean_out:.1f};regions={len(idx.regions)}"))
+        rows.extend(_padding_waste_rows(idx, f"fig5/{map_name}/Cluster-{k}"))
         _ascii_map(idx, os.path.join(
             ART, f"fig5_{map_name}_c{k}_regions.txt"))
+    return rows
+
+
+def _padding_waste_rows(idx, prefix: str) -> list:
+    """Device-layout padding accounting: single slab vs bucketed slabs.
+
+    The slab numbers are computed analytically (``slab_device_bytes``) —
+    materializing the global-Lmax slab just to count its padding would
+    allocate the very artifact the bucketed layout exists to avoid.
+    """
+    bx = pack_bucketed(idx)
+    slab_bytes = slab_device_bytes(idx)
+    used_p, total_p = slab_label_slots(idx)
+    used_b, total_b = bx.label_slots()
+    rows = [common.emit(
+        f"{prefix}/layout", 0.0,
+        f"slab_mb={slab_bytes / 1e6:.2f};"
+        f"bucketed_mb={bx.device_bytes() / 1e6:.2f};"
+        f"byte_ratio={slab_bytes / max(1, bx.device_bytes()):.2f};"
+        f"slab_waste={1 - used_p / max(1, total_p):.3f};"
+        f"bucketed_waste={1 - used_b / max(1, total_b):.3f}")]
+    for st in bx.bucket_stats():
+        rows.append(common.emit(
+            f"{prefix}/bucket{st['bucket']}", 0.0,
+            f"width={st['width']};regions={st['regions']};"
+            f"used={st['used_slots']};total={st['total_slots']};"
+            f"waste={st['waste']:.3f}"))
     return rows

@@ -1,8 +1,10 @@
 """End-to-end serving driver: EHL* index answering batched ESPP queries.
 
 Builds the index under a memory budget (workload-aware if --clusters > 0),
-then serves a stream of query batches through the jitted engine and reports
-throughput — the paper's online phase as a service.
+freezes it into a device layout (width-bucketed by default — DESIGN.md §4),
+then serves a stream of query batches through a pluggable query engine and
+reports throughput plus per-bucket routing stats — the paper's online phase
+as a service.
 
     PYTHONPATH=src python examples/pathfind_serve.py --budget 0.2 --clusters 2
 """
@@ -13,10 +15,13 @@ import numpy as np
 
 from repro.core import build_ehl, build_visgraph, compress_to_fraction
 from repro.core.maps import make_map
-from repro.core.packed import pack_index
+from repro.core.packed import (bucketed_device_bytes, pack_bucketed,
+                               pack_index, plan_buckets, slab_device_bytes)
+from repro.core.query import path_length
 from repro.core.workload import (cluster_queries, uniform_queries,
                                  workload_scores)
 from repro.serving.engine import PathServer
+from repro.serving.query_engine import make_engine
 
 
 def main():
@@ -26,9 +31,19 @@ def main():
     ap.add_argument("--clusters", type=int, default=0)
     ap.add_argument("--queries", type=int, default=2000)
     ap.add_argument("--batch", type=int, default=256)
+    ap.add_argument("--layout", choices=("bucketed", "slab"),
+                    default="bucketed",
+                    help="device layout: width-bucketed slabs or the single "
+                         "global-Lmax slab")
+    ap.add_argument("--backend", choices=("jnp", "pallas", "host"),
+                    default="jnp", help="query engine backend")
     ap.add_argument("--kernels", action="store_true",
-                    help="route through the Pallas kernels (interpret on CPU)")
+                    help="alias for --backend pallas (interpret on CPU)")
+    ap.add_argument("--paths", type=int, default=0,
+                    help="also extract N full paths via the batched argmin "
+                         "engine and verify their lengths")
     args = ap.parse_args()
+    backend = "pallas" if args.kernels else args.backend
 
     scene = make_map(args.map, seed=0)
     graph = build_visgraph(scene)
@@ -45,9 +60,34 @@ def main():
     print(f"index: {full_mb:.1f} MB -> {stats.final_bytes / 1e6:.1f} MB "
           f"({args.budget:.0%} budget, workload-aware={args.clusters > 0})")
 
-    pk = pack_index(index)
-    print(f"packed: {pk.num_regions} regions x {pk.label_width} labels, "
-          f"{pk.device_bytes() / 1e6:.1f} MB on device")
+    # only the layout that actually serves is materialized on device; the
+    # other side of the comparison print is computed analytically from the
+    # grid's pack metadata
+    serve_bucketed = args.layout == "bucketed" and backend != "host"
+    serve_slab = args.layout == "slab" and backend != "host"
+    pk = pack_index(index) if serve_slab else None
+    bx = pack_bucketed(index) if serve_bucketed else None
+    slab_bytes = pk.device_bytes() if pk is not None \
+        else slab_device_bytes(index)
+    bucket_bytes = bx.device_bytes() if bx is not None \
+        else bucketed_device_bytes(index)
+    counts, widths, region_bucket = plan_buckets(index)
+    print(f"slab layout:     {len(index.regions)} regions, "
+          f"{slab_bytes / 1e6:.1f} MB on device")
+    print(f"bucketed layout: widths={widths}, "
+          f"{bucket_bytes / 1e6:.1f} MB on device "
+          f"({slab_bytes / max(1, bucket_bytes):.1f}x smaller)")
+    counts = np.asarray(counts)
+    for k, w in enumerate(widths):
+        m = region_bucket == k
+        used, total = counts[m].sum(), max(1, m.sum()) * w
+        print(f"  bucket {k}: width={w:5d} regions={int(m.sum()):5d} "
+              f"waste={1 - used / total:.1%}")
+
+    if backend == "host":
+        engine = make_engine(index, backend="host")
+    else:
+        engine = make_engine(bx if serve_bucketed else pk, backend=backend)
 
     if args.clusters > 0:
         qs = cluster_queries(scene, graph, args.clusters, args.queries,
@@ -55,12 +95,28 @@ def main():
     else:
         qs = uniform_queries(scene, graph, args.queries, seed=33,
                              require_path=False)
-    srv = PathServer(pk, batch_size=args.batch, use_kernels=args.kernels)
-    srv.warmup()
+    srv = PathServer(engine, batch_size=args.batch)
+    srv.warmup(paths=args.paths > 0)
     d = srv.query(qs.s.astype(np.float32), qs.t.astype(np.float32))
     print(f"served {srv.stats.queries} queries in {srv.stats.seconds:.3f}s "
           f"-> {srv.stats.us_per_query:.1f} us/query "
-          f"({srv.stats.qps:,.0f} qps); {np.isfinite(d).sum()} reachable")
+          f"({srv.stats.qps:,.0f} qps); {np.isfinite(d).sum()} reachable "
+          f"[layout={args.layout}, backend={backend}]")
+    for k, b in sorted(srv.stats.per_bucket.items()):
+        print(f"  bucket {k}: width={b.width:5d} queries={b.queries:5d} "
+              f"batches={b.batches:3d} occupancy={b.occupancy:.1%} "
+              f"{b.us_per_query:.1f} us/query")
+
+    if args.paths > 0:
+        n = min(args.paths, len(qs.s))
+        dp, paths = srv.query_paths(qs.s[:n].astype(np.float32),
+                                    qs.t[:n].astype(np.float32),
+                                    host_index=index)
+        err = max((abs(path_length(p) - float(di))
+                   for di, p in zip(dp, paths) if np.isfinite(di)),
+                  default=0.0)
+        print(f"extracted {n} paths via batched argmin ({backend}); "
+              f"max |len(path) - d| = {err:.2e}")
 
 
 if __name__ == "__main__":

@@ -15,6 +15,11 @@ A via-label is identified by the integer key ``h * V + v`` — the distance
 and is re-attached when a region is *packed* for querying.  Regions (merged
 cell groups, EHL* §Compression) keep two sorted int64 arrays: the label keys
 and the distinct hub ids.
+
+The device layouts built from this index (single slab vs width-bucketed
+slabs, ``repro.core.packed``) and their padding trade-offs are described in
+DESIGN.md §4; :meth:`EHLIndex.packed_label_counts` is the pack metadata the
+bucketing decision is made from.
 """
 
 from __future__ import annotations
@@ -91,6 +96,13 @@ class EHLIndex:
 
     def region_of_point(self, p) -> Region:
         return self.regions[int(self.mapper[self.cell_of_point(p)])]
+
+    def packed_label_counts(self) -> np.ndarray:
+        """Per live region (rid order): packed label count — the row widths
+        the device layouts pad from (single global Lmax vs per-bucket)."""
+        live = sorted(self.regions.keys())
+        return np.array([self.regions[rid].n_labels for rid in live],
+                        dtype=np.int64)
 
     # ---------------------------------------------------------------- pack
     def pack_region(self, r: Region) -> dict:

@@ -1,17 +1,31 @@
-"""Dense padded tensor form of an EHL/EHL* index — the TPU-resident artifact.
+"""Dense tensor forms of an EHL/EHL* index — the TPU-resident artifact.
 
 The host-side index (``repro.core.grid``) stores ragged per-region label
-lists.  The online engine needs contiguous, gatherable tensors:
+lists.  The online engine needs contiguous, gatherable tensors.  Two layouts
+are provided (DESIGN.md §4):
 
-* ``hub_ids / via_ids / via_xy / via_d``: ``[R, L]`` region-major label slabs,
-  sorted by hub id inside each region and padded to ``L = Lmax`` (rounded up
-  to a multiple of ``lane``) with a sentinel hub — EHL*'s memory budget
-  directly caps ``Lmax`` and hence the padding waste, which is exactly why
-  the compression phase matters on TPU.
+* :class:`PackedIndex` — the single ``[R, Lmax]`` slab: every region padded
+  to the global maximum label count.  Simple, one jit cache entry, but one
+  oversized merged region inflates both ``device_bytes()`` and the O(L^2)
+  label join for *every* query — the padding waste EHL*'s budget is supposed
+  to eliminate.
+* :class:`BucketedIndex` — regions grouped into power-of-two width buckets
+  (multiples of ``lane``), each bucket its own dense slab, plus a
+  ``region -> (bucket, row)`` indirection behind the cell mapper.
+  ``device_bytes()`` then tracks the true EHL* budget, and queries dispatch
+  per bucket so they only pay for the label width their regions actually
+  need (``query_batch_at_bucket`` / the PathServer router).
+
+Shared across layouts:
+
 * ``edges_*``: flat obstacle-edge tensors for the query-time visibility
-  predicate (strict proper-crossing semantics; see DESIGN.md on the
+  predicate (strict proper-crossing semantics; see DESIGN.md §5 on the
   measure-zero deviation from the exact host predicate).
-* ``mapper``: cell -> region row, so point location stays O(1).
+* ``mapper``: cell -> region row (single slab) or cell -> region id
+  (bucketed), so point location stays O(1).
+* one distance/join core (:func:`_labels_to_distances`) used by every entry
+  point — plain distances and argmin (path unwinding) are the same code
+  path with a flag, for both the jnp reference and the Pallas kernels.
 
 Everything is float32/int32; the host oracle is float64 — tests compare with
 ~1e-5 tolerances.
@@ -36,10 +50,18 @@ def _round_up(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
 
 
+def bucket_width(n_labels: int, lane: int = 128) -> int:
+    """Smallest power-of-two multiple of ``lane`` holding ``n_labels``."""
+    w = lane
+    while w < n_labels:
+        w *= 2
+    return w
+
+
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class PackedIndex:
-    """Pytree of device arrays (static geometry in ``aux``)."""
+    """Single-slab layout: pytree of device arrays (static geometry in aux)."""
 
     hub_ids: jnp.ndarray    # [R, L] int32, HUB_PAD padded, sorted per row
     via_xy: jnp.ndarray     # [R, L, 2] float32
@@ -84,33 +106,135 @@ class PackedIndex:
                    (self.hub_ids, self.via_xy, self.via_d, self.via_ids,
                     self.mapper, self.edges_a, self.edges_b))
 
+    def label_slots(self) -> tuple[int, int]:
+        """(used, total) label slots — padding waste is total - used."""
+        used = int((np.asarray(self.hub_ids) != HUB_PAD).sum())
+        return used, int(np.prod(self.hub_ids.shape))
 
-def pack_index(index: EHLIndex, lane: int = 128,
-               region_pad_multiple: int = 1) -> PackedIndex:
-    """Freeze a (possibly compressed) host index into dense device tensors."""
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class BucketedIndex:
+    """Width-bucketed layout: one dense slab per power-of-two label width.
+
+    Region ``r`` lives at ``(region_bucket[r], region_row[r])``; slab ``k``
+    has shape ``[R_k, widths[k]]``.  The mapper resolves cells to region ids
+    (not rows), so point location composes with the indirection in O(1).
+    """
+
+    hub_ids: tuple          # per bucket: [R_k, W_k] int32, HUB_PAD padded
+    via_xy: tuple           # per bucket: [R_k, W_k, 2] float32
+    via_d: tuple            # per bucket: [R_k, W_k] float32 (+inf pads)
+    via_ids: tuple          # per bucket: [R_k, W_k] int32 (-1 pads)
+    mapper: jnp.ndarray     # [C] int32 cell -> region id
+    region_bucket: jnp.ndarray  # [R] int32 region id -> bucket
+    region_row: jnp.ndarray     # [R] int32 region id -> row in its slab
+    edges_a: jnp.ndarray    # [E, 2] float32 (repeat-padded)
+    edges_b: jnp.ndarray    # [E, 2] float32
+    # static metadata
+    nx: int
+    ny: int
+    cell_size: float
+    width: float
+    height: float
+    widths: tuple           # per-bucket label width, strictly increasing
+
+    # -- pytree protocol ----------------------------------------------------
+    def tree_flatten(self):
+        children = (self.hub_ids, self.via_xy, self.via_d, self.via_ids,
+                    self.mapper, self.region_bucket, self.region_row,
+                    self.edges_a, self.edges_b)
+        aux = (self.nx, self.ny, self.cell_size, self.width, self.height,
+               self.widths)
+        return children, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+    # -- properties ----------------------------------------------------------
+    @property
+    def num_buckets(self) -> int:
+        return len(self.widths)
+
+    @property
+    def num_regions(self) -> int:
+        return self.region_bucket.shape[0]
+
+    @property
+    def label_width(self) -> int:
+        """Widest bucket — what a single slab would pad everything to."""
+        return self.widths[-1] if self.widths else 0
+
+    @property
+    def num_edges(self) -> int:
+        return self.edges_a.shape[0]
+
+    def device_bytes(self) -> int:
+        slabs = sum(np.prod(a.shape) * a.dtype.itemsize
+                    for group in (self.hub_ids, self.via_xy, self.via_d,
+                                  self.via_ids)
+                    for a in group)
+        return int(slabs) + sum(np.prod(a.shape) * a.dtype.itemsize for a in
+                                (self.mapper, self.region_bucket,
+                                 self.region_row, self.edges_a, self.edges_b))
+
+    def bucket_stats(self) -> list[dict]:
+        """Per-bucket occupancy: regions, used/total label slots, waste."""
+        out = []
+        for k, w in enumerate(self.widths):
+            hub = np.asarray(self.hub_ids[k])
+            used = int((hub != HUB_PAD).sum())
+            total = int(np.prod(hub.shape))
+            out.append(dict(bucket=k, width=w, regions=hub.shape[0],
+                            used_slots=used, total_slots=total,
+                            waste=1.0 - used / max(1, total)))
+        return out
+
+    def label_slots(self) -> tuple[int, int]:
+        """(used, total) label slots across all buckets."""
+        st = self.bucket_stats()
+        return (sum(s["used_slots"] for s in st),
+                sum(s["total_slots"] for s in st))
+
+
+# ---------------------------------------------------------------------------
+# packing (host -> device layouts)
+# ---------------------------------------------------------------------------
+
+def _host_packs(index: EHLIndex):
+    """Live regions in rid order with their packed (ragged) label arrays."""
     live = sorted(index.regions.keys())
-    row_of = {rid: i for i, rid in enumerate(live)}
-    R = _round_up(len(live), region_pad_multiple)
-
     packs = [index.pack_region(index.regions[rid]) for rid in live]
-    Lmax = max((len(p["hubs"]) for p in packs), default=1)
-    L = _round_up(max(Lmax, 1), lane)
+    return live, packs
 
-    hub_ids = np.full((R, L), HUB_PAD, dtype=np.int32)
-    via_xy = np.zeros((R, L, 2), dtype=np.float32)
-    via_d = np.full((R, L), np.inf, dtype=np.float32)
-    via_ids = np.full((R, L), -1, dtype=np.int32)
-    for i, p in enumerate(packs):
-        k = len(p["hubs"])
-        hub_ids[i, :k] = p["hubs"]
-        via_xy[i, :k] = p["via_xy"]
-        via_d[i, :k] = p["d"]
-        via_ids[i, :k] = p["vias"]
 
+def _fill_row(arrs, i, p):
+    hub_ids, via_xy, via_d, via_ids = arrs
+    k = len(p["hubs"])
+    hub_ids[i, :k] = p["hubs"]
+    via_xy[i, :k] = p["via_xy"]
+    via_d[i, :k] = p["d"]
+    via_ids[i, :k] = p["vias"]
+
+
+def _alloc_slab(rows: int, width: int):
+    return (np.full((rows, width), HUB_PAD, dtype=np.int32),
+            np.zeros((rows, width, 2), dtype=np.float32),
+            np.full((rows, width), np.inf, dtype=np.float32),
+            np.full((rows, width), -1, dtype=np.int32))
+
+
+def _cell_mapper(index: EHLIndex, live: list) -> np.ndarray:
+    """[C] int32 cell -> dense index into the live-region ordering."""
+    row_of = {rid: i for i, rid in enumerate(live)}
     mapper = np.zeros(index.mapper.size, dtype=np.int32)
     for ci, rid in enumerate(index.mapper):
         mapper[ci] = row_of[int(rid)]
+    return mapper
 
+
+def _pack_edges(index: EHLIndex, lane: int):
     E = index.scene.edges.shape[0]
     Ep = _round_up(max(E, 1), lane)
     ea = np.zeros((Ep, 2), dtype=np.float32)
@@ -120,62 +244,192 @@ def pack_index(index: EHLIndex, lane: int = 128,
         eb[:E] = index.scene.edges[:, 1]
         ea[E:] = index.scene.edges[0, 0]   # repeat-pad: degenerate repeats
         eb[E:] = index.scene.edges[0, 1]   # never change the OR-reduction
+    return ea, eb
+
+
+def slab_label_slots(index: EHLIndex, lane: int = 128,
+                     region_pad_multiple: int = 1) -> tuple[int, int]:
+    """(used, total) label slots of the would-be single slab, analytically."""
+    counts = index.packed_label_counts()
+    R = _round_up(max(1, len(counts)), region_pad_multiple)
+    L = _round_up(max(1, int(counts.max(initial=1))), lane)
+    return int(counts.sum()), R * L
+
+
+def slab_device_bytes(index: EHLIndex, lane: int = 128,
+                      region_pad_multiple: int = 1) -> int:
+    """What ``pack_index(...).device_bytes()`` would be, without packing.
+
+    Lets callers report the single-slab footprint for comparison against the
+    bucketed layout without materializing the global-Lmax slab on device.
+    """
+    _, slots = slab_label_slots(index, lane, region_pad_multiple)
+    per_slot = 4 + 8 + 4 + 4          # hub_ids + via_xy + via_d + via_ids
+    Ep = _round_up(max(1, index.scene.edges.shape[0]), lane)
+    return slots * per_slot + index.mapper.size * 4 + 2 * Ep * 2 * 4
+
+
+def pack_index(index: EHLIndex, lane: int = 128,
+               region_pad_multiple: int = 1) -> PackedIndex:
+    """Freeze a (possibly compressed) host index into one global-Lmax slab."""
+    live, packs = _host_packs(index)
+    R = _round_up(len(live), region_pad_multiple)
+
+    Lmax = max((len(p["hubs"]) for p in packs), default=1)
+    L = _round_up(max(Lmax, 1), lane)
+
+    arrs = _alloc_slab(R, L)
+    for i, p in enumerate(packs):
+        _fill_row(arrs, i, p)
+
+    mapper = _cell_mapper(index, live)
+    ea, eb = _pack_edges(index, lane)
     return PackedIndex(
-        hub_ids=jnp.asarray(hub_ids), via_xy=jnp.asarray(via_xy),
-        via_d=jnp.asarray(via_d), via_ids=jnp.asarray(via_ids),
+        hub_ids=jnp.asarray(arrs[0]), via_xy=jnp.asarray(arrs[1]),
+        via_d=jnp.asarray(arrs[2]), via_ids=jnp.asarray(arrs[3]),
         mapper=jnp.asarray(mapper), edges_a=jnp.asarray(ea),
         edges_b=jnp.asarray(eb), nx=index.nx, ny=index.ny,
         cell_size=float(index.cell_size), width=float(index.scene.width),
         height=float(index.scene.height))
 
 
-def narrow_view(pk: PackedIndex, width: int) -> tuple[PackedIndex, jnp.ndarray]:
-    """Width-bucketed view: the first ``width`` label slots of every region.
+def plan_buckets(index: EHLIndex, lane: int = 128
+                 ) -> tuple[list, list, np.ndarray]:
+    """Bucket assignment from the grid's pack metadata — no device arrays.
 
-    Beyond-paper optimization (EXPERIMENTS.md §Perf iteration D): global
-    padding is governed by the single largest merged region, so most queries
-    pay O(Lmax^2) join + O(Lmax*E) visibility for labels that are padding.
-    Queries whose BOTH endpoint regions hold <= width labels are answered
-    exactly by this truncated view; the returned [R] mask says which regions
-    qualify.  Routing happens in the serving engine / query_batch_bucketed.
+    Returns (per-region label counts, bucket widths, region -> bucket).
+    Single definition shared by ``pack_bucketed`` and the analytic
+    accounting helpers below.
     """
-    ok = jnp.asarray((np.asarray(pk.hub_ids) != HUB_PAD).sum(1) <= width)
-    nv = PackedIndex(
-        hub_ids=pk.hub_ids[:, :width], via_xy=pk.via_xy[:, :width],
-        via_d=pk.via_d[:, :width], via_ids=pk.via_ids[:, :width],
-        mapper=pk.mapper, edges_a=pk.edges_a, edges_b=pk.edges_b,
-        nx=pk.nx, ny=pk.ny, cell_size=pk.cell_size, width=pk.width,
-        height=pk.height)
-    return nv, ok
+    counts = [max(1, int(c)) for c in index.packed_label_counts()]
+    widths = sorted({bucket_width(c, lane) for c in counts}) or [lane]
+    bucket_of_width = {w: k for k, w in enumerate(widths)}
+    region_bucket = np.array([bucket_of_width[bucket_width(c, lane)]
+                              for c in counts], dtype=np.int32)
+    return counts, widths, region_bucket
 
 
-def query_batch_bucketed(pk: PackedIndex, nv: PackedIndex, ok: jnp.ndarray,
-                         s: jnp.ndarray, t: jnp.ndarray,
-                         use_kernels: bool = False) -> jnp.ndarray:
-    """Two-tier routing: narrow view where both regions fit, full otherwise.
+def bucketed_device_bytes(index: EHLIndex, lane: int = 128) -> int:
+    """What ``pack_bucketed(...).device_bytes()`` would be, without packing."""
+    counts, widths, region_bucket = plan_buckets(index, lane)
+    per_slot = 4 + 8 + 4 + 4          # hub_ids + via_xy + via_d + via_ids
+    slabs = sum(max(1, int((region_bucket == k).sum())) * w * per_slot
+                for k, w in enumerate(widths))
+    Ep = _round_up(max(1, index.scene.edges.shape[0]), lane)
+    return (slabs + index.mapper.size * 4 + 2 * len(counts) * 4
+            + 2 * Ep * 2 * 4)
 
-    Shapes stay static (both paths run over the full batch with masking), so
-    on TPU this trades a cheap narrow pass + a masked wide pass; the wide
-    pass only pays for the (rare) oversized-region queries when batches are
-    region-sorted upstream (PathServer does this).
+
+def pack_bucketed(index: EHLIndex, lane: int = 128) -> BucketedIndex:
+    """Freeze a host index into width-bucketed slabs (DESIGN.md §4).
+
+    Each region goes into the smallest power-of-two-multiple-of-``lane``
+    bucket that holds its label count, so padding waste is < 50% per region
+    instead of being governed by the single largest merged region.
     """
-    rs = locate_regions(pk, s)
-    rt = locate_regions(pk, t)
-    fast = ok[rs] & ok[rt]
-    d_narrow = query_batch(nv, s, t, use_kernels=use_kernels)
-    d_full = query_batch(pk, s, t, use_kernels=use_kernels)
-    return jnp.where(fast, d_narrow, d_full)
+    live, packs = _host_packs(index)
+    counts, widths, region_bucket = plan_buckets(index, lane)
+    region_row = np.zeros(len(live), dtype=np.int32)
+    members: list[list[int]] = [[] for _ in widths]
+    for i, b in enumerate(region_bucket):
+        region_row[i] = len(members[b])
+        members[b].append(i)
+
+    slabs = []
+    for k, w in enumerate(widths):
+        arrs = _alloc_slab(max(1, len(members[k])), w)
+        for row, i in enumerate(members[k]):
+            _fill_row(arrs, row, packs[i])
+        slabs.append(arrs)
+
+    mapper = _cell_mapper(index, live)
+    ea, eb = _pack_edges(index, lane)
+    return BucketedIndex(
+        hub_ids=tuple(jnp.asarray(a[0]) for a in slabs),
+        via_xy=tuple(jnp.asarray(a[1]) for a in slabs),
+        via_d=tuple(jnp.asarray(a[2]) for a in slabs),
+        via_ids=tuple(jnp.asarray(a[3]) for a in slabs),
+        mapper=jnp.asarray(mapper),
+        region_bucket=jnp.asarray(region_bucket),
+        region_row=jnp.asarray(region_row),
+        edges_a=jnp.asarray(ea), edges_b=jnp.asarray(eb),
+        nx=index.nx, ny=index.ny, cell_size=float(index.cell_size),
+        width=float(index.scene.width), height=float(index.scene.height),
+        widths=tuple(widths))
 
 
 # ---------------------------------------------------------------------------
 # batched query engine (pure jnp; kernels plug in via repro.kernels.ops)
 # ---------------------------------------------------------------------------
 
-def locate_regions(idx: PackedIndex, pts: jnp.ndarray) -> jnp.ndarray:
-    """[B] region rows for query points (floor-div + mapper, O(1))."""
+def locate_regions(idx, pts: jnp.ndarray) -> jnp.ndarray:
+    """[B] region rows/ids for query points (floor-div + mapper, O(1)).
+
+    Works for both layouts: PackedIndex's mapper yields slab rows,
+    BucketedIndex's yields region ids (resolve via region_bucket/row).
+    """
     ix = jnp.clip((pts[:, 0] / idx.cell_size).astype(jnp.int32), 0, idx.nx - 1)
     iy = jnp.clip((pts[:, 1] / idx.cell_size).astype(jnp.int32), 0, idx.ny - 1)
     return idx.mapper[iy * idx.nx + ix]
+
+
+def _labels_to_distances(labels_s, labels_t, s, t, edges_a, edges_b,
+                         use_kernels: bool, want_argmin: bool):
+    """Shared Eq. 1-3 core: per-endpoint labels -> distances (+ argmin ids).
+
+    ``labels_*`` are (hub_ids [B,L], via_xy [B,L,2], via_d [B,L],
+    via_ids [B,L]) gathered for each query endpoint.  One code path serves
+    ``query_batch``, ``query_batch_argmin`` and the bucketed dispatch, for
+    both the jnp reference ops and the Pallas kernels: the join emits the
+    row-min form ``rowmin[b,i] = vd_s[b,i] + min_{hub match j} vd_t[b,j]``
+    and the argmin pair is recovered with two cheap O(L) reductions.
+    """
+    from repro.kernels import ops
+
+    hub_s, xy_s, d_s, vid_s = labels_s
+    hub_t, xy_t, d_t, vid_t = labels_t
+    segvis = ops.segvis_kernel if use_kernels else ops.segvis_ref
+    rowmin_join = (ops.label_join_rowmin_kernel if use_kernels
+                   else ops.label_join_rowmin_ref)
+
+    B, L = hub_s.shape
+    # visibility of each via vertex from its query point  [B, L]
+    vis_s = segvis(jnp.repeat(s, L, axis=0), xy_s.reshape(-1, 2),
+                   edges_a, edges_b).reshape(B, L)
+    vis_t = segvis(jnp.repeat(t, L, axis=0), xy_t.reshape(-1, 2),
+                   edges_a, edges_b).reshape(B, L)
+
+    inf = jnp.float32(jnp.inf)
+    vd_s = jnp.where(vis_s, jnp.linalg.norm(s[:, None] - xy_s, axis=-1) + d_s,
+                     inf)
+    vd_t = jnp.where(vis_t, jnp.linalg.norm(t[:, None] - xy_t, axis=-1) + d_t,
+                     inf)
+
+    rowmin = rowmin_join(hub_s, vd_s, hub_t, vd_t)      # [B, L]
+    d_label = rowmin.min(axis=-1)
+
+    covis = segvis(s, t, edges_a, edges_b)              # [B]
+    d_direct = jnp.linalg.norm(s - t, axis=-1)
+    d = jnp.where(covis, d_direct, d_label)
+    if not want_argmin:
+        return d
+
+    # winning (i, j): i minimizes the row join; with i's hub fixed, j is the
+    # min-vd_t label sharing that hub (ties resolve to the first index, same
+    # as the historical flat [L,L] argmin).
+    i = jnp.argmin(rowmin, axis=-1)                     # [B]
+    hub_i = jnp.take_along_axis(hub_s, i[:, None], 1)   # [B, 1]
+    vd_t_match = jnp.where(hub_t == hub_i, vd_t, inf)
+    j = jnp.argmin(vd_t_match, axis=-1)                 # [B]
+    via_s = jnp.take_along_axis(vid_s, i[:, None], 1)[:, 0]
+    via_t = jnp.take_along_axis(vid_t, j[:, None], 1)[:, 0]
+    hub = hub_i[:, 0]
+    return d, covis, via_s, hub, via_t
+
+
+def _gather_packed(idx: PackedIndex, rows: jnp.ndarray):
+    return (idx.hub_ids[rows], idx.via_xy[rows], idx.via_d[rows],
+            idx.via_ids[rows])
 
 
 @partial(jax.jit, static_argnames=("use_kernels",))
@@ -187,72 +441,125 @@ def query_batch(idx: PackedIndex, s: jnp.ndarray, t: jnp.ndarray,
     (``repro.kernels.ops``); False uses their jnp references — identical
     semantics, asserted by tests.
     """
-    from repro.kernels import ops
-
     s = s.astype(jnp.float32)
     t = t.astype(jnp.float32)
     rs = locate_regions(idx, s)
     rt = locate_regions(idx, t)
-
-    hub_s = idx.hub_ids[rs]          # [B, L]
-    hub_t = idx.hub_ids[rt]
-    xy_s = idx.via_xy[rs]            # [B, L, 2]
-    xy_t = idx.via_xy[rt]
-    d_s = idx.via_d[rs]              # [B, L]
-    d_t = idx.via_d[rt]
-
-    segvis = ops.segvis_kernel if use_kernels else ops.segvis_ref
-    join = ops.label_join_kernel if use_kernels else ops.label_join_ref
-
-    B, L = hub_s.shape
-    # visibility of each via vertex from its query point  [B, L]
-    vis_s = segvis(jnp.repeat(s, L, axis=0), xy_s.reshape(-1, 2),
-                   idx.edges_a, idx.edges_b).reshape(B, L)
-    vis_t = segvis(jnp.repeat(t, L, axis=0), xy_t.reshape(-1, 2),
-                   idx.edges_a, idx.edges_b).reshape(B, L)
-
-    inf = jnp.float32(jnp.inf)
-    vd_s = jnp.where(vis_s, jnp.linalg.norm(s[:, None] - xy_s, axis=-1) + d_s, inf)
-    vd_t = jnp.where(vis_t, jnp.linalg.norm(t[:, None] - xy_t, axis=-1) + d_t, inf)
-
-    d_label = join(hub_s, vd_s, hub_t, vd_t)            # [B]
-
-    covis = segvis(s, t, idx.edges_a, idx.edges_b)       # [B]
-    d_direct = jnp.linalg.norm(s - t, axis=-1)
-    return jnp.where(covis, d_direct, d_label)
+    return _labels_to_distances(
+        _gather_packed(idx, rs), _gather_packed(idx, rt), s, t,
+        idx.edges_a, idx.edges_b, use_kernels, want_argmin=False)
 
 
-@partial(jax.jit, static_argnames=())
-def query_batch_argmin(idx: PackedIndex, s: jnp.ndarray, t: jnp.ndarray):
+@partial(jax.jit, static_argnames=("use_kernels",))
+def query_batch_argmin(idx: PackedIndex, s: jnp.ndarray, t: jnp.ndarray,
+                       use_kernels: bool = False):
     """Distances + winning (via_s, hub, via_t) label ids (path unwinding)."""
-    from repro.kernels import ops
-
     s = s.astype(jnp.float32)
     t = t.astype(jnp.float32)
     rs = locate_regions(idx, s)
     rt = locate_regions(idx, t)
-    hub_s, hub_t = idx.hub_ids[rs], idx.hub_ids[rt]
-    xy_s, xy_t = idx.via_xy[rs], idx.via_xy[rt]
-    d_s, d_t = idx.via_d[rs], idx.via_d[rt]
-    B, L = hub_s.shape
-    vis_s = ops.segvis_ref(jnp.repeat(s, L, axis=0), xy_s.reshape(-1, 2),
-                           idx.edges_a, idx.edges_b).reshape(B, L)
-    vis_t = ops.segvis_ref(jnp.repeat(t, L, axis=0), xy_t.reshape(-1, 2),
-                           idx.edges_a, idx.edges_b).reshape(B, L)
-    inf = jnp.float32(jnp.inf)
-    vd_s = jnp.where(vis_s, jnp.linalg.norm(s[:, None] - xy_s, axis=-1) + d_s, inf)
-    vd_t = jnp.where(vis_t, jnp.linalg.norm(t[:, None] - xy_t, axis=-1) + d_t, inf)
+    return _labels_to_distances(
+        _gather_packed(idx, rs), _gather_packed(idx, rt), s, t,
+        idx.edges_a, idx.edges_b, use_kernels, want_argmin=True)
 
-    eq = hub_s[:, :, None] == hub_t[:, None, :]
-    tot = jnp.where(eq, vd_s[:, :, None] + vd_t[:, None, :], inf)   # [B,L,L]
-    flat = tot.reshape(B, -1)
-    k = jnp.argmin(flat, axis=1)
-    i, j = k // L, k % L
-    d_label = jnp.take_along_axis(flat, k[:, None], axis=1)[:, 0]
 
-    covis = ops.segvis_ref(s, t, idx.edges_a, idx.edges_b)
-    d = jnp.where(covis, jnp.linalg.norm(s - t, axis=-1), d_label)
-    via_s = jnp.take_along_axis(idx.via_ids[rs], i[:, None], 1)[:, 0]
-    via_t = jnp.take_along_axis(idx.via_ids[rt], j[:, None], 1)[:, 0]
-    hub = jnp.take_along_axis(hub_s, i[:, None], 1)[:, 0]
-    return d, covis, via_s, hub, via_t
+# ---------------------------------------------------------------------------
+# bucketed dispatch
+# ---------------------------------------------------------------------------
+
+def _gather_bucketed(bx: BucketedIndex, regions: jnp.ndarray, bucket: int):
+    """Gather per-query labels from buckets <= ``bucket``, padded to its width.
+
+    One masked gather per source bucket (a handful of O(B*W) memory ops) in
+    exchange for running the O(W^2) join and O(W*E) visibility at the
+    dispatch width instead of the global Lmax.  Regions living in a *wider*
+    bucket than ``bucket`` come back as pure padding (inf distances) — the
+    caller must dispatch each query at the max of its endpoint buckets.
+    """
+    W = bx.widths[bucket]
+    B = regions.shape[0]
+    hub = jnp.full((B, W), HUB_PAD, jnp.int32)
+    xy = jnp.zeros((B, W, 2), jnp.float32)
+    vd = jnp.full((B, W), jnp.inf, jnp.float32)
+    vid = jnp.full((B, W), -1, jnp.int32)
+
+    src_bucket = bx.region_bucket[regions]
+    src_row = bx.region_row[regions]
+    for k in range(bucket + 1):
+        rows = jnp.clip(src_row, 0, bx.hub_ids[k].shape[0] - 1)
+        sel = src_bucket == k
+        pad = ((0, 0), (0, W - bx.widths[k]))
+        hub = jnp.where(sel[:, None],
+                        jnp.pad(bx.hub_ids[k][rows], pad,
+                                constant_values=HUB_PAD), hub)
+        xy = jnp.where(sel[:, None, None],
+                       jnp.pad(bx.via_xy[k][rows], pad + ((0, 0),)), xy)
+        vd = jnp.where(sel[:, None],
+                       jnp.pad(bx.via_d[k][rows], pad,
+                               constant_values=np.inf), vd)
+        vid = jnp.where(sel[:, None],
+                        jnp.pad(bx.via_ids[k][rows], pad,
+                                constant_values=-1), vid)
+    return hub, xy, vd, vid
+
+
+@partial(jax.jit, static_argnames=("bucket", "use_kernels", "want_argmin"))
+def query_batch_at_bucket(bx: BucketedIndex, s: jnp.ndarray, t: jnp.ndarray,
+                          bucket: int, use_kernels: bool = False,
+                          want_argmin: bool = False):
+    """Eq. 1-3 over one dispatch bucket — the per-bucket jit cache entry.
+
+    Every query's endpoint regions must live in buckets <= ``bucket``
+    (i.e. ``bucket == max(endpoint buckets)`` after routing); the result is
+    then bitwise-identical to the full-width ``query_batch`` because the
+    extra slots it would have carried are all inf/HUB_PAD padding.
+    """
+    s = s.astype(jnp.float32)
+    t = t.astype(jnp.float32)
+    rs = locate_regions(bx, s)
+    rt = locate_regions(bx, t)
+    return _labels_to_distances(
+        _gather_bucketed(bx, rs, bucket), _gather_bucketed(bx, rt, bucket),
+        s, t, bx.edges_a, bx.edges_b, use_kernels, want_argmin)
+
+
+def dispatch_buckets(bx: BucketedIndex, s, t) -> np.ndarray:
+    """[B] dispatch bucket per query: max of the two endpoint buckets."""
+    s = jnp.asarray(s, jnp.float32)
+    t = jnp.asarray(t, jnp.float32)
+    bs = bx.region_bucket[locate_regions(bx, s)]
+    bt = bx.region_bucket[locate_regions(bx, t)]
+    return np.asarray(jnp.maximum(bs, bt))
+
+
+def query_batch_bucketed(bx: BucketedIndex, s, t,
+                         use_kernels: bool = False,
+                         want_argmin: bool = False):
+    """Route a batch through per-bucket dispatch and scatter results back.
+
+    Host-side convenience wrapper (PathServer does the same routing with
+    fixed batch shapes and per-bucket stats): group queries by dispatch
+    bucket, answer each group at its own width, reassemble in input order.
+    """
+    s = np.asarray(s, np.float32)
+    t = np.asarray(t, np.float32)
+    n = len(s)
+    buckets = dispatch_buckets(bx, s, t) if n else np.zeros(0, np.int32)
+    outs = empty_results(n, want_argmin)
+    for k in np.unique(buckets):
+        m = buckets == k
+        res = query_batch_at_bucket(bx, jnp.asarray(s[m]), jnp.asarray(t[m]),
+                                    bucket=int(k), use_kernels=use_kernels,
+                                    want_argmin=want_argmin)
+        for o, r in zip(outs, res if want_argmin else (res,)):
+            o[m] = np.asarray(r)
+    return tuple(outs) if want_argmin else outs[0]
+
+
+def empty_results(n: int, want_argmin: bool) -> list:
+    """Output buffers matching the engine dtypes: d [+ covis, label ids]."""
+    if not want_argmin:
+        return [np.empty(n, np.float32)]
+    return [np.empty(n, np.float32), np.empty(n, bool),
+            np.empty(n, np.int32), np.empty(n, np.int32),
+            np.empty(n, np.int32)]

@@ -84,15 +84,26 @@ def query(index: EHLIndex, s, t, want_path: bool = True
         return float("inf"), []
     if not want_path:
         return float(best), []
+    return float(best), unwind_path(index, s, t, *best_triple)
 
-    v1, h, v2 = best_triple
-    seq = index.hl.unwind(v1, h) + index.hl.unwind(v2, h)[::-1][1:]
-    pts = [s] + [index.graph.nodes[u] for u in seq] + [t]
+
+def unwind_path(index: EHLIndex, s, t, via_s: int, hub: int, via_t: int
+                ) -> list:
+    """Reconstruct the optimal polyline from a winning (via_s, hub, via_t).
+
+    Shared by the scalar oracle above and the batched argmin engines
+    (``repro.core.packed.query_batch_argmin`` & the serving layer): the
+    device side only identifies the winning label triple; the hub labels'
+    next-hop pointers live host-side.
+    """
+    seq = index.hl.unwind(via_s, hub) + index.hl.unwind(via_t, hub)[::-1][1:]
+    pts = [np.asarray(s, np.float64)] + \
+        [index.graph.nodes[u] for u in seq] + [np.asarray(t, np.float64)]
     path = [pts[0]]
     for p in pts[1:]:
         if edist(path[-1], p) > 1e-12:
             path.append(p)
-    return float(best), path
+    return path
 
 
 def path_length(path) -> float:

@@ -1,0 +1,34 @@
+"""Version-tolerant shims over the moving Pallas TPU API surface.
+
+JAX has renamed the TPU compiler-parameter container across releases
+(``pltpu.TPUCompilerParams`` in the 0.4.x line, ``pltpu.CompilerParams``
+in newer releases, a plain dict before either existed).  Every kernel in
+this package goes through :func:`tpu_compiler_params` so the kernels
+themselves stay pinned to one spelling.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+
+def tpu_compiler_params(*, dimension_semantics=None):
+    """Build the TPU compiler-params object for ``pl.pallas_call``.
+
+    Tries the current class name first, then the legacy one; falls back to
+    the dict form (accepted by old pallas_call signatures) if neither class
+    exists.  Unknown kwargs degrade to a parameterless instance rather than
+    failing — the semantics hint is an optimization, not a correctness knob.
+    """
+    kw = {}
+    if dimension_semantics is not None:
+        kw["dimension_semantics"] = tuple(dimension_semantics)
+    for name in ("CompilerParams", "TPUCompilerParams"):
+        cls = getattr(pltpu, name, None)
+        if cls is None:
+            continue
+        try:
+            return cls(**kw)
+        except TypeError:
+            return cls()
+    return dict(mosaic=kw) if kw else None

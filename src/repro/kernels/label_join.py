@@ -22,7 +22,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from .compat import tpu_compiler_params
 
 
 DEF_B_BLK = 8
@@ -79,7 +80,7 @@ def label_join_rowmin(hub_s: jnp.ndarray, vd_s: jnp.ndarray,
         in_specs=[pl.BlockSpec((b_blk, Lp), lambda i: (i, 0))] * 4,
         out_specs=pl.BlockSpec((b_blk, Lp), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((Bp, Lp), jnp.float32),
-        compiler_params=pltpu.CompilerParams(dimension_semantics=("parallel",)),
+        compiler_params=tpu_compiler_params(dimension_semantics=("parallel",)),
         interpret=interpret,
     )(hs, vs, ht, vt)
     return out[:B, :L]

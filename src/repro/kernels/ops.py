@@ -12,6 +12,7 @@ import jax
 
 from . import ref as _ref
 from .label_join import label_join as _label_join_pallas
+from .label_join import label_join_rowmin as _label_join_rowmin_pallas
 from .segvis import segvis as _segvis_pallas
 
 
@@ -34,3 +35,8 @@ def segvis_kernel(p, q, ea, eb, **kw):
 def label_join_kernel(hub_s, vd_s, hub_t, vd_t, **kw):
     kw.setdefault("interpret", _interpret())
     return _label_join_pallas(hub_s, vd_s, hub_t, vd_t, **kw)
+
+
+def label_join_rowmin_kernel(hub_s, vd_s, hub_t, vd_t, **kw):
+    kw.setdefault("interpret", _interpret())
+    return _label_join_rowmin_pallas(hub_s, vd_s, hub_t, vd_t, **kw)

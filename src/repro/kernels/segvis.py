@@ -22,7 +22,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from .compat import tpu_compiler_params
 
 
 DEF_SEG_BLK = 256
@@ -94,7 +95,7 @@ def segvis(p: jnp.ndarray, q: jnp.ndarray, ea: jnp.ndarray, eb: jnp.ndarray,
         ],
         out_specs=pl.BlockSpec((1, seg_blk), lambda i, j: (0, i)),
         out_shape=jax.ShapeDtypeStruct((1, Np), jnp.int32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(pT, qT, eaT, ebT)

@@ -1,1 +1,3 @@
-from .engine import LMServer, PathServer, ServeStats  # noqa: F401
+from .engine import BucketStats, LMServer, PathServer, ServeStats  # noqa: F401
+from .query_engine import (DeviceEngine, HostEngine, JnpEngine,  # noqa: F401
+                           PallasEngine, QueryEngine, make_engine)

@@ -1,12 +1,15 @@
 """Batched request serving — the paper's online phase as a production loop.
 
-``PathServer`` fronts the EHL* packed index: requests accumulate into
-fixed-size batches (padding with the last request keeps shapes static, so
-the jitted kernel never recompiles), are answered with the batched Eq. 1-3
-engine, and throughput/latency stats are collected per batch.  On a mesh,
-the query batch shards over the data axes and the index is replicated (or
-region-sharded for indexes beyond single-device HBM — the EHL* budget knob
-is what keeps the replicated fast path viable, see DESIGN.md).
+``PathServer`` fronts a pluggable :class:`~repro.serving.query_engine.
+QueryEngine`: requests are routed by dispatch bucket (max of the two
+endpoint-region buckets under the width-bucketed layout, DESIGN.md §4),
+each bucket group is cut into fixed-size batches (zero-padding the tail
+keeps shapes static, so the jitted kernels never recompile), answered, and
+scattered back into request order.  Per-bucket latency/occupancy stats make
+the routing observable.  On a mesh, the query batch shards over the data
+axes and the index is replicated (or region-sharded for indexes beyond
+single-device HBM — the EHL* budget knob is what keeps the replicated fast
+path viable, see DESIGN.md §6).
 
 ``LMServer`` does the same for LM decode against a prefilled cache — shared
 batching/stats machinery, per the framework design.
@@ -22,7 +25,28 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.packed import PackedIndex, query_batch
+from repro.core.packed import empty_results
+from repro.core.query import path_length, unwind_path
+from repro.serving.query_engine import HostEngine, QueryEngine, make_engine
+
+
+@dataclasses.dataclass
+class BucketStats:
+    """Per-dispatch-bucket serving counters (width = label slots paid)."""
+    width: int = 0
+    batches: int = 0
+    queries: int = 0
+    seconds: float = 0.0
+    slots: int = 0          # batch slots dispatched (incl. tail padding)
+
+    @property
+    def occupancy(self) -> float:
+        """Real queries / dispatched slots (1.0 = no tail padding waste)."""
+        return self.queries / max(1, self.slots)
+
+    @property
+    def us_per_query(self) -> float:
+        return 1e6 * self.seconds / max(1, self.queries)
 
 
 @dataclasses.dataclass
@@ -30,6 +54,7 @@ class ServeStats:
     batches: int = 0
     queries: int = 0
     seconds: float = 0.0
+    per_bucket: dict = dataclasses.field(default_factory=dict)
 
     @property
     def us_per_query(self) -> float:
@@ -41,45 +66,129 @@ class ServeStats:
 
 
 class PathServer:
-    """Fixed-batch ESPP query server over a packed EHL* index."""
+    """Fixed-batch ESPP query server over a pluggable query engine.
 
-    def __init__(self, index: PackedIndex, batch_size: int = 256,
+    ``index`` may be a packed artifact (PackedIndex / BucketedIndex — wrapped
+    in a jnp or Pallas device engine per ``use_kernels``), a host EHLIndex
+    (auto-packed bucketed), or a ready-made :class:`QueryEngine`.
+    """
+
+    def __init__(self, index, batch_size: int = 256,
                  use_kernels: bool = False, mesh=None, batch_sharding=None):
-        self.index = index
+        if isinstance(index, QueryEngine):
+            if use_kernels and not getattr(index, "use_kernels", False):
+                raise ValueError("use_kernels=True conflicts with the given "
+                                 f"{index.name!r} engine — construct a "
+                                 "PallasEngine (or pass the packed index)")
+            self.engine = index
+        else:
+            self.engine = make_engine(
+                index, backend="pallas" if use_kernels else "jnp")
+        self.index = getattr(self.engine, "index", None)
         self.batch_size = batch_size
-        self.use_kernels = use_kernels
         self.stats = ServeStats()
         self._sharding = batch_sharding
-        self._fn = jax.jit(
-            lambda idx, s, t: query_batch(idx, s, t,
-                                          use_kernels=use_kernels))
 
-    def warmup(self):
-        z = jnp.zeros((self.batch_size, 2), jnp.float32)
-        self._fn(self.index, z, z).block_until_ready()
+    def warmup(self, paths: bool = False):
+        """Trace the jit entries (``paths=True`` also warms the argmin
+        entries used by ``query_paths``)."""
+        self.engine.warmup(self.batch_size, want_argmin=paths)
+
+    def _bucket_stats(self, bucket: int) -> BucketStats:
+        if bucket not in self.stats.per_bucket:
+            width = getattr(self.engine, "bucket_width", lambda b: 0)(bucket)
+            self.stats.per_bucket[bucket] = BucketStats(width=width)
+        return self.stats.per_bucket[bucket]
+
+    def _dispatch(self, s, t, want_argmin: bool):
+        """Bucket-route N requests through fixed-shape batches; scatter back.
+
+        Sort by dispatch bucket (stable), answer each bucket's sub-batches
+        at that bucket's width, write results back through the permutation.
+        Returns a list of [N]-arrays (1 for distances, 5 for argmin).
+        """
+        n = len(s)
+        bs = self.batch_size
+        pad = getattr(self.engine, "static_shapes", True)
+        buckets = self.engine.buckets_of(s, t) if n else np.zeros(0, np.int32)
+        outs = empty_results(n, want_argmin)
+        for k in np.unique(buckets):
+            idxs = np.nonzero(buckets == k)[0]
+            bstats = self._bucket_stats(int(k))
+            tb0 = time.perf_counter()
+            for lo in range(0, len(idxs), bs):
+                sel = idxs[lo:lo + bs]
+                # jitted engines get fixed [bs, 2] shapes (no recompiles);
+                # host-loop engines take the ragged tail as-is
+                rows = bs if pad else len(sel)
+                sb = np.zeros((rows, 2), np.float32)
+                tb = np.zeros((rows, 2), np.float32)
+                sb[:len(sel)] = s[sel]
+                tb[:len(sel)] = t[sel]
+                sj, tj = (jnp.asarray(sb), jnp.asarray(tb)) if pad \
+                    else (sb, tb)
+                if self._sharding is not None:
+                    sj = jax.device_put(sj, self._sharding)
+                    tj = jax.device_put(tj, self._sharding)
+                if want_argmin:
+                    res = self.engine.batch_argmin(sj, tj, bucket=int(k))
+                else:
+                    res = (self.engine.batch(sj, tj, bucket=int(k)),)
+                for o, r in zip(outs, res):
+                    o[sel] = np.asarray(r)[:len(sel)]
+                bstats.batches += 1
+                bstats.slots += rows
+                self.stats.batches += 1
+            bstats.queries += len(idxs)
+            bstats.seconds += time.perf_counter() - tb0
+        return outs
 
     def query(self, s: np.ndarray, t: np.ndarray) -> np.ndarray:
-        """Answer N requests (any N); pads the tail batch to a fixed shape."""
-        n = len(s)
-        out = np.empty(n, np.float32)
-        bs = self.batch_size
+        """Answer N distance requests (any N), bucket-routed."""
         t0 = time.perf_counter()
-        for lo in range(0, n, bs):
-            hi = min(lo + bs, n)
-            sb = np.zeros((bs, 2), np.float32)
-            tb = np.zeros((bs, 2), np.float32)
-            sb[:hi - lo] = s[lo:hi]
-            tb[:hi - lo] = t[lo:hi]
-            sj, tj = jnp.asarray(sb), jnp.asarray(tb)
-            if self._sharding is not None:
-                sj = jax.device_put(sj, self._sharding)
-                tj = jax.device_put(tj, self._sharding)
-            d = self._fn(self.index, sj, tj)
-            out[lo:hi] = np.asarray(d)[:hi - lo]
+        out = self._dispatch(np.asarray(s, np.float32),
+                             np.asarray(t, np.float32),
+                             want_argmin=False)[0]
         self.stats.seconds += time.perf_counter() - t0
-        self.stats.queries += n
-        self.stats.batches += -(-n // bs)
+        self.stats.queries += len(out)
         return out
+
+    def query_paths(self, s: np.ndarray, t: np.ndarray, host_index=None
+                    ) -> tuple[np.ndarray, list]:
+        """Distances + optimal polylines for N requests.
+
+        The batched argmin engine identifies each query's winning
+        (via_s, hub, via_t) triple; unwinding follows the hub labels'
+        next-hop pointers, which live host-side — pass the host
+        ``EHLIndex`` (defaults to a HostEngine's own index).
+        """
+        s = np.asarray(s, np.float32)
+        t = np.asarray(t, np.float32)
+        if isinstance(self.engine, HostEngine):
+            t0 = time.perf_counter()
+            paths = self.engine.paths(s, t)
+            d = np.array([path_length(p) for p in paths], dtype=np.float32)
+            self.stats.seconds += time.perf_counter() - t0
+            self.stats.queries += len(s)
+            return d, paths
+        if host_index is None:
+            raise ValueError("query_paths on a device engine needs the host "
+                             "EHLIndex for label unwinding")
+        t0 = time.perf_counter()
+        d, covis, via_s, hub, via_t = self._dispatch(s, t, want_argmin=True)
+        paths = []
+        for i in range(len(s)):
+            if covis[i]:
+                paths.append([s[i].astype(np.float64), t[i].astype(np.float64)])
+            elif not np.isfinite(d[i]):
+                paths.append([])
+            else:
+                paths.append(unwind_path(host_index, s[i], t[i],
+                                         int(via_s[i]), int(hub[i]),
+                                         int(via_t[i])))
+        self.stats.seconds += time.perf_counter() - t0
+        self.stats.queries += len(s)
+        return d, paths
 
 
 class LMServer:

@@ -1,0 +1,171 @@
+"""Pluggable query backends behind one ``QueryEngine`` interface.
+
+The serving layer (``PathServer``) is backend-agnostic: it routes batches,
+keeps stats and scatters results; *how* a batch is answered is an engine
+(DESIGN.md §6).  Three interchangeable backends:
+
+* :class:`HostEngine`   — the scalar float64 oracle (``repro.core.query``);
+  slow, exact, the reference everything else is validated against.
+* :class:`JnpEngine`    — batched XLA engine over a packed layout, pure-jnp
+  ops (the production path on CPU/GPU).
+* :class:`PallasEngine` — same engine routed through the Pallas TPU kernels
+  (interpret mode off-TPU, so the kernel bodies run everywhere).
+
+The device engines accept either packed layout: the single-slab
+``PackedIndex`` (one bucket) or the width-bucketed ``BucketedIndex``
+(per-bucket jit entries, ``buckets_of`` exposes the routing key).  All three
+share the distance/join core in ``repro.core.packed`` — the argmin (path
+unwinding) variant is the same code path with a flag, not a fork.
+"""
+
+from __future__ import annotations
+
+import abc
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.grid import EHLIndex
+from repro.core.packed import (BucketedIndex, PackedIndex, pack_bucketed,
+                               query_batch, query_batch_argmin,
+                               query_batch_at_bucket, dispatch_buckets)
+from repro.core.query import query as host_query
+
+
+class QueryEngine(abc.ABC):
+    """Answer batches of ESPP queries; optionally bucket-routable.
+
+    ``bucket`` arguments index the engine's dispatch buckets; engines with a
+    single bucket (host oracle, single-slab) ignore them.  ``batch`` returns
+    [B] float32 distances; ``batch_argmin`` additionally returns the winning
+    (covis, via_s, hub, via_t) ids for host-side path unwinding.
+    """
+
+    name: str = "abstract"
+    static_shapes = False   # True: batches must be padded to a fixed size
+
+    @property
+    def num_buckets(self) -> int:
+        return 1
+
+    def buckets_of(self, s, t) -> np.ndarray:
+        """[B] dispatch bucket per query (0 for single-bucket engines)."""
+        return np.zeros(len(s), dtype=np.int32)
+
+    @abc.abstractmethod
+    def batch(self, s, t, bucket: int = 0) -> np.ndarray:
+        ...
+
+    def batch_argmin(self, s, t, bucket: int = 0):
+        raise NotImplementedError(f"{self.name} has no argmin path")
+
+    def warmup(self, batch_size: int, want_argmin: bool = False) -> None:
+        pass
+
+    def device_bytes(self) -> int:
+        return 0
+
+
+class HostEngine(QueryEngine):
+    """Scalar float64 oracle looped over the batch — exact, no device state."""
+
+    name = "host"
+
+    def __init__(self, index: EHLIndex):
+        self.index = index
+
+    def batch(self, s, t, bucket: int = 0) -> np.ndarray:
+        return np.array([host_query(self.index, si, ti, want_path=False)[0]
+                         for si, ti in zip(s, t)], dtype=np.float32)
+
+    def paths(self, s, t) -> list:
+        return [host_query(self.index, si, ti, want_path=True)[1]
+                for si, ti in zip(s, t)]
+
+
+class DeviceEngine(QueryEngine):
+    """Batched XLA engine over a packed layout (jnp ops or Pallas kernels)."""
+
+    use_kernels = False
+    static_shapes = True    # jitted: pad batches so shapes never recompile
+
+    def __init__(self, index):
+        if isinstance(index, EHLIndex):
+            index = pack_bucketed(index)
+        if not isinstance(index, (PackedIndex, BucketedIndex)):
+            raise TypeError(f"unsupported index artifact: {type(index)!r}")
+        self.index = index
+        self.bucketed = isinstance(index, BucketedIndex)
+
+    @property
+    def num_buckets(self) -> int:
+        return self.index.num_buckets if self.bucketed else 1
+
+    def bucket_width(self, bucket: int) -> int:
+        return (self.index.widths[bucket] if self.bucketed
+                else self.index.label_width)
+
+    def buckets_of(self, s, t) -> np.ndarray:
+        if not self.bucketed:
+            return np.zeros(len(s), dtype=np.int32)
+        return dispatch_buckets(self.index, s, t)
+
+    def _run(self, s, t, bucket: int, want_argmin: bool):
+        s = jnp.asarray(s, jnp.float32)
+        t = jnp.asarray(t, jnp.float32)
+        if self.bucketed:
+            return query_batch_at_bucket(self.index, s, t, bucket=bucket,
+                                         use_kernels=self.use_kernels,
+                                         want_argmin=want_argmin)
+        fn = query_batch_argmin if want_argmin else query_batch
+        return fn(self.index, s, t, use_kernels=self.use_kernels)
+
+    def batch(self, s, t, bucket: int = 0) -> np.ndarray:
+        return self._run(s, t, bucket, want_argmin=False)
+
+    def batch_argmin(self, s, t, bucket: int = 0):
+        return self._run(s, t, bucket, want_argmin=True)
+
+    def warmup(self, batch_size: int, want_argmin: bool = False) -> None:
+        """Trace every per-bucket jit entry once with the serving shape.
+
+        ``want_argmin=True`` additionally traces the argmin (path
+        extraction) entries — they are separate jit cache entries, so
+        without this the first ``query_paths`` batch pays XLA compile
+        inside the timed serving loop.
+        """
+        z = jnp.zeros((batch_size, 2), jnp.float32)
+        for b in range(self.num_buckets):
+            self._run(z, z, b, want_argmin=False).block_until_ready()
+            if want_argmin:
+                jax.block_until_ready(self._run(z, z, b, want_argmin=True))
+
+    def device_bytes(self) -> int:
+        return self.index.device_bytes()
+
+
+class JnpEngine(DeviceEngine):
+    name = "jnp"
+    use_kernels = False
+
+
+class PallasEngine(DeviceEngine):
+    name = "pallas"
+    use_kernels = True
+
+
+def make_engine(index, backend: str = "jnp") -> QueryEngine:
+    """Engine factory.  ``index``: EHLIndex (host backend, or auto-packed
+    bucketed for device backends), PackedIndex, or BucketedIndex."""
+    if backend == "host":
+        if not isinstance(index, EHLIndex):
+            raise TypeError("host backend needs the host-side EHLIndex")
+        return HostEngine(index)
+    if backend == "jnp":
+        return JnpEngine(index)
+    if backend == "pallas":
+        return PallasEngine(index)
+    raise ValueError(f"unknown backend {backend!r} "
+                     "(expected host | jnp | pallas)")

@@ -1,0 +1,189 @@
+"""Bucketed packed layout: oracle agreement, memory win, serving parity.
+
+Covers the ISSUE acceptance properties at test scale (rooms-S):
+
+* ``BucketedIndex`` query distances match the exact host oracle on a
+  budget-compressed index (1e-4, float32 vs float64);
+* bucketed dispatch is *bitwise* identical to the single-slab jnp engine
+  (same arithmetic per label slot, extra slots are inf/HUB_PAD padding);
+* total device bytes of the bucketed layout never exceed the single slab,
+  and the per-bucket slot accounting is consistent;
+* PathServer bucket routing + batched path extraction over the engines.
+"""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core.compression import compress_to_fraction
+from repro.core.grid import build_ehl
+from repro.core.packed import (HUB_PAD, bucket_width, dispatch_buckets,
+                               pack_bucketed, pack_index, query_batch,
+                               query_batch_argmin, query_batch_at_bucket,
+                               query_batch_bucketed, slab_device_bytes)
+from repro.core.query import path_length, query
+from repro.serving.engine import PathServer
+from repro.serving.query_engine import HostEngine, make_engine
+
+
+@pytest.fixture(scope="module")
+def compressed(scene_s, graph_s, hl_s, queries_s):
+    idx = build_ehl(scene_s, cell_size=2.0, graph=graph_s, hl=hl_s)
+    truth = np.array([query(idx, s, t, want_path=False)[0]
+                      for s, t in zip(queries_s.s, queries_s.t)])
+    compress_to_fraction(idx, 0.2)
+    return idx, truth
+
+
+def test_bucket_width_is_pow2_multiple_of_lane():
+    assert bucket_width(1, lane=128) == 128
+    assert bucket_width(128, lane=128) == 128
+    assert bucket_width(129, lane=128) == 256
+    assert bucket_width(700, lane=128) == 1024
+
+
+def test_bucketed_layout_consistency(compressed):
+    idx, _ = compressed
+    bx = pack_bucketed(idx)
+    counts = idx.packed_label_counts()
+    assert bx.num_regions == len(counts)
+    rb = np.asarray(bx.region_bucket)
+    rr = np.asarray(bx.region_row)
+    for i, c in enumerate(counts):
+        k, row = int(rb[i]), int(rr[i])
+        # region sits in the smallest bucket that holds it, fully copied
+        assert bx.widths[k] == bucket_width(max(1, int(c)))
+        hub_row = np.asarray(bx.hub_ids[k][row])
+        assert (hub_row != HUB_PAD).sum() == c
+    used, total = bx.label_slots()
+    assert used == int(counts.sum())
+    assert used <= total
+
+
+def test_bucketed_device_bytes_at_most_single_slab(compressed):
+    idx, _ = compressed
+    pk = pack_index(idx)
+    bx = pack_bucketed(idx)
+    assert bx.device_bytes() <= pk.device_bytes()
+    # the analytic estimates (used to report layout footprints without
+    # materializing them) are exact
+    assert slab_device_bytes(idx) == pk.device_bytes()
+    from repro.core.packed import bucketed_device_bytes
+    assert bucketed_device_bytes(idx) == bx.device_bytes()
+    # padding waste accounting agrees with the byte win
+    used_b, total_b = bx.label_slots()
+    used_p, total_p = pk.label_slots()
+    assert used_b == used_p            # same live labels, different padding
+    assert total_b <= total_p
+
+
+def test_bucketed_matches_host_oracle(compressed, queries_s):
+    idx, truth = compressed
+    bx = pack_bucketed(idx)
+    d = query_batch_bucketed(bx, queries_s.s, queries_s.t)
+    np.testing.assert_allclose(d, truth, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("use_kernels", [False, True])
+def test_bucketed_bitwise_matches_single_slab(compressed, queries_s,
+                                              use_kernels):
+    idx, _ = compressed
+    pk = pack_index(idx)
+    bx = pack_bucketed(idx)
+    full = np.asarray(query_batch(pk, jnp.asarray(queries_s.s),
+                                  jnp.asarray(queries_s.t),
+                                  use_kernels=use_kernels))
+    buck = query_batch_bucketed(bx, queries_s.s, queries_s.t,
+                                use_kernels=use_kernels)
+    np.testing.assert_array_equal(buck, full)
+
+
+def test_bucketed_random_points_match_oracle(compressed, scene_s, graph_s):
+    """Property-style sweep: fresh random free points, several seeds."""
+    from repro.core.geometry import random_free_points
+    idx, _ = compressed
+    bx = pack_bucketed(idx)
+    for seed in (3, 17, 91):
+        rng = np.random.default_rng(seed)
+        s = random_free_points(scene_s, 16, rng)
+        t = random_free_points(scene_s, 16, rng)
+        truth = np.array([query(idx, si, ti, want_path=False)[0]
+                          for si, ti in zip(s, t)])
+        d = query_batch_bucketed(bx, s, t)
+        np.testing.assert_allclose(d, truth, rtol=1e-4, atol=1e-4)
+
+
+def test_dispatch_buckets_cover_every_query(compressed, queries_s):
+    idx, _ = compressed
+    bx = pack_bucketed(idx)
+    b = dispatch_buckets(bx, queries_s.s, queries_s.t)
+    assert b.shape == (len(queries_s.s),)
+    assert (b >= 0).all() and (b < bx.num_buckets).all()
+    # per-bucket entry point agrees with the routed wrapper on its own group
+    for k in np.unique(b):
+        m = b == k
+        d_k = np.asarray(query_batch_at_bucket(
+            bx, jnp.asarray(queries_s.s[m].astype(np.float32)),
+            jnp.asarray(queries_s.t[m].astype(np.float32)), bucket=int(k)))
+        d_r = query_batch_bucketed(bx, queries_s.s[m], queries_s.t[m])
+        np.testing.assert_array_equal(d_r, d_k)
+
+
+def test_bucketed_argmin_matches_single_slab(compressed, queries_s):
+    idx, truth = compressed
+    pk = pack_index(idx)
+    bx = pack_bucketed(idx)
+    ds, cs, vs, hs, vt = (np.asarray(a) for a in query_batch_argmin(
+        pk, jnp.asarray(queries_s.s), jnp.asarray(queries_s.t)))
+    db, cb, vb, hb, vtb = query_batch_bucketed(bx, queries_s.s, queries_s.t,
+                                               want_argmin=True)
+    np.testing.assert_array_equal(db, ds)
+    np.testing.assert_array_equal(cb, cs)
+    m = ~cb & np.isfinite(db)          # reachable, not co-visible
+    np.testing.assert_array_equal(vb[m], vs[m])
+    np.testing.assert_array_equal(hb[m], hs[m])
+    np.testing.assert_array_equal(vtb[m], vt[m])
+    assert (vb[m] >= 0).all() and (vtb[m] >= 0).all()
+
+
+def test_path_server_bucket_routing(compressed, queries_s):
+    idx, truth = compressed
+    bx = pack_bucketed(idx)
+    srv = PathServer(bx, batch_size=16)
+    srv.warmup()
+    d = srv.query(queries_s.s, queries_s.t)
+    np.testing.assert_allclose(d, truth, rtol=1e-4, atol=1e-4)
+    assert srv.stats.queries == len(truth)
+    per = srv.stats.per_bucket
+    assert per and sum(b.queries for b in per.values()) == len(truth)
+    for b in per.values():
+        assert 0.0 < b.occupancy <= 1.0
+        assert b.width in bx.widths
+
+
+def test_path_server_paths_are_optimal(compressed, queries_s):
+    idx, truth = compressed
+    bx = pack_bucketed(idx)
+    srv = PathServer(bx, batch_size=16)
+    d, paths = srv.query_paths(queries_s.s, queries_s.t, host_index=idx)
+    np.testing.assert_allclose(d, truth, rtol=1e-4, atol=1e-4)
+    for di, p in zip(d, paths):
+        if np.isfinite(di):
+            assert abs(path_length(p) - di) < 1e-3
+        else:
+            assert p == []
+
+
+def test_engine_backends_agree(compressed, queries_s):
+    idx, truth = compressed
+    bx = pack_bucketed(idx)
+    host = make_engine(idx, backend="host")
+    assert isinstance(host, HostEngine)
+    d_host = host.batch(queries_s.s, queries_s.t)
+    d_jnp = PathServer(make_engine(bx, backend="jnp"), batch_size=16).query(
+        queries_s.s, queries_s.t)
+    d_pal = PathServer(make_engine(bx, backend="pallas"), batch_size=16).query(
+        queries_s.s, queries_s.t)
+    np.testing.assert_allclose(d_host, truth, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(d_jnp, truth, rtol=1e-4, atol=1e-4)
+    np.testing.assert_array_equal(d_pal, d_jnp)

@@ -143,15 +143,14 @@ def test_narrow_view_bucketed_correctness(scene_s, graph_s, hl_s, queries_s):
     import jax.numpy as jnp
     from repro.core.grid import build_ehl
     from repro.core.compression import compress_to_fraction
-    from repro.core.packed import (pack_index, narrow_view, query_batch,
+    from repro.core.packed import (pack_index, pack_bucketed, query_batch,
                                    query_batch_bucketed)
     idx = build_ehl(scene_s, 2.0, graph=graph_s, hl=hl_s)
     compress_to_fraction(idx, 0.3)
     pk = pack_index(idx)
-    nv, ok = narrow_view(pk, 128)
+    bx = pack_bucketed(idx)
     s = jnp.asarray(queries_s.s.astype("float32"))
     t = jnp.asarray(queries_s.t.astype("float32"))
     full = query_batch(pk, s, t)
-    buck = query_batch_bucketed(pk, nv, ok, s, t)
-    np.testing.assert_allclose(np.asarray(buck), np.asarray(full),
-                               rtol=1e-6, atol=1e-6)
+    buck = query_batch_bucketed(bx, s, t)
+    np.testing.assert_allclose(buck, np.asarray(full), rtol=0, atol=0)

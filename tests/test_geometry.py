@@ -2,6 +2,7 @@
 
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # test dep (pyproject [test]); skip, not error
 from hypothesis import given, settings, strategies as st
 
 from repro.core.geometry import (Scene, points_strictly_inside, visible,

@@ -8,6 +8,7 @@ BlockSpec/padding plumbing.
 import numpy as np
 import pytest
 import jax.numpy as jnp
+pytest.importorskip("hypothesis")  # test dep (pyproject [test]); skip, not error
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels import ops
