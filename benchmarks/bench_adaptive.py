@@ -1,0 +1,93 @@
+"""Adaptive index lifecycle bench — what a hot-swap costs and buys.
+
+Serves a Cluster-k workload the index was NOT compressed for, lets the
+manager adapt, and reports:
+
+* swap pipeline costs (host merge loop, repack+warmup, probe validation);
+* expected per-query join cost (mean dispatch-width^2) on the live
+  workload: uniform-score artifact vs the adapted workload-aware one at the
+  same device-byte budget;
+* serving latency before vs after the swap, same engine generation
+  accounting the serving stack reports (``ServeStats``).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from repro.core import bucketed_device_bytes, cluster_queries
+from repro.indexing import IndexManager
+from repro.serving import PathServer, expected_join_cost
+
+from . import common
+
+OUT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "artifacts")
+
+
+def _served_us(srv, s, t, reps: int = 3) -> float:
+    best = np.inf
+    for _ in range(reps):
+        srv.stats.seconds = 0.0
+        srv.stats.queries = 0
+        srv.query(s, t)
+        best = min(best, srv.stats.us_per_query)
+    return best
+
+
+def run(map_name: str = "rooms-M", budget: float = 0.25, quick: bool = False):
+    n = 300 if quick else 1000
+    ctx = common.suite(map_name)
+    idx, _ = common.fresh_ehl_cached(ctx)
+    budget_bytes = int(bucketed_device_bytes(idx) * budget)
+
+    mgr = IndexManager(idx, budget_bytes, batch_size=256,
+                       min_queries=n // 2, replan_threshold=0.10, seed=23)
+    srv = PathServer(mgr.engine, batch_size=256, recorder=mgr.recorder)
+    srv.warmup()
+
+    qs = cluster_queries(ctx.scene, ctx.graph, 4, n, seed=301,
+                         require_path=False)
+    s = qs.s.astype(np.float32)
+    t = qs.t.astype(np.float32)
+
+    uniform_engine = mgr.engine.current
+    jc_uniform = expected_join_cost(uniform_engine, s, t)
+    us_before = _served_us(srv, s, t)
+
+    swapped = mgr.maybe_adapt()
+    rec = mgr.history[-1] if mgr.history else None
+    jc_adapted = expected_join_cost(mgr.engine.current, s, t)
+    us_after = _served_us(srv, s, t)
+
+    rows = [common.emit(
+        f"adaptive/{map_name}/serve", us_after,
+        f"us_before_swap={us_before:.1f};swapped={swapped};"
+        f"joincost_uniform={jc_uniform:.0f};joincost_adapted={jc_adapted:.0f};"
+        f"device_mb={mgr.device_bytes() / 1e6:.2f};"
+        f"budget_mb={budget_bytes / 1e6:.2f}")]
+    if rec is not None:
+        rows.append(common.emit(
+            f"adaptive/{map_name}/swap_cost", 0.0,
+            f"kind={rec.kind};build_s={rec.build_s:.3f};"
+            f"pack_s={rec.pack_s:.3f};validate_s={rec.validate_s:.3f};"
+            f"merges={rec.merges};regions={rec.regions};"
+            f"probe_max_err={rec.probe_max_err:.2e}"))
+
+    os.makedirs(OUT, exist_ok=True)
+    payload = dict(map=map_name, budget_frac=budget,
+                   budget_bytes=budget_bytes, swapped=bool(swapped),
+                   us_before=us_before, us_after=us_after,
+                   joincost_uniform=jc_uniform, joincost_adapted=jc_adapted,
+                   lifecycle=mgr.stats(),
+                   history=[dataclass_dict(r) for r in mgr.history])
+    json.dump(payload, open(os.path.join(OUT, "adaptive.json"), "w"),
+              indent=1, default=str)
+    return rows
+
+
+def dataclass_dict(rec) -> dict:
+    import dataclasses
+    return dataclasses.asdict(rec)

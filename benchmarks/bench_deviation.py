@@ -7,8 +7,8 @@ clusters (y in 100/80/50/20).
 
 from __future__ import annotations
 
-from repro.core.workload import cluster_queries, mixed_queries, \
-    uniform_queries, workload_scores
+from repro.core import (cluster_queries, mixed_queries, uniform_queries,
+                        workload_scores)
 
 from . import common
 

@@ -13,8 +13,8 @@ import os
 
 import numpy as np
 
-from repro.core.packed import pack_bucketed, slab_device_bytes, slab_label_slots
-from repro.core.workload import cluster_queries, workload_scores
+from repro.core import (cluster_queries, pack_bucketed, slab_device_bytes,
+                        slab_label_slots, workload_scores)
 
 from . import common
 
@@ -50,9 +50,10 @@ def run(map_name="rooms-M", budget=0.05, clusters=(2, 4, 8), quick=False):
     for k in clusters:
         hist = cluster_queries(ctx.scene, ctx.graph, k, 1500, seed=71 + k,
                                require_path=False)
-        idx, _, _ = common.ehl_star(ctx, budget)
+        idx, _, _ = common.ehl_star_cached(ctx, budget)
         scores = workload_scores(idx, hist)
-        idx, _, _ = common.ehl_star(ctx, budget, scores=scores, alpha=0.2)
+        idx, _, _ = common.ehl_star_cached(ctx, budget, scores=scores,
+                                           alpha=0.2)
 
         sizes = _region_size_per_cell(idx)
         hot = scores > 1.0

@@ -12,8 +12,7 @@ import time
 
 import numpy as np
 
-from repro.core.visgraph import astar
-from repro.core.workload import cluster_queries, workload_scores
+from repro.core import astar, cluster_queries, workload_scores
 
 from . import common
 

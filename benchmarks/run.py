@@ -25,7 +25,8 @@ def main(argv=None) -> None:
                     help="the paper-scale sweep (3 maps x 6 budgets x 4 "
                          "query sets; ~1h on one CPU core)")
     ap.add_argument("--only", default="",
-                    help="comma list: table5,table6,fig5,kernels,roofline")
+                    help="comma list: table5,table6,fig5,kernels,ehlperf,"
+                         "adaptive,roofline")
     args = ap.parse_args(argv)
     only = set(args.only.split(",")) if args.only else None
 
@@ -58,6 +59,9 @@ def main(argv=None) -> None:
     if want("ehlperf"):
         from . import bench_ehl_perf
         bench_ehl_perf.run(quick=True)
+    if want("adaptive"):
+        from . import bench_adaptive
+        bench_adaptive.run(quick=args.quick or not args.full)
 
     if want("roofline"):
         art = os.path.join(os.path.dirname(os.path.abspath(__file__)),

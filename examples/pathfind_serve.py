@@ -7,21 +7,27 @@ reports throughput plus per-bucket routing stats — the paper's online phase
 as a service.
 
     PYTHONPATH=src python examples/pathfind_serve.py --budget 0.2 --clusters 2
+
+``--adaptive`` instead runs the closed-loop demo (DESIGN.md §8): serve a
+clustered workload, shift it mid-run, and watch the index manager capture
+the live distribution, recompress under the device-byte budget, and
+hot-swap the artifact with zero downtime:
+
+    PYTHONPATH=src python examples/pathfind_serve.py --adaptive \
+        --map rooms-S --queries 250 --budget 0.4 --rounds 6
 """
 
 import argparse
+import sys
 
 import numpy as np
 
-from repro.core import build_ehl, build_visgraph, compress_to_fraction
-from repro.core.maps import make_map
-from repro.core.packed import (bucketed_device_bytes, pack_bucketed,
-                               pack_index, plan_buckets, slab_device_bytes)
-from repro.core.query import path_length
-from repro.core.workload import (cluster_queries, uniform_queries,
-                                 workload_scores)
-from repro.serving.engine import PathServer
-from repro.serving.query_engine import make_engine
+from repro.core import (build_ehl, build_visgraph, bucketed_device_bytes,
+                        cluster_queries, compress_to_fraction, make_map,
+                        pack_bucketed, pack_index, path_length, plan_buckets,
+                        slab_device_bytes, uniform_queries, workload_scores)
+from repro.indexing import IndexManager
+from repro.serving import PathServer, expected_join_cost, make_engine
 
 
 def main():
@@ -42,8 +48,23 @@ def main():
     ap.add_argument("--paths", type=int, default=0,
                     help="also extract N full paths via the batched argmin "
                          "engine and verify their lengths")
+    ap.add_argument("--adaptive", action="store_true",
+                    help="adaptive serving demo: live workload capture -> "
+                         "budgeted recompression -> zero-downtime hot-swap "
+                         "(repro.indexing); shifts the workload mid-run")
+    ap.add_argument("--rounds", type=int, default=8,
+                    help="[adaptive] serving rounds (workload shifts at "
+                         "the midpoint)")
+    ap.add_argument("--min-swaps", type=int, default=1,
+                    help="[adaptive] exit nonzero unless at least this many "
+                         "hot-swaps were published (CI smoke gate)")
+    ap.add_argument("--async-swap", action="store_true",
+                    help="[adaptive] build/validate/swap on a background "
+                         "thread instead of between rounds")
     args = ap.parse_args()
     backend = "pallas" if args.kernels else args.backend
+    if args.adaptive:
+        return run_adaptive(args, backend)
 
     scene = make_map(args.map, seed=0)
     graph = build_visgraph(scene)
@@ -117,6 +138,106 @@ def main():
                   default=0.0)
         print(f"extracted {n} paths via batched argmin ({backend}); "
               f"max |len(path) - d| = {err:.2e}")
+
+
+def run_adaptive(args, backend: str) -> None:
+    """Closed-loop demo: the served workload shifts mid-run and the index
+    manager recompresses + hot-swaps to follow it, holding the device-byte
+    budget throughout.  Exits nonzero unless >= --min-swaps swaps happened
+    with answers stable across every swap boundary (the CI smoke gate)."""
+    scene = make_map(args.map, seed=0)
+    graph = build_visgraph(scene)
+    index = build_ehl(scene, cell_size=2.0, graph=graph)
+    budget = int(bucketed_device_bytes(index) * args.budget)
+
+    # validate_tol=0: a candidate only goes live if the probe answers are
+    # *bitwise* identical, so the smoke gate below (np.array_equal across
+    # every swap boundary) is checking the same criterion the manager
+    # enforces — merging/splitting preserves each winning label's exact
+    # float arithmetic, so zero tolerance is attainable, and any candidate
+    # that misses it is aborted rather than published
+    mgr = IndexManager(index, budget, backend=backend,
+                       batch_size=args.batch,
+                       min_queries=max(64, args.queries // 4),
+                       replan_threshold=0.10, probe_n=64, seed=17,
+                       validate_tol=0.0)
+    uniform_engine = mgr.engine.current    # generation-0 uniform-score ref
+    srv = PathServer(mgr.engine, batch_size=args.batch,
+                     recorder=mgr.recorder)
+    srv.warmup()
+    print(f"adaptive: budget={budget / 1e6:.2f} MB "
+          f"(x{args.budget:.2f} of uncompressed artifact), "
+          f"initial device={mgr.device_bytes() / 1e6:.2f} MB, "
+          f"backend={backend}")
+
+    k = max(2, args.clusters)
+    half = max(1, args.rounds // 2)
+    phases = [cluster_queries(scene, graph, k, args.queries, seed=101,
+                              require_path=False),
+              cluster_queries(scene, graph, k, args.queries, seed=202,
+                              require_path=False)]
+    failures = []
+    lat = {0: [], 1: []}
+    for rnd in range(args.rounds):
+        phase = 0 if rnd < half else 1
+        qs = phases[phase]
+        srv.stats.seconds = 0.0
+        srv.stats.queries = 0
+        srv.query(qs.s.astype(np.float32), qs.t.astype(np.float32))
+        lat[phase].append(srv.stats.us_per_query)
+
+        probe_pre = mgr.probe_answers()
+        if args.async_swap:
+            mgr.maybe_adapt(block=False)
+            mgr.join()                      # bound the demo's swap count
+            swapped = mgr.generation > srv.stats.generation
+        else:
+            swapped = mgr.maybe_adapt()
+        if swapped:
+            probe_post = mgr.probe_answers()
+            both_inf = (~np.isfinite(probe_pre)) & (~np.isfinite(probe_post))
+            stable = np.array_equal(np.where(both_inf, 0, probe_pre),
+                                    np.where(both_inf, 0, probe_post))
+            if not stable:
+                failures.append(f"round {rnd}: probe answers changed "
+                                "across swap boundary")
+            if mgr.device_bytes() > budget:
+                failures.append(f"round {rnd}: swapped-in artifact "
+                                f"{mgr.device_bytes()}B over budget")
+        rec = mgr.history[-1] if swapped else None
+        print(f"round {rnd} phase {phase}: "
+              f"{srv.stats.us_per_query:7.1f} us/query  "
+              f"device={mgr.device_bytes() / 1e6:5.2f} MB  "
+              f"gen={mgr.generation}"
+              + (f"  SWAP[{rec.kind}] drift={rec.drift:.2f} "
+                 f"build={rec.build_s:.2f}s pack={rec.pack_s:.2f}s "
+                 f"probe_err={rec.probe_max_err:.1e}" if swapped else ""))
+
+    qs2 = phases[1]
+    s2 = qs2.s.astype(np.float32)
+    t2 = qs2.t.astype(np.float32)
+    jc_adapt = expected_join_cost(mgr.engine.current, s2, t2)
+    jc_uni = expected_join_cost(uniform_engine, s2, t2)
+    p50 = {ph: float(np.median(v)) for ph, v in lat.items() if v}
+    st = mgr.stats()
+    print(f"phase p50 latency: {p50} us/query")
+    print(f"post-swap join cost on shifted workload: adapted={jc_adapt:.0f} "
+          f"vs uniform-score={jc_uni:.0f} (mean dispatch width^2; "
+          f"{'better' if jc_adapt <= jc_uni else 'WORSE'})")
+    print(f"lifecycle: {st}")
+    print(f"serve stats: gen={srv.stats.generation} swaps={srv.stats.swaps} "
+          f"stale_batches={srv.stats.stale_batches}")
+
+    if mgr.swaps < args.min_swaps:
+        failures.append(f"only {mgr.swaps} swaps, need >= {args.min_swaps}")
+    if mgr.validation_failures:
+        failures.append(f"{mgr.validation_failures} probe validations "
+                        "failed (swap aborted)")
+    if failures:
+        print("ADAPTIVE SMOKE FAILED:\n  " + "\n  ".join(failures))
+        sys.exit(1)
+    print(f"adaptive smoke OK: {mgr.swaps} hot-swap(s), answers stable, "
+          f"budget held")
 
 
 if __name__ == "__main__":

@@ -6,10 +6,8 @@
 import numpy as np
 
 from repro.core import (astar, build_ehl, build_visgraph,
-                        compress_to_fraction, query)
-from repro.core.maps import make_map
-from repro.core.packed import pack_index, query_batch
-from repro.core.workload import uniform_queries
+                        compress_to_fraction, make_map, pack_index,
+                        query, query_batch, uniform_queries)
 
 import jax.numpy as jnp
 

@@ -34,6 +34,80 @@ def _flatten(tree):
                      for k in path): leaf for path, leaf in flat}, treedef
 
 
+# ---------------------------------------------------------------------------
+# EHL index blobs — the offline phase as a cacheable artifact
+# ---------------------------------------------------------------------------
+
+def save_ehl_index(path: str, index) -> str:
+    """Serialize an ``EHLIndex``'s merge state (mapper + regions) to one npz.
+
+    The geometry (scene/visgraph/hub labels) is NOT stored — it is cheap to
+    key on and expensive to serialize; :func:`load_ehl_index` reattaches it.
+    What IS stored is exactly what the offline phase (``build_ehl`` +
+    ``compress``) computes: the cell->region mapper and each region's
+    cells / label keys / hub ids / score.  Writes are atomic (tmp +
+    ``os.replace``), matching the checkpoint semantics above.
+    """
+    live = sorted(index.regions)
+    cells, keys, hubs, scores = [], [], [], []
+    cells_off, keys_off, hubs_off = [0], [0], [0]
+    for rid in live:
+        r = index.regions[rid]
+        cells.append(np.asarray(r.cells, dtype=np.int64))
+        keys.append(np.asarray(r.keys, dtype=np.int64))
+        hubs.append(np.asarray(r.hubs, dtype=np.int64))
+        scores.append(r.score)
+        cells_off.append(cells_off[-1] + len(r.cells))
+        keys_off.append(keys_off[-1] + r.keys.size)
+        hubs_off.append(hubs_off[-1] + r.hubs.size)
+    payload = dict(
+        cell_size=np.float64(index.cell_size),
+        nx=np.int64(index.nx), ny=np.int64(index.ny),
+        mapper=np.asarray(index.mapper, dtype=np.int64),
+        rids=np.asarray(live, dtype=np.int64),
+        scores=np.asarray(scores, dtype=np.float64),
+        cells=np.concatenate(cells) if cells else np.zeros(0, np.int64),
+        keys=np.concatenate(keys) if keys else np.zeros(0, np.int64),
+        hubs=np.concatenate(hubs) if hubs else np.zeros(0, np.int64),
+        cells_off=np.asarray(cells_off, dtype=np.int64),
+        keys_off=np.asarray(keys_off, dtype=np.int64),
+        hubs_off=np.asarray(hubs_off, dtype=np.int64))
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        np.savez(f, **payload)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+    return path
+
+
+def load_ehl_index(path: str, scene, graph, hl):
+    """Reconstruct an ``EHLIndex`` from :func:`save_ehl_index` + geometry.
+
+    The caller supplies the scene / visibility graph / hub labels the blob
+    was built from (cache keys must guarantee this — see
+    ``benchmarks.common.ehl_star_cached``).
+    """
+    from repro.core.grid import EHLIndex, Region
+
+    z = np.load(path)
+    regions = {}
+    rids = z["rids"]
+    co, ko, ho = z["cells_off"], z["keys_off"], z["hubs_off"]
+    for i, rid in enumerate(rids):
+        regions[int(rid)] = Region(
+            rid=int(rid),
+            cells=list(z["cells"][co[i]:co[i + 1]]),
+            keys=z["keys"][ko[i]:ko[i + 1]],
+            hubs=z["hubs"][ho[i]:ho[i + 1]],
+            score=float(z["scores"][i]))
+    return EHLIndex(scene=scene, graph=graph, hl=hl,
+                    cell_size=float(z["cell_size"]),
+                    nx=int(z["nx"]), ny=int(z["ny"]),
+                    mapper=z["mapper"].copy(), regions=regions)
+
+
 def save(ckpt_dir: str, step: int, tree, *, host_id: int = 0,
          n_hosts: int = 1) -> str:
     """Save a pytree of (possibly sharded) jax arrays. Returns final path."""

@@ -11,6 +11,20 @@ from .visgraph import VisGraph, build_visgraph, astar       # noqa: F401
 from .hublabel import HubLabels, build_hub_labels           # noqa: F401
 from .grid import EHLIndex, Region, build_ehl, LABEL_BYTES  # noqa: F401
 from .compression import (compress, compress_to_fraction,   # noqa: F401
+                          compress_incremental,
+                          compress_to_device_budget,
+                          rescore_regions,
                           CompressionStats, jaccard)
 from .query import query, query_distance, path_length       # noqa: F401
+from .query import unwind_path                              # noqa: F401
+from .packed import (PackedIndex, BucketedIndex,            # noqa: F401
+                     pack_index, pack_bucketed, plan_buckets,
+                     slab_device_bytes, slab_label_slots,
+                     bucketed_device_bytes,
+                     query_batch, query_batch_argmin,
+                     query_batch_bucketed, dispatch_buckets)
+from .workload import (QuerySet, make_clusters,             # noqa: F401
+                       cluster_queries, uniform_queries, mixed_queries,
+                       historical_workload, workload_scores)
+from .maps import make_map                                  # noqa: F401
 from . import maps, workload                                # noqa: F401

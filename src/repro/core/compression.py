@@ -36,6 +36,7 @@ class CompressionStats:
     merges: int
     regions: int
     hit_single_region: bool
+    device_bytes: int | None = None   # set by compress_to_device_budget
 
 
 def jaccard(a: np.ndarray, b: np.ndarray) -> float:
@@ -88,6 +89,18 @@ def merge_regions(index: EHLIndex, e: Region, r: Region) -> int:
     return LABEL_BYTES * (before - e.n_labels)
 
 
+def rescore_regions(index: EHLIndex, cell_scores: np.ndarray) -> None:
+    """``initializeScores`` over the *current* region set.
+
+    Region score = sum of its member-cell scores, so re-scoring an already
+    merged index with the cell scores it was merged under is a no-op — which
+    is what lets :func:`compress_incremental` re-enter the loop with a fresh
+    workload without resetting the merge state.
+    """
+    for r in index.regions.values():
+        r.score = float(sum(cell_scores[c] for c in r.cells))
+
+
 def compress(index: EHLIndex, budget_bytes: int,
              cell_scores: np.ndarray | None = None,
              alpha: float = 0.0,
@@ -97,11 +110,15 @@ def compress(index: EHLIndex, budget_bytes: int,
     cell_scores: optional [C] array of initial per-cell scores
     (``initializeScores``); defaults to all-ones.  Workload-aware callers pass
     ``1 + w_c`` and ``alpha=0.2``.
+
+    The loop itself never assumes singleton start regions, so this *is* the
+    incremental form — :func:`compress_incremental` is the explicitly-named
+    entry point the adaptive planner uses to resume a partially merged index
+    under a new budget / workload.
     """
     initial = index.label_memory()
     if cell_scores is not None:
-        for r in index.regions.values():
-            r.score = float(sum(cell_scores[c] for c in r.cells))
+        rescore_regions(index, cell_scores)
     heap = [(r.score, r.rid, r.version) for r in index.regions.values()]
     heapq.heapify(heap)
 
@@ -137,3 +154,66 @@ def compress_to_fraction(index: EHLIndex, fraction: float, **kw
                          ) -> CompressionStats:
     """EHL*-x convenience: budget = x% of the index's current label memory."""
     return compress(index, int(index.label_memory() * fraction), **kw)
+
+
+def compress_incremental(index: EHLIndex, budget_bytes: int,
+                         cell_scores: np.ndarray | None = None,
+                         alpha: float = 0.2,
+                         verbose: bool = False) -> CompressionStats:
+    """Resume Algorithm 1 from the index's **current** region set.
+
+    The adaptive-serving entry point: instead of rebuilding from singleton
+    cells (``build_ehl`` + :func:`compress`), re-score the live regions with
+    a freshly recorded workload and keep merging until the — possibly
+    smaller — budget holds again.  Already under budget -> zero merges, a
+    cheap no-op.  Merging is correctness-preserving regardless of scores
+    (label sets only ever grow per cell), so a resumed index answers every
+    query identically to a fresh one at the same region partition.
+
+    Merges cannot be undone here; when the planner decides newly hot cells
+    need *finer* regions it restores the pre-merge snapshot
+    (:meth:`EHLIndex.snapshot_regions`) and re-enters this same loop.
+    """
+    return compress(index, budget_bytes, cell_scores=cell_scores,
+                    alpha=alpha, verbose=verbose)
+
+
+def compress_to_device_budget(index: EHLIndex, device_budget_bytes: int,
+                              cell_scores: np.ndarray | None = None,
+                              alpha: float = 0.0, lane: int = 128,
+                              max_rounds: int = 16,
+                              verbose: bool = False) -> CompressionStats:
+    """Merge until the packed *bucketed artifact* fits ``device_budget_bytes``.
+
+    Algorithm 1's budget constrains host label memory; what serving actually
+    pays is ``BucketedIndex.device_bytes()`` — labels plus bucket padding,
+    mapper, indirection and edge tensors.  Outer loop: measure the analytic
+    device footprint (``bucketed_device_bytes``, no device allocation),
+    derive a proportional label-byte target, resume the incremental merge,
+    repeat until the artifact fits or one region remains.
+    """
+    from .packed import bucketed_device_bytes
+
+    initial = index.label_memory()
+    merges = 0
+    hit_single = False
+    if cell_scores is not None:
+        rescore_regions(index, cell_scores)
+    for _ in range(max_rounds):
+        dev = bucketed_device_bytes(index, lane)
+        if dev <= device_budget_bytes or len(index.regions) <= 1:
+            break
+        # labels shrink, fixed overhead (mapper/edges) doesn't: aim the label
+        # budget proportionally below the overshoot, with a 5% safety margin
+        ratio = min(0.95 * device_budget_bytes / dev, 0.95)
+        target = int(index.label_memory() * ratio)
+        st = compress(index, target, alpha=alpha, verbose=verbose)
+        merges += st.merges
+        if st.hit_single_region:
+            hit_single = True
+            break
+    return CompressionStats(
+        initial_bytes=initial, final_bytes=index.label_memory(),
+        budget=device_budget_bytes, merges=merges,
+        regions=len(index.regions), hit_single_region=hit_single,
+        device_bytes=bucketed_device_bytes(index, lane))

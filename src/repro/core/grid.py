@@ -104,6 +104,33 @@ class EHLIndex:
         return np.array([self.regions[rid].n_labels for rid in live],
                         dtype=np.int64)
 
+    # ------------------------------------------------------------- snapshot
+    def snapshot_regions(self) -> dict:
+        """Cheap copy of the merge state (mapper + regions) for later restore.
+
+        ``keys``/``hubs`` arrays and ``packed`` caches are shared by
+        reference — merges *replace* them (``np.union1d`` allocates, the
+        cache is dropped), never mutate in place — so a snapshot costs O(R)
+        small objects, not a deep copy of the label data.  The adaptive
+        planner snapshots the freshly built singleton index once and
+        restores it when a workload shift demands re-splitting regions that
+        earlier merges coarsened (merges are irreversible in Algorithm 1).
+        """
+        return dict(
+            mapper=self.mapper.copy(),
+            regions={rid: (list(r.cells), r.keys, r.hubs, r.score,
+                           r.version, r.packed)
+                     for rid, r in self.regions.items()})
+
+    def restore_regions(self, snap: dict) -> None:
+        """Reset mapper + regions to a :meth:`snapshot_regions` state."""
+        self.mapper = snap["mapper"].copy()
+        self.regions = {
+            rid: Region(rid=rid, cells=list(cells), keys=keys, hubs=hubs,
+                        score=score, version=version, packed=packed)
+            for rid, (cells, keys, hubs, score, version, packed)
+            in snap["regions"].items()}
+
     # ---------------------------------------------------------------- pack
     def pack_region(self, r: Region) -> dict:
         """Attach distances / coords to a region's label keys (cached)."""

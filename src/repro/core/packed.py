@@ -320,12 +320,21 @@ def bucketed_device_bytes(index: EHLIndex, lane: int = 128) -> int:
             + 2 * Ep * 2 * 4)
 
 
-def pack_bucketed(index: EHLIndex, lane: int = 128) -> BucketedIndex:
+def pack_bucketed(index: EHLIndex, lane: int = 128,
+                  reuse_edges_from: "BucketedIndex | PackedIndex | None" = None
+                  ) -> BucketedIndex:
     """Freeze a host index into width-bucketed slabs (DESIGN.md §4).
 
     Each region goes into the smallest power-of-two-multiple-of-``lane``
     bucket that holds its label count, so padding waste is < 50% per region
     instead of being governed by the single largest merged region.
+
+    ``reuse_edges_from``: repack-from-index fast path for the adaptive
+    hot-swap loop — the scene (and thus the padded edge tensors) never
+    changes across recompressions, so the previous artifact's device-resident
+    ``edges_a``/``edges_b`` are aliased instead of re-uploaded.  Region packs
+    untouched since the last pack are already reused via the per-region
+    ``packed`` cache (:meth:`EHLIndex.pack_region`).
     """
     live, packs = _host_packs(index)
     counts, widths, region_bucket = plan_buckets(index, lane)
@@ -343,7 +352,10 @@ def pack_bucketed(index: EHLIndex, lane: int = 128) -> BucketedIndex:
         slabs.append(arrs)
 
     mapper = _cell_mapper(index, live)
-    ea, eb = _pack_edges(index, lane)
+    if reuse_edges_from is not None:
+        ea, eb = reuse_edges_from.edges_a, reuse_edges_from.edges_b
+    else:
+        ea, eb = _pack_edges(index, lane)
     return BucketedIndex(
         hub_ids=tuple(jnp.asarray(a[0]) for a in slabs),
         via_xy=tuple(jnp.asarray(a[1]) for a in slabs),

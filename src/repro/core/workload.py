@@ -27,7 +27,16 @@ class QuerySet:
     t: np.ndarray     # [N,2]
 
 
-def _free_points_in_rect(scene: Scene, rect, n, rng) -> np.ndarray:
+def _free_points_in_rect(scene: Scene, rect, n, rng,
+                         strict: bool = True) -> np.ndarray:
+    """Rejection-sample ``n`` free-space points inside ``rect``.
+
+    ``strict=True`` (default) raises if the rect cannot yield ``n`` free
+    points after 200 sampling rounds — a short array silently propagating
+    into a QuerySet used to surface much later as shape errors downstream.
+    ``strict=False`` is the probing mode (``make_clusters`` testing whether
+    a candidate rect has enough free space at all).
+    """
     x0, y0, x1, y1 = rect
     out = np.zeros((n, 2))
     got = 0
@@ -39,6 +48,12 @@ def _free_points_in_rect(scene: Scene, rect, n, rng) -> np.ndarray:
         take = min(len(keep), n - got)
         out[got:got + take] = keep[:take]
         got += take
+    if got < n and strict:
+        raise RuntimeError(
+            f"only {got}/{n} free points found in rect "
+            f"({x0:.2f},{y0:.2f})-({x1:.2f},{y1:.2f}) after 200 sampling "
+            "rounds — the rect is (almost) fully covered by obstacles; "
+            "pick a different cluster rect or pass strict=False to probe")
     return out[:got]
 
 
@@ -53,7 +68,7 @@ def make_clusters(scene: Scene, k: int, rng: np.random.Generator,
         x0 = min(max(c[0] - sw / 2, 0.0), w - sw)
         y0 = min(max(c[1] - sh / 2, 0.0), h - sh)
         rect = (x0, y0, x0 + sw, y0 + sh)
-        if len(_free_points_in_rect(scene, rect, 4, rng)) >= 4:
+        if len(_free_points_in_rect(scene, rect, 4, rng, strict=False)) >= 4:
             rects.append(rect)
     return rects
 
@@ -68,10 +83,10 @@ def cluster_queries(scene: Scene, graph: VisGraph, k: int, n: int,
     while len(S) < n and guard < 50 * n:
         guard += 1
         ra, rb = rng.integers(0, k, size=2)
+        # rects are pre-validated by make_clusters to contain free points,
+        # so strict sampling raising here is a real error, not bad luck
         ps = _free_points_in_rect(scene, rects[ra], 1, rng)
         pt = _free_points_in_rect(scene, rects[rb], 1, rng)
-        if len(ps) == 0 or len(pt) == 0:
-            continue
         if require_path:
             d, _ = astar(graph, ps[0], pt[0])
             if not np.isfinite(d):

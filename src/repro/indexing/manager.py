@@ -1,0 +1,247 @@
+"""Adaptive index lifecycle — traffic in, re-optimized artifact out.
+
+:class:`IndexManager` owns the closed loop the rest of the subsystem plugs
+into:
+
+1. **capture** — ``PathServer`` feeds every answered query into the
+   manager's :class:`~repro.indexing.recorder.WorkloadRecorder`;
+2. **plan** — :meth:`maybe_adapt` asks the
+   :class:`~repro.indexing.planner.BudgetPlanner` whether the recorded
+   distribution / budget warrants recompression (incremental resume or
+   replan-from-snapshot, see planner docs);
+3. **build** — the host-side merge loop + repack run *off* the serving path
+   (inline or on a background thread), reusing the device-resident edge
+   tensors (``pack_bucketed(reuse_edges_from=...)``) and the per-region
+   pack caches;
+4. **validate** — the candidate artifact answers a fixed probe query set
+   and must match the live artifact (compression preserves optimality, so
+   any disagreement beyond float tolerance aborts the swap);
+5. **swap** — the candidate's jit entries are warmed at the serving batch
+   shape, then :class:`~repro.indexing.swap.SwappableEngine` publishes it
+   atomically; in-flight requests drain on the old artifact before its
+   device buffers drop.
+
+The budget is a device-byte budget on the packed artifact — what serving
+actually allocates — and is enforced on every candidate before it goes live.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+
+import numpy as np
+
+from repro.core.grid import EHLIndex
+from repro.core.packed import pack_bucketed, query_batch_bucketed
+from repro.serving.query_engine import make_engine
+
+from .planner import BudgetPlanner, PlanDecision
+from .recorder import WorkloadRecorder
+from .swap import SwappableEngine
+
+
+@dataclasses.dataclass
+class SwapRecord:
+    """One adaptation attempt (successful swap or aborted candidate)."""
+    generation: int         # generation the attempt produced (or would have)
+    kind: str               # planner decision kind
+    drift: float
+    reason: str
+    merges: int
+    regions: int
+    label_bytes: int
+    device_bytes: int
+    build_s: float          # recompression (host merge loop)
+    pack_s: float           # repack + engine warmup
+    validate_s: float
+    probe_max_err: float
+    swapped: bool
+    abort_reason: str = ""  # non-empty iff the candidate was rejected
+
+
+class IndexManager:
+    """Budgeted, self-adapting index behind a hot-swappable engine.
+
+    ``index``: the freshly built (uncompressed) host ``EHLIndex`` — the
+    manager snapshots its singleton region set as the replan base, performs
+    the initial budget fit with uniform scores, and packs the first serving
+    artifact.  Wire ``manager.engine`` and ``manager.recorder`` into a
+    ``PathServer`` and call :meth:`maybe_adapt` between serving rounds (or
+    with ``block=False`` to build/validate/swap on a background thread).
+    """
+
+    def __init__(self, index: EHLIndex, device_budget_bytes: int,
+                 backend: str = "jnp", lane: int = 128, alpha: float = 0.2,
+                 batch_size: int = 256, probe=None, probe_n: int = 64,
+                 validate_tol: float = 1e-4, min_queries: int = 256,
+                 replan_threshold: float = 0.15, halflife: float = 4000.0,
+                 warm_argmin: bool = False, seed: int = 0):
+        if backend not in ("jnp", "pallas"):
+            raise ValueError("IndexManager serves packed artifacts; "
+                             f"backend must be jnp|pallas, got {backend!r}")
+        from repro.core.compression import compress_to_device_budget
+        from repro.core.packed import bucketed_device_bytes
+
+        self.host_index = index
+        self._base = index.snapshot_regions()
+        self.backend = backend
+        self.lane = lane
+        self.batch_size = batch_size
+        self.validate_tol = float(validate_tol)
+        self.warm_argmin = warm_argmin
+        self.recorder = WorkloadRecorder.for_index(index, halflife=halflife)
+        self.planner = BudgetPlanner(device_budget_bytes, alpha=alpha,
+                                     min_queries=min_queries,
+                                     replan_threshold=replan_threshold,
+                                     lane=lane)
+        # initial fit: uniform scores (no traffic observed yet)
+        if bucketed_device_bytes(index, lane) > device_budget_bytes:
+            compress_to_device_budget(index, device_budget_bytes, lane=lane)
+        bx0 = pack_bucketed(index, lane=lane)
+        if bx0.device_bytes() > device_budget_bytes:
+            raise ValueError(
+                f"device budget {device_budget_bytes}B is infeasible: after "
+                f"budget-driven merging the artifact still needs "
+                f"{bx0.device_bytes()}B (mapper + edge tensors are a fixed "
+                "floor no amount of merging removes)")
+        self.engine = SwappableEngine(make_engine(bx0, backend=backend))
+        if probe is not None:
+            self._probe_s = np.asarray(probe[0], np.float32)
+            self._probe_t = np.asarray(probe[1], np.float32)
+        else:
+            from repro.core.geometry import random_free_points
+            rng = np.random.default_rng(seed)
+            pts = random_free_points(index.scene, 2 * probe_n, rng)
+            self._probe_s = pts[:probe_n].astype(np.float32)
+            self._probe_t = pts[probe_n:].astype(np.float32)
+        self.history: list[SwapRecord] = []
+        self.validation_failures = 0
+        self._thread: threading.Thread | None = None
+        self._adapt_lock = threading.Lock()
+
+    # ------------------------------------------------------------- queries
+    @property
+    def generation(self) -> int:
+        return self.engine.generation
+
+    @property
+    def swaps(self) -> int:
+        return self.engine.swaps
+
+    def device_bytes(self) -> int:
+        return self.engine.device_bytes()
+
+    def device_budget_bytes(self) -> int:
+        return self.planner.device_budget_bytes
+
+    def set_budget(self, device_budget_bytes: int) -> None:
+        self.planner.set_budget(device_budget_bytes)
+
+    def probe_set(self) -> tuple[np.ndarray, np.ndarray]:
+        """The fixed probe queries swap validation runs against."""
+        return self._probe_s, self._probe_t
+
+    def probe_answers(self) -> np.ndarray:
+        """Current live artifact's answers on the probe set."""
+        return self._answers(self.engine.artifact)
+
+    def _answers(self, artifact) -> np.ndarray:
+        return np.asarray(query_batch_bucketed(
+            artifact, self._probe_s, self._probe_t,
+            use_kernels=self.engine.use_kernels))
+
+    # ------------------------------------------------------------ adaptation
+    def maybe_adapt(self, block: bool = True) -> bool:
+        """One adaptation step; True iff a swap was published (blocking mode).
+
+        ``block=False`` runs build/validate/swap on a background thread and
+        returns immediately (False); poll :attr:`swaps` / call :meth:`join`.
+        A build already in flight makes this a no-op.
+        """
+        if self._thread is not None and self._thread.is_alive():
+            return False
+        decision = self.planner.decide(self.recorder, self.host_index)
+        if decision.kind == "skip":
+            return False
+        if block:
+            return self._adapt(decision)
+        self._thread = threading.Thread(target=self._adapt, args=(decision,),
+                                        name="index-manager-adapt",
+                                        daemon=True)
+        self._thread.start()
+        return False
+
+    def join(self, timeout: float | None = None) -> None:
+        """Wait for a background adaptation to finish."""
+        if self._thread is not None:
+            self._thread.join(timeout)
+
+    def _adapt(self, decision: PlanDecision) -> bool:
+        with self._adapt_lock:          # one rebuild at a time
+            # pre-adapt snapshot: an aborted candidate must not leave
+            # host_index (the unwinding mirror of the live artifact) or the
+            # planner baseline describing an index that never went live
+            pre = self.host_index.snapshot_regions()
+            t0 = time.perf_counter()
+            stats = self.planner.execute(decision, self.host_index,
+                                         self.recorder, self._base)
+            build_s = time.perf_counter() - t0
+
+            t0 = time.perf_counter()
+            bx = pack_bucketed(self.host_index, lane=self.lane,
+                               reuse_edges_from=self.engine.artifact)
+            candidate = make_engine(bx, backend=self.backend)
+            # warm the candidate's jit entries off the serving path so the
+            # first post-swap batch pays zero compile time
+            candidate.warmup(self.batch_size, want_argmin=self.warm_argmin)
+            pack_s = time.perf_counter() - t0
+
+            t0 = time.perf_counter()
+            d_live = self._answers(self.engine.artifact)
+            d_cand = self._answers(bx)
+            both_inf = ~np.isfinite(d_live) & ~np.isfinite(d_cand)
+            # np.max, not nanmax: a NaN-vs-finite disagreement must
+            # propagate into max_err and abort, not be skipped over
+            err = np.abs(np.where(both_inf, 0.0, d_cand - d_live))
+            max_err = float(np.max(err)) if err.size else 0.0
+            ok = bool(np.isfinite(max_err)) and max_err <= self.validate_tol
+            abort = "" if ok else (f"probe mismatch {max_err:.3e} > "
+                                   f"{self.validate_tol:.1e}")
+            # the documented guarantee: no over-budget candidate goes live
+            budget = self.planner.device_budget_bytes
+            if ok and bx.device_bytes() > budget:
+                ok = False
+                abort = (f"candidate {bx.device_bytes()}B over device "
+                         f"budget {budget}B")
+            validate_s = time.perf_counter() - t0
+
+            rec = SwapRecord(
+                generation=self.engine.generation + 1, kind=decision.kind,
+                drift=decision.drift, reason=decision.reason,
+                merges=stats.merges, regions=stats.regions,
+                label_bytes=stats.final_bytes,
+                device_bytes=bx.device_bytes(), build_s=build_s,
+                pack_s=pack_s, validate_s=validate_s,
+                probe_max_err=max_err, swapped=ok, abort_reason=abort)
+            self.history.append(rec)
+            if not ok:
+                self.validation_failures += 1
+                self.planner.discard()
+                self.host_index.restore_regions(pre)    # roll back mirror
+                return False
+            self.engine.swap(candidate)
+            self.planner.commit()
+            return True
+
+    def stats(self) -> dict:
+        """Lifecycle summary for logs / benches."""
+        return dict(generation=self.generation, swaps=self.swaps,
+                    drops=self.engine.drops,
+                    retired_pending=len(self.engine.retired_generations()),
+                    validation_failures=self.validation_failures,
+                    recorded_queries=self.recorder.queries,
+                    device_bytes=self.device_bytes(),
+                    device_budget_bytes=self.planner.device_budget_bytes,
+                    attempts=len(self.history))

@@ -1,0 +1,129 @@
+"""Budgeted replanning — when and how to re-optimize the index for traffic.
+
+The planner closes the gap between the paper's one-shot workload-aware
+compression and a live system: it compares the recorded workload against the
+one the serving artifact was last compressed under and picks the cheapest
+sufficient action:
+
+* ``skip``        — distribution stable and the artifact fits the budget;
+* ``incremental`` — the artifact overflows a (possibly shrunk) budget but
+  the distribution is stable: resume Algorithm 1 from the *current* region
+  set (``compress_incremental``), no rebuild;
+* ``replan``      — the distribution drifted past threshold: restore the
+  base singleton-region snapshot and recompress with fresh Eq. 5 scores.
+  Merges are irreversible, so re-splitting regions that earlier merges
+  coarsened requires re-entering the loop from the snapshot — still far
+  cheaper than ``build_ehl`` (no visibility polygons, no hub labels).
+
+Drift is total-variation distance between normalized workloads; the budget
+is a **device-byte** budget on the packed bucketed artifact
+(``compress_to_device_budget``), i.e. what serving actually allocates.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.compression import (CompressionStats, compress_incremental,
+                                    compress_to_device_budget)
+
+
+@dataclasses.dataclass
+class PlanDecision:
+    kind: str           # "skip" | "incremental" | "replan"
+    drift: float        # TV distance vs. the last planned-under workload
+    reason: str
+
+
+class BudgetPlanner:
+    """Decide + execute recompression against a recorded workload."""
+
+    def __init__(self, device_budget_bytes: int, alpha: float = 0.2,
+                 min_queries: int = 256, replan_threshold: float = 0.15,
+                 lane: int = 128):
+        self.device_budget_bytes = int(device_budget_bytes)
+        self.alpha = float(alpha)
+        self.min_queries = int(min_queries)
+        self.replan_threshold = float(replan_threshold)
+        self.lane = int(lane)
+        self._planned_dist: np.ndarray | None = None
+        self._planned_at_queries = 0
+        self._pending: tuple | None = None
+
+    # ------------------------------------------------------------ decisions
+    def drift(self, recorder) -> float:
+        """TV distance between recorder state and the last plan's workload."""
+        if self._planned_dist is None:
+            return 1.0
+        return 0.5 * float(np.abs(recorder.distribution()
+                                  - self._planned_dist).sum())
+
+    def decide(self, recorder, index) -> PlanDecision:
+        from repro.core.packed import bucketed_device_bytes
+
+        dev = bucketed_device_bytes(index, self.lane)
+        fresh = recorder.queries - self._planned_at_queries
+        if fresh < self.min_queries:
+            if dev > self.device_budget_bytes:
+                return PlanDecision("incremental", 0.0,
+                                    f"artifact {dev}B over budget "
+                                    f"{self.device_budget_bytes}B")
+            return PlanDecision("skip", 0.0,
+                                f"only {fresh} queries since last plan")
+        d = self.drift(recorder)
+        if d >= self.replan_threshold:
+            return PlanDecision("replan", d,
+                                f"workload drift {d:.3f} >= "
+                                f"{self.replan_threshold}")
+        if dev > self.device_budget_bytes:
+            return PlanDecision("incremental", d,
+                                f"artifact {dev}B over budget "
+                                f"{self.device_budget_bytes}B")
+        return PlanDecision("skip", d, f"drift {d:.3f} below threshold")
+
+    # ------------------------------------------------------------ execution
+    def execute(self, decision: PlanDecision, index, recorder,
+                base_snapshot: dict | None = None) -> CompressionStats:
+        """Mutate ``index`` per the decision; returns compression stats.
+
+        ``replan`` needs the base snapshot (singleton regions, taken right
+        after ``build_ehl``); ``incremental`` resumes in place.
+
+        The plan is *pending* until :meth:`commit` — drift keeps being
+        measured against the last **published** plan, so an aborted swap
+        (validation failure) doesn't trick the planner into thinking the
+        workload was already served.  Call :meth:`discard` on abort.
+        """
+        scores = recorder.scores()
+        if decision.kind == "replan":
+            if base_snapshot is None:
+                raise ValueError("replan needs the base region snapshot")
+            index.restore_regions(base_snapshot)
+            stats = compress_to_device_budget(
+                index, self.device_budget_bytes, cell_scores=scores,
+                alpha=self.alpha, lane=self.lane)
+        elif decision.kind == "incremental":
+            stats = compress_to_device_budget(
+                index, self.device_budget_bytes, cell_scores=scores,
+                alpha=self.alpha, lane=self.lane)
+        else:
+            raise ValueError(f"nothing to execute for {decision.kind!r}")
+        self._pending = (recorder.distribution(), recorder.queries)
+        return stats
+
+    def commit(self) -> None:
+        """Adopt the pending plan's workload as the planned-under baseline
+        (call after the artifact built from it was published)."""
+        if self._pending is not None:
+            self._planned_dist, self._planned_at_queries = self._pending
+            self._pending = None
+
+    def discard(self) -> None:
+        """Drop the pending plan (the candidate was rejected)."""
+        self._pending = None
+
+    def set_budget(self, device_budget_bytes: int) -> None:
+        """Tighten/relax the budget at runtime (next decide() sees it)."""
+        self.device_budget_bytes = int(device_budget_bytes)

@@ -55,6 +55,12 @@ class ServeStats:
     queries: int = 0
     seconds: float = 0.0
     per_bucket: dict = dataclasses.field(default_factory=dict)
+    # adaptive serving (repro.indexing): engine generation observability.
+    # per_bucket is reset whenever a new generation is first served — bucket
+    # ids/widths are meaningless across artifact generations.
+    generation: int = 0     # generation the last request was served on
+    swaps: int = 0          # generation changes observed by this server
+    stale_batches: int = 0  # batches that finished on a superseded artifact
 
     @property
     def us_per_query(self) -> float:
@@ -63,6 +69,19 @@ class ServeStats:
     @property
     def qps(self) -> float:
         return self.queries / max(1e-9, self.seconds)
+
+
+def expected_join_cost(engine, s, t) -> float:
+    """Expected per-query join cost on a workload: mean dispatch-width^2.
+
+    The O(W^2) label join is what a query pays at its dispatch width; a
+    workload-aware index keeps hot regions in narrow buckets, so this is
+    the metric the adaptive demo/bench compare against the uniform-score
+    index (smaller = cheaper hot path).
+    """
+    buckets = engine.buckets_of(s, t)
+    widths = np.array([engine.bucket_width(int(k)) for k in buckets])
+    return float(np.mean(widths.astype(np.float64) ** 2))
 
 
 class PathServer:
@@ -74,7 +93,8 @@ class PathServer:
     """
 
     def __init__(self, index, batch_size: int = 256,
-                 use_kernels: bool = False, mesh=None, batch_sharding=None):
+                 use_kernels: bool = False, mesh=None, batch_sharding=None,
+                 recorder=None):
         if isinstance(index, QueryEngine):
             if use_kernels and not getattr(index, "use_kernels", False):
                 raise ValueError("use_kernels=True conflicts with the given "
@@ -88,15 +108,18 @@ class PathServer:
         self.batch_size = batch_size
         self.stats = ServeStats()
         self._sharding = batch_sharding
+        # adaptive serving: every answered query's endpoints feed the live
+        # workload histogram (repro.indexing.WorkloadRecorder)
+        self._recorder = recorder
 
     def warmup(self, paths: bool = False):
         """Trace the jit entries (``paths=True`` also warms the argmin
         entries used by ``query_paths``)."""
         self.engine.warmup(self.batch_size, want_argmin=paths)
 
-    def _bucket_stats(self, bucket: int) -> BucketStats:
+    def _bucket_stats(self, bucket: int, eng) -> BucketStats:
         if bucket not in self.stats.per_bucket:
-            width = getattr(self.engine, "bucket_width", lambda b: 0)(bucket)
+            width = getattr(eng, "bucket_width", lambda b: 0)(bucket)
             self.stats.per_bucket[bucket] = BucketStats(width=width)
         return self.stats.per_bucket[bucket]
 
@@ -106,41 +129,65 @@ class PathServer:
         Sort by dispatch bucket (stable), answer each bucket's sub-batches
         at that bucket's width, write results back through the permutation.
         Returns a list of [N]-arrays (1 for distances, 5 for argmin).
+
+        The engine is *pinned* for the whole request: under a hot-swapping
+        engine the routing key (``buckets_of``) and every batch must resolve
+        against one artifact generation — a swap published mid-request takes
+        effect on the next request, and the superseded artifact stays alive
+        until this one drains (``QueryEngine.pin``).
         """
         n = len(s)
         bs = self.batch_size
-        pad = getattr(self.engine, "static_shapes", True)
-        buckets = self.engine.buckets_of(s, t) if n else np.zeros(0, np.int32)
-        outs = empty_results(n, want_argmin)
-        for k in np.unique(buckets):
-            idxs = np.nonzero(buckets == k)[0]
-            bstats = self._bucket_stats(int(k))
-            tb0 = time.perf_counter()
-            for lo in range(0, len(idxs), bs):
-                sel = idxs[lo:lo + bs]
-                # jitted engines get fixed [bs, 2] shapes (no recompiles);
-                # host-loop engines take the ragged tail as-is
-                rows = bs if pad else len(sel)
-                sb = np.zeros((rows, 2), np.float32)
-                tb = np.zeros((rows, 2), np.float32)
-                sb[:len(sel)] = s[sel]
-                tb[:len(sel)] = t[sel]
-                sj, tj = (jnp.asarray(sb), jnp.asarray(tb)) if pad \
-                    else (sb, tb)
-                if self._sharding is not None:
-                    sj = jax.device_put(sj, self._sharding)
-                    tj = jax.device_put(tj, self._sharding)
-                if want_argmin:
-                    res = self.engine.batch_argmin(sj, tj, bucket=int(k))
-                else:
-                    res = (self.engine.batch(sj, tj, bucket=int(k)),)
-                for o, r in zip(outs, res):
-                    o[sel] = np.asarray(r)[:len(sel)]
-                bstats.batches += 1
-                bstats.slots += rows
-                self.stats.batches += 1
-            bstats.queries += len(idxs)
-            bstats.seconds += time.perf_counter() - tb0
+        b0 = self.stats.batches
+        with self.engine.pin() as eng:
+            # the pinned engine carries the generation it belongs to
+            # (stamped by SwappableEngine.swap); plain engines report 0
+            gen0 = eng.generation
+            if gen0 != self.stats.generation:
+                # new artifact since the last request: its bucket plan is
+                # unrelated to the previous generation's, so per-bucket
+                # stats restart (they describe the *current* routing)
+                self.stats.swaps += max(0, gen0 - self.stats.generation)
+                self.stats.per_bucket = {}
+            pad = getattr(eng, "static_shapes", True)
+            buckets = eng.buckets_of(s, t) if n else np.zeros(0, np.int32)
+            outs = empty_results(n, want_argmin)
+            for k in np.unique(buckets):
+                idxs = np.nonzero(buckets == k)[0]
+                bstats = self._bucket_stats(int(k), eng)
+                tb0 = time.perf_counter()
+                for lo in range(0, len(idxs), bs):
+                    sel = idxs[lo:lo + bs]
+                    # jitted engines get fixed [bs, 2] shapes (no
+                    # recompiles); host-loop engines take the ragged tail
+                    rows = bs if pad else len(sel)
+                    sb = np.zeros((rows, 2), np.float32)
+                    tb = np.zeros((rows, 2), np.float32)
+                    sb[:len(sel)] = s[sel]
+                    tb[:len(sel)] = t[sel]
+                    sj, tj = (jnp.asarray(sb), jnp.asarray(tb)) if pad \
+                        else (sb, tb)
+                    if self._sharding is not None:
+                        sj = jax.device_put(sj, self._sharding)
+                        tj = jax.device_put(tj, self._sharding)
+                    if want_argmin:
+                        res = eng.batch_argmin(sj, tj, bucket=int(k))
+                    else:
+                        res = (eng.batch(sj, tj, bucket=int(k)),)
+                    for o, r in zip(outs, res):
+                        o[sel] = np.asarray(r)[:len(sel)]
+                    bstats.batches += 1
+                    bstats.slots += rows
+                    self.stats.batches += 1
+                bstats.queries += len(idxs)
+                bstats.seconds += time.perf_counter() - tb0
+        if self.engine.generation != gen0:
+            # swap published while we served on the old pin: these batches
+            # completed on a superseded artifact (answers still exact)
+            self.stats.stale_batches += self.stats.batches - b0
+        self.stats.generation = gen0    # generation this request served on
+        if self._recorder is not None and n:
+            self._recorder.record(s, t)
         return outs
 
     def query(self, s: np.ndarray, t: np.ndarray) -> np.ndarray:
@@ -170,6 +217,8 @@ class PathServer:
             d = np.array([path_length(p) for p in paths], dtype=np.float32)
             self.stats.seconds += time.perf_counter() - t0
             self.stats.queries += len(s)
+            if self._recorder is not None and len(s):
+                self._recorder.record(s, t)
             return d, paths
         if host_index is None:
             raise ValueError("query_paths on a device engine needs the host "

@@ -21,6 +21,7 @@ unwinding) variant is the same code path with a flag, not a fork.
 from __future__ import annotations
 
 import abc
+import contextlib
 
 import numpy as np
 
@@ -45,10 +46,21 @@ class QueryEngine(abc.ABC):
 
     name: str = "abstract"
     static_shapes = False   # True: batches must be padded to a fixed size
+    generation = 0          # bumped by hot-swapping engines (repro.indexing)
 
-    @property
-    def num_buckets(self) -> int:
-        return 1
+    @contextlib.contextmanager
+    def pin(self):
+        """Pin a consistent engine for a multi-call request.
+
+        ``PathServer`` routes one request through several engine calls
+        (``buckets_of`` + one ``batch`` per bucket group); under a
+        hot-swapping engine (``repro.indexing.SwappableEngine``) those calls
+        must all hit the *same* artifact — bucket ids are meaningless across
+        generations.  Static engines just yield themselves; swappable
+        engines yield the pinned generation's engine and keep its device
+        buffers alive until every pin drains.
+        """
+        yield self
 
     def buckets_of(self, s, t) -> np.ndarray:
         """[B] dispatch bucket per query (0 for single-bucket engines)."""

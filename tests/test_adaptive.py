@@ -1,0 +1,273 @@
+"""Adaptive index subsystem: recorder -> planner -> hot-swap correctness."""
+
+import numpy as np
+import pytest
+
+from repro.core.compression import compress_to_device_budget
+from repro.core.grid import build_ehl
+from repro.core.packed import bucketed_device_bytes, pack_bucketed
+from repro.core.workload import cluster_queries
+from repro.indexing import (BudgetPlanner, IndexManager, SwappableEngine,
+                            WorkloadRecorder)
+from repro.serving.engine import PathServer
+from repro.serving.query_engine import QueryEngine
+
+
+# ---------------------------------------------------------------- recorder
+
+def test_recorder_counts_decay_and_bounds():
+    rec = WorkloadRecorder(nx=4, ny=4, cell_size=1.0, halflife=10.0)
+    s = np.array([[0.5, 0.5], [3.5, 3.5]])
+    t = np.array([[1.5, 0.5], [3.5, 0.5]])
+    rec.record(s, t)
+    w = rec.workload()
+    assert w.shape == (16,)                      # bounded: one slot per cell
+    assert rec.queries == 2
+    assert w.sum() == pytest.approx(4.0)         # 4 endpoints, no decay yet
+    assert w[0] == 1.0 and w[1] == 1.0           # s cells
+    # out-of-bounds points clip into the grid instead of crashing
+    rec.record(np.array([[99.0, -5.0]]), np.array([[2.2, 2.2]]))
+    assert rec.workload().sum() == pytest.approx(
+        4.0 * 0.5 ** (1 / 10.0) + 2.0)           # old mass aged one query
+    d = rec.distribution()
+    assert d.sum() == pytest.approx(1.0)
+    rec.reset()
+    assert rec.workload().sum() == 0.0 and rec.queries == 0
+    # empty recorder -> uniform distribution, scores all-ones
+    assert (rec.scores() == 1.0).all()
+    assert rec.distribution().sum() == pytest.approx(1.0)
+
+
+def test_recorder_shift_overtakes_history():
+    rec = WorkloadRecorder(nx=2, ny=1, cell_size=1.0, halflife=50.0)
+    left = (np.full((100, 2), 0.2), np.full((100, 2), 0.2))
+    right = (np.full((100, 2), 1.8), np.full((100, 2), 1.8))
+    for _ in range(3):
+        rec.record(*left)
+    for _ in range(6):
+        rec.record(*right)
+    w = rec.workload()
+    assert w[1] > w[0]                           # shifted mass dominates
+
+
+# ------------------------------------------------------------ swap engine
+
+class _ConstEngine(QueryEngine):
+    name = "const"
+
+    def __init__(self, val):
+        self.val = val
+
+    def batch(self, s, t, bucket: int = 0):
+        return np.full(len(s), self.val, np.float32)
+
+    def device_bytes(self) -> int:
+        return 100
+
+
+def test_swappable_engine_generations_and_drain():
+    a, b = _ConstEngine(1.0), _ConstEngine(2.0)
+    sw = SwappableEngine(a)
+    assert sw.generation == 0
+    z = np.zeros((3, 2), np.float32)
+    assert (sw.batch(z, z) == 1.0).all()
+
+    cm = sw.pin()
+    eng = cm.__enter__()                 # in-flight request pinned to gen 0
+    assert eng is a
+    sw.swap(b)
+    assert sw.generation == 1 and sw.swaps == 1
+    # the pinned request still runs on the old artifact...
+    assert (eng.batch(z, z) == 1.0).all()
+    # ...while new requests see the new one
+    assert (sw.batch(z, z) == 2.0).all()
+    assert sw.retired_generations() == [0]       # old engine parked, alive
+    assert sw.drops == 0
+    cm.__exit__(None, None, None)                # drain
+    assert sw.retired_generations() == []
+    assert sw.drops == 1                         # device buffers released
+
+    # swap with nothing pinned drops the old engine immediately
+    sw.swap(_ConstEngine(3.0))
+    assert sw.drops == 2 and sw.generation == 2
+
+
+# ---------------------------------------------------------------- planner
+
+def test_planner_decisions(scene_s, graph_s, hl_s):
+    idx = build_ehl(scene_s, 2.0, graph=graph_s, hl=hl_s)
+    budget = int(bucketed_device_bytes(idx) * 0.5)
+    compress_to_device_budget(idx, budget)
+    rec = WorkloadRecorder.for_index(idx)
+    pl = BudgetPlanner(budget, min_queries=50, replan_threshold=0.15)
+
+    # too little traffic, artifact fits -> skip
+    assert pl.decide(rec, idx).kind == "skip"
+    # budget shrinks below the artifact -> incremental resume even with no
+    # fresh traffic
+    pl.set_budget(int(budget * 0.6))
+    dec = pl.decide(rec, idx)
+    assert dec.kind == "incremental"
+    st = pl.execute(dec, idx, rec)
+    assert st.device_bytes <= pl.device_budget_bytes
+    assert bucketed_device_bytes(idx) <= pl.device_budget_bytes
+    # now enough clustered traffic -> drift forces a replan
+    qs = cluster_queries(scene_s, graph_s, 2, 80, seed=21, require_path=False)
+    rec.record(qs.s, qs.t)
+    dec2 = pl.decide(rec, idx)
+    assert dec2.kind == "replan" and dec2.drift >= 0.15
+    with pytest.raises(ValueError):
+        pl.execute(dec2, idx, rec, base_snapshot=None)
+
+
+# ------------------------------------------------- manager / hot swap
+
+@pytest.fixture(scope="module")
+def adaptive_setup(scene_s, graph_s, hl_s):
+    idx = build_ehl(scene_s, 2.0, graph=graph_s, hl=hl_s)
+    budget = int(bucketed_device_bytes(idx) * 0.45)
+    mgr = IndexManager(idx, budget, batch_size=32, min_queries=60,
+                       replan_threshold=0.10, probe_n=32, seed=13)
+    srv = PathServer(mgr.engine, batch_size=32, recorder=mgr.recorder)
+    srv.warmup()
+    return mgr, srv, budget
+
+
+def test_hot_swap_answers_identical_and_budget_held(adaptive_setup,
+                                                    scene_s, graph_s):
+    """The acceptance gate: a fixed probe set answers identically right
+    before and right after a swap, and the swapped-in artifact fits the
+    configured device-byte budget."""
+    mgr, srv, budget = adaptive_setup
+    assert mgr.device_bytes() <= budget          # initial fit
+
+    qs = cluster_queries(scene_s, graph_s, 2, 150, seed=31,
+                         require_path=False)
+    srv.query(qs.s.astype(np.float32), qs.t.astype(np.float32))
+
+    ps, pt = mgr.probe_set()
+    d_before = mgr.probe_answers()
+    _, paths_before = srv.query_paths(ps[:12], pt[:12],
+                                      host_index=mgr.host_index)
+    gen0 = mgr.generation
+
+    assert mgr.maybe_adapt() is True             # swap published
+    assert mgr.generation == gen0 + 1
+    assert mgr.validation_failures == 0
+
+    d_after = mgr.probe_answers()
+    both_inf = ~np.isfinite(d_before) & ~np.isfinite(d_after)
+    np.testing.assert_array_equal(np.where(both_inf, 0, d_before),
+                                  np.where(both_inf, 0, d_after))
+    assert mgr.device_bytes() <= budget          # budget survives the swap
+
+    _, paths_after = srv.query_paths(ps[:12], pt[:12],
+                                     host_index=mgr.host_index)
+    for pb, pa in zip(paths_before, paths_after):
+        assert len(pb) == len(pa)
+        if len(pb):
+            np.testing.assert_allclose(np.asarray(pb), np.asarray(pa),
+                                       atol=1e-5)
+
+
+def test_adaptive_join_cost_no_worse_than_uniform(scene_s, graph_s, hl_s):
+    """Post-swap expected join cost (mean dispatch-width^2) on a Cluster-x
+    workload must be <= the uniform-score index at the same budget."""
+    idx = build_ehl(scene_s, 2.0, graph=graph_s, hl=hl_s)
+    budget = int(bucketed_device_bytes(idx) * 0.35)
+    mgr = IndexManager(idx, budget, batch_size=32, min_queries=60,
+                       replan_threshold=0.10, probe_n=16, seed=3)
+    uniform = mgr.engine.current
+
+    qs = cluster_queries(scene_s, graph_s, 2, 200, seed=41,
+                         require_path=False)
+    s = qs.s.astype(np.float32)
+    t = qs.t.astype(np.float32)
+    mgr.recorder.record(s, t)
+    assert mgr.maybe_adapt() is True
+
+    def join_cost(eng):
+        buckets = eng.buckets_of(s, t)
+        widths = np.array([eng.bucket_width(int(k)) for k in buckets])
+        return float(np.mean(widths.astype(np.float64) ** 2))
+
+    assert join_cost(mgr.engine.current) <= join_cost(uniform)
+
+
+def test_serve_stats_track_generation(adaptive_setup, scene_s, graph_s):
+    mgr, srv, _ = adaptive_setup
+    qs = cluster_queries(scene_s, graph_s, 2, 80, seed=51,
+                         require_path=False)
+    srv.query(qs.s.astype(np.float32), qs.t.astype(np.float32))
+    assert srv.stats.generation == mgr.generation
+    assert srv.stats.swaps >= mgr.swaps - 1      # observed via dispatches
+
+
+def test_background_adapt_thread(scene_s, graph_s, hl_s):
+    idx = build_ehl(scene_s, 2.0, graph=graph_s, hl=hl_s)
+    budget = int(bucketed_device_bytes(idx) * 0.5)
+    mgr = IndexManager(idx, budget, batch_size=16, min_queries=40,
+                       replan_threshold=0.10, probe_n=8, seed=29)
+    qs = cluster_queries(scene_s, graph_s, 2, 60, seed=61,
+                         require_path=False)
+    mgr.recorder.record(qs.s, qs.t)
+    assert mgr.maybe_adapt(block=False) is False  # runs on the thread
+    mgr.join(timeout=120.0)
+    assert mgr.swaps == 1 and mgr.validation_failures == 0
+    assert mgr.device_bytes() <= budget
+
+
+def test_aborted_swap_rolls_back_mirror_and_planner(scene_s, graph_s, hl_s):
+    """A rejected candidate must leave no trace: host_index (the unwinding
+    mirror of the live artifact) is restored and the planner keeps measuring
+    drift against the last *published* plan, so adaptation retries instead
+    of wedging on 'skip'."""
+    idx = build_ehl(scene_s, 2.0, graph=graph_s, hl=hl_s)
+    budget = int(bucketed_device_bytes(idx) * 0.5)
+    mgr = IndexManager(idx, budget, batch_size=16, min_queries=40,
+                       replan_threshold=0.10, probe_n=8, seed=5)
+    mapper_before = np.asarray(mgr.host_index.mapper).copy()
+    n_regions = len(mgr.host_index.regions)
+
+    # an unreachable budget: the candidate can never fit, so the budget
+    # gate added after probe validation must abort the swap
+    mgr.set_budget(10_000)
+    assert mgr.maybe_adapt() is False
+    assert mgr.generation == 0 and mgr.swaps == 0
+    assert mgr.validation_failures == 1
+    assert mgr.history[-1].swapped is False
+    assert "over device budget" in mgr.history[-1].abort_reason
+    # mirror rolled back to the live artifact's region partition
+    assert len(mgr.host_index.regions) == n_regions
+    np.testing.assert_array_equal(np.asarray(mgr.host_index.mapper),
+                                  mapper_before)
+    # planner baseline untouched: it still wants to act, not 'skip'
+    assert mgr.planner.decide(mgr.recorder, mgr.host_index).kind != "skip"
+
+    # restoring a feasible budget lets the same manager adapt normally
+    mgr.set_budget(budget)
+    qs = cluster_queries(scene_s, graph_s, 2, 60, seed=71,
+                         require_path=False)
+    mgr.recorder.record(qs.s, qs.t)
+    assert mgr.maybe_adapt() is True
+    assert mgr.device_bytes() <= budget
+
+
+def test_incremental_resume_preserves_answers(scene_s, graph_s, hl_s,
+                                              queries_s):
+    """compress_incremental on an already-merged index keeps every answer
+    (merging is correctness-preserving from any start state)."""
+    from repro.core.compression import compress_incremental, \
+        compress_to_fraction
+    from repro.core.query import query
+
+    idx = build_ehl(scene_s, 2.0, graph=graph_s, hl=hl_s)
+    compress_to_fraction(idx, 0.5)
+    truth = [query(idx, s, t, want_path=False)[0]
+             for s, t in zip(queries_s.s[:15], queries_s.t[:15])]
+    st = compress_incremental(idx, int(idx.label_memory() * 0.5))
+    assert st.merges > 0
+    assert st.final_bytes <= st.budget or st.hit_single_region
+    for (s, t), d0 in zip(zip(queries_s.s[:15], queries_s.t[:15]), truth):
+        d, _ = query(idx, s, t, want_path=False)
+        assert d == pytest.approx(d0, abs=1e-8)

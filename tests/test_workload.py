@@ -1,0 +1,76 @@
+"""Workload construction: cluster rects, histograms, score feasibility."""
+
+import numpy as np
+import pytest
+
+from repro.core.geometry import Scene, points_strictly_inside
+from repro.core.workload import (_free_points_in_rect, cluster_queries,
+                                 historical_workload, make_clusters,
+                                 uniform_queries, workload_scores)
+
+
+def test_make_clusters_rects_in_bounds_with_free_points(scene_s):
+    rng = np.random.default_rng(3)
+    rects = make_clusters(scene_s, k=4, rng=rng)
+    assert len(rects) == 4
+    for x0, y0, x1, y1 in rects:
+        assert 0.0 <= x0 < x1 <= scene_s.width
+        assert 0.0 <= y0 < y1 <= scene_s.height
+        pts = _free_points_in_rect(scene_s, (x0, y0, x1, y1), 4,
+                                   np.random.default_rng(5))
+        assert pts.shape == (4, 2)
+        assert (~points_strictly_inside(scene_s, pts)).all()
+        assert (pts[:, 0] >= x0).all() and (pts[:, 0] <= x1).all()
+        assert (pts[:, 1] >= y0).all() and (pts[:, 1] <= y1).all()
+
+
+def test_free_points_in_rect_strict_raises_on_blocked_rect():
+    """A rect fully inside an obstacle must raise, not silently short-return
+    (the old behavior propagated short arrays into QuerySets)."""
+    square = np.array([[2.0, 2.0], [8.0, 2.0], [8.0, 8.0], [2.0, 8.0]])
+    scene = Scene.build([square], width=10.0, height=10.0)
+    rng = np.random.default_rng(0)
+    with pytest.raises(RuntimeError, match="free points"):
+        _free_points_in_rect(scene, (3.0, 3.0, 7.0, 7.0), 4, rng)
+    # probing mode still returns what it found (here: nothing)
+    got = _free_points_in_rect(scene, (3.0, 3.0, 7.0, 7.0), 4, rng,
+                               strict=False)
+    assert len(got) == 0
+
+
+def test_historical_workload_counts_sum(ehl_s, scene_s, graph_s):
+    qs = uniform_queries(scene_s, graph_s, 25, seed=7, require_path=False)
+    w = historical_workload(ehl_s, qs)
+    assert w.sum() == len(qs.s) + len(qs.t)       # every endpoint counted
+    assert (w >= 0).all() and w.shape == (ehl_s.nx * ehl_s.ny,)
+    scores = workload_scores(ehl_s, qs)
+    assert (scores >= 1.0).all()
+    assert scores.sum() == pytest.approx(w.sum() + ehl_s.nx * ehl_s.ny)
+
+
+def test_cluster_queries_endpoints_in_cluster_rects(scene_s, graph_s):
+    qs = cluster_queries(scene_s, graph_s, k=2, n=30, seed=9,
+                         require_path=False)
+    assert qs.s.shape == (30, 2) and qs.t.shape == (30, 2)
+    assert (~points_strictly_inside(scene_s, qs.s)).all()
+    assert (~points_strictly_inside(scene_s, qs.t)).all()
+
+
+def test_workload_aware_budget_feasibility(scene_s, graph_s, hl_s):
+    """Eq. 5 scores change *which* regions merge, never whether the budget
+    is reachable: both uniform and workload-aware compression must land
+    under the same byte budget."""
+    from repro.core.compression import compress_to_fraction
+    from repro.core.grid import build_ehl
+
+    hist = cluster_queries(scene_s, graph_s, k=2, n=120, seed=4,
+                           require_path=False)
+    idx_u = build_ehl(scene_s, 2.0, graph=graph_s, hl=hl_s)
+    idx_w = build_ehl(scene_s, 2.0, graph=graph_s, hl=hl_s)
+    scores = workload_scores(idx_w, hist)
+    st_u = compress_to_fraction(idx_u, 0.15)
+    st_w = compress_to_fraction(idx_w, 0.15, cell_scores=scores, alpha=0.2)
+    assert st_u.budget == st_w.budget
+    assert st_u.final_bytes <= st_u.budget or st_u.hit_single_region
+    assert st_w.final_bytes <= st_w.budget or st_w.hit_single_region
+    assert idx_w.label_memory() == st_w.final_bytes
