@@ -1,0 +1,114 @@
+"""Sharded serving bench — what region-sharding costs and balances.
+
+Builds the budgeted artifact once, shards it over N (host) devices, and
+reports against the single-device bucketed engine:
+
+* placement quality: per-shard device bytes, imbalance (max/mean), planner
+  rebalance moves;
+* routing mix: same-shard vs cross-shard fraction on uniform and clustered
+  workloads (locality-aware placement should keep clustered traffic
+  same-shard);
+* serving latency through the same PathServer stack, plus a bitwise
+  identity check against the unsharded engine.
+
+On a single CPU device the shards round-robin (placement degenerates but
+every code path runs); under ``XLA_FLAGS=--xla_force_host_platform_
+device_count=N`` the transfers are real.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from repro.core import cluster_queries, pack_bucketed, uniform_queries
+from repro.serving import PathServer, make_engine
+from repro.sharding import ShardPlanner, ShardedQueryEngine
+
+from . import common
+
+OUT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "artifacts")
+
+
+def _served_us(srv, s, t, reps: int = 3) -> float:
+    best = np.inf
+    for _ in range(reps):
+        srv.stats.seconds = 0.0
+        srv.stats.queries = 0
+        srv.query(s, t)
+        best = min(best, srv.stats.us_per_query)
+    return best
+
+
+def _routing_mix(eng: ShardedQueryEngine, s, t) -> float:
+    """Fraction of queries whose two endpoints live on one shard."""
+    keys = eng.buckets_of(s, t)
+    same = sum((lambda ij: ij[0] == ij[1])(eng.router.decode_key(int(k))[:2])
+               for k in keys)
+    return same / max(1, len(keys))
+
+
+def run(map_name: str = "rooms-M", budget: float = 0.3,
+        num_shards: int = 4, quick: bool = False):
+    n = 300 if quick else 1000
+    ctx = common.suite(map_name)
+    idx, _, _ = common.ehl_star_cached(ctx, budget)
+    bx = pack_bucketed(idx)
+
+    planner = ShardPlanner(num_shards)
+    plan = planner.plan(idx)
+    sharded = planner.build(idx, plan)
+    eng = ShardedQueryEngine(sharded)
+    per = sharded.per_shard_bytes()
+
+    qsets = {
+        "Unknown": uniform_queries(ctx.scene, ctx.graph, n, seed=5,
+                                   require_path=False),
+        "Cluster-4": cluster_queries(ctx.scene, ctx.graph, 4, n, seed=6,
+                                     require_path=False),
+    }
+
+    rows = [common.emit(
+        f"sharded/{map_name}/placement", 0.0,
+        f"shards={num_shards};imbalance={sharded.imbalance():.3f};"
+        f"moves={plan.moves};"
+        f"max_shard_mb={max(per) / 1e6:.2f};"
+        f"total_mb={sharded.device_bytes() / 1e6:.2f};"
+        f"single_mb={bx.device_bytes() / 1e6:.2f}")]
+
+    srv_single = PathServer(make_engine(bx), batch_size=256)
+    srv_single.warmup()
+    srv_sharded = PathServer(ShardedQueryEngine(sharded), batch_size=256)
+    srv_sharded.warmup()
+
+    identical = True
+    mix = {}
+    for qname, qs in qsets.items():
+        s = qs.s.astype(np.float32)
+        t = qs.t.astype(np.float32)
+        ref = srv_single.query(s, t)
+        out = srv_sharded.query(s, t)
+        fin = np.isfinite(ref)
+        identical &= bool(
+            np.array_equal(fin, np.isfinite(out))
+            and np.array_equal(np.where(fin, ref, 0),
+                               np.where(fin, out, 0)))
+        mix[qname] = _routing_mix(eng, s, t)
+        us_single = _served_us(srv_single, s, t)
+        us_sharded = _served_us(srv_sharded, s, t)
+        rows.append(common.emit(
+            f"sharded/{map_name}/{qname}", us_sharded,
+            f"us_single={us_single:.1f};same_shard={mix[qname]:.2f};"
+            f"identical={identical}"))
+
+    os.makedirs(OUT, exist_ok=True)
+    json.dump(dict(map=map_name, budget_frac=budget, num_shards=num_shards,
+                   per_shard_bytes=[int(b) for b in per],
+                   imbalance=sharded.imbalance(), moves=plan.moves,
+                   single_device_bytes=int(bx.device_bytes()),
+                   total_bytes=int(sharded.device_bytes()),
+                   same_shard_fraction=mix, identical=bool(identical)),
+              open(os.path.join(OUT, "sharded.json"), "w"), indent=1)
+    return rows

@@ -28,10 +28,11 @@ def run(maps=("rooms-M", "maze-M", "scatter-M"), n_queries=300,
         ctx = common.suite(m)
         qsets = common.query_sets(ctx, n=n_queries)
 
-        # EHL-k baselines
+        # EHL-k baselines (disk-cached: the visibility sweep + hub labels
+        # are built once per (map, cell size), not once per invocation)
         base_mem = None
         for k in (1, 2, 4):
-            idx, t_build = common.fresh_ehl(ctx, k)
+            idx, t_build = common.fresh_ehl_cached(ctx, k)
             mem = idx.label_memory() / 1e6
             if k == 1:
                 base_mem = idx.label_memory()
@@ -41,26 +42,32 @@ def run(maps=("rooms-M", "maze-M", "scatter-M"), n_queries=300,
                     f"table5/{m}/EHL-{k}/{qname}", us,
                     f"mem_mb={mem:.2f};build_s={t_build:.2f}"))
 
-        # EHL*-x (unknown workload)
+        # EHL*-x (unknown workload) — ehl_star_cached compresses from the
+        # cached base build and caches the compressed result per budget, so
+        # repeated runs stop rebuilding the index per budget row; on a hit
+        # stats is None (no compression ran, its budget held when written)
         for frac in budgets:
-            idx, t_build, stats = common.ehl_star(ctx, frac)
+            idx, t_build, stats = common.ehl_star_cached(ctx, frac)
             mem = idx.label_memory() / 1e6
+            budget_ok = (stats is None
+                         or stats.final_bytes <= stats.budget)
             for qname, qs in qsets.items():
                 us = common.time_queries(idx, qs)
                 rows.append(common.emit(
                     f"table5/{m}/EHL*-{int(frac * 100)}/{qname}", us,
                     f"mem_mb={mem:.2f};build_s={t_build:.2f};"
-                    f"budget_ok={stats.final_bytes <= stats.budget}"))
+                    f"budget_ok={budget_ok};cached={stats is None}"))
 
         # workload-aware EHL* (known cluster distribution, paper Fig 1b)
         for k in (2,):
             hist = cluster_queries(ctx.scene, ctx.graph, k, 2000,
                                    seed=77, require_path=False)
             for frac in (budgets if not quick else (0.05,)):
-                idx, t_build, _ = common.ehl_star(ctx, frac)
+                idx, t_build, _ = common.ehl_star_cached(ctx, frac)
                 scores = workload_scores(idx, hist)
-                idx2, t2, _ = common.ehl_star(ctx, frac, scores=scores,
-                                              alpha=0.2)
+                idx2, t2, _ = common.ehl_star_cached(ctx, frac,
+                                                     scores=scores,
+                                                     alpha=0.2)
                 us = common.time_queries(idx2, qsets[f"Cluster-{k}"])
                 rows.append(common.emit(
                     f"table5/{m}/EHL*w-{int(frac * 100)}/Cluster-{k}", us,

@@ -44,11 +44,62 @@ def roofline_table() -> str:
             + open(path).read())
 
 
+def adaptive_table() -> str:
+    """Swap cost vs join-cost savings (benchmarks.bench_adaptive)."""
+    path = os.path.join(HERE, "artifacts", "adaptive.json")
+    head = "### Adaptive serving (workload capture -> recompress -> swap)\n"
+    if not os.path.exists(path):
+        return head + "\n(run `python -m benchmarks.run --only adaptive`)"
+    d = json.load(open(path))
+    rows = [
+        "| map | budget MB | swapped | join cost uniform | join cost "
+        "adapted | us/q before | us/q after |",
+        "|---|---|---|---|---|---|---|",
+        f"| {d['map']} | {d['budget_bytes'] / 1e6:.2f} | {d['swapped']} | "
+        f"{d['joincost_uniform']:.0f} | {d['joincost_adapted']:.0f} | "
+        f"{d['us_before']:.1f} | {d['us_after']:.1f} |",
+    ]
+    for h in d.get("history", []):
+        rows.append(
+            f"| swap gen {h['generation']} ({h['kind']}) | — | "
+            f"{h['swapped']} | build {float(h['build_s']):.2f}s | "
+            f"pack {float(h['pack_s']):.2f}s | "
+            f"validate {float(h['validate_s']):.2f}s | "
+            f"err {h['probe_max_err']} |")
+    return head + "\n" + "\n".join(rows)
+
+
+def sharded_table() -> str:
+    """Placement balance + routing mix (benchmarks.bench_sharded)."""
+    path = os.path.join(HERE, "artifacts", "sharded.json")
+    head = "### Sharded serving (region shards over a device mesh)\n"
+    if not os.path.exists(path):
+        return head + "\n(run `python -m benchmarks.run --only sharded`)"
+    d = json.load(open(path))
+    per = ", ".join(f"{b / 1e6:.2f}" for b in d["per_shard_bytes"])
+    mix = "; ".join(f"{k}: {v:.0%}"
+                    for k, v in d["same_shard_fraction"].items())
+    return head + "\n" + "\n".join([
+        "| map | shards | per-shard MB | imbalance | single-device MB | "
+        "same-shard routing | bitwise identical |",
+        "|---|---|---|---|---|---|---|",
+        f"| {d['map']} | {d['num_shards']} | {per} | "
+        f"{d['imbalance']:.3f} | {d['single_device_bytes'] / 1e6:.2f} | "
+        f"{mix} | {d['identical']} |",
+    ])
+
+
 def main():
-    text = open(EXP).read()
+    if os.path.exists(EXP):
+        text = open(EXP).read()
+    else:
+        text = ("# EXPERIMENTS\n\nGenerated measurement tables "
+                "(`python -m benchmarks.make_tables`); raw CSV comes from "
+                "`python -m benchmarks.run`.\n\n")
     base = text.split(MARK)[0]
     out = (base + MARK + "\n\n" + roofline_table() + "\n\n"
-           + dryrun_table() + "\n")
+           + dryrun_table() + "\n\n" + adaptive_table() + "\n\n"
+           + sharded_table() + "\n")
     open(EXP, "w").write(out)
     print(f"EXPERIMENTS.md updated "
           f"({len(out.splitlines())} lines)")

@@ -15,6 +15,18 @@ hot-swap the artifact with zero downtime:
 
     PYTHONPATH=src python examples/pathfind_serve.py --adaptive \
         --map rooms-S --queries 250 --budget 0.4 --rounds 6
+
+``--shards N`` serves through the region-sharded engine (DESIGN.md §9):
+the bucketed slabs are placed over N devices (forced host devices work:
+``XLA_FLAGS=--xla_force_host_platform_device_count=N``), batches route by
+(shard, bucket), and the answers are checked bitwise against the
+single-device engine — the CI sharded smoke gate:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 PYTHONPATH=src \
+        python examples/pathfind_serve.py --shards 4 --queries 1000
+
+``--shards`` combines with ``--adaptive``: hot-swaps then republish every
+shard atomically under one generation.
 """
 
 import argparse
@@ -28,6 +40,16 @@ from repro.core import (build_ehl, build_visgraph, bucketed_device_bytes,
                         slab_device_bytes, uniform_queries, workload_scores)
 from repro.indexing import IndexManager
 from repro.serving import PathServer, expected_join_cost, make_engine
+
+
+def serving_mesh_or_none(num_shards: int):
+    """A real N-device mesh when the runtime has one, else round-robin."""
+    from repro.launch.mesh import make_serving_mesh
+    try:
+        return make_serving_mesh(num_shards)
+    except ValueError as e:
+        print(f"note: {e}; round-robining shards onto available devices")
+        return None
 
 
 def main():
@@ -48,6 +70,14 @@ def main():
     ap.add_argument("--paths", type=int, default=0,
                     help="also extract N full paths via the batched argmin "
                          "engine and verify their lengths")
+    ap.add_argument("--shards", type=int, default=0,
+                    help="serve through the region-sharded engine over N "
+                         "devices; checks answers bitwise against the "
+                         "single-device engine and per-shard bytes against "
+                         "the per-device cap (CI smoke gate)")
+    ap.add_argument("--shard-tol", type=float, default=1.15,
+                    help="[shards] per-device byte cap as a multiple of "
+                         "total/num_shards")
     ap.add_argument("--adaptive", action="store_true",
                     help="adaptive serving demo: live workload capture -> "
                          "budgeted recompression -> zero-downtime hot-swap "
@@ -65,6 +95,8 @@ def main():
     backend = "pallas" if args.kernels else args.backend
     if args.adaptive:
         return run_adaptive(args, backend)
+    if args.shards > 1:
+        return run_sharded(args, backend)
 
     scene = make_map(args.map, seed=0)
     graph = build_visgraph(scene)
@@ -140,6 +172,78 @@ def main():
               f"max |len(path) - d| = {err:.2e}")
 
 
+def run_sharded(args, backend: str) -> None:
+    """Sharded serving smoke: answers must match the single-device engine
+    bitwise and every shard must respect the per-device byte cap.  Exits
+    nonzero on any violation (the CI gate)."""
+    import jax
+    from repro.sharding import ShardPlanner, ShardedQueryEngine
+
+    if backend == "host":
+        print("--shards needs a device backend (jnp|pallas)")
+        sys.exit(2)
+    scene = make_map(args.map, seed=0)
+    graph = build_visgraph(scene)
+    index = build_ehl(scene, cell_size=2.0, graph=graph)
+    compress_to_fraction(index, args.budget)
+
+    mesh = serving_mesh_or_none(args.shards)
+    planner = ShardPlanner(args.shards, tol=args.shard_tol)
+    plan = planner.plan(index)
+    sharded = planner.build(index, plan)
+    eng = ShardedQueryEngine(sharded, mesh=mesh,
+                             use_kernels=backend == "pallas")
+    bx = pack_bucketed(index)
+    single = make_engine(bx, backend=backend)
+
+    per = sharded.per_shard_bytes()
+    print(f"sharded: {args.shards} shards over "
+          f"{len({str(d) for d in eng.router.devices})} device(s) "
+          f"(runtime has {len(jax.devices())}), "
+          f"plan moves={plan.moves}")
+    print(f"  bytes: total={sharded.device_bytes() / 1e6:.2f} MB "
+          f"(single-device {bx.device_bytes() / 1e6:.2f} MB), "
+          f"imbalance={sharded.imbalance():.3f}")
+
+    qs = uniform_queries(scene, graph, args.queries, seed=33,
+                         require_path=False)
+    s = qs.s.astype(np.float32)
+    t = qs.t.astype(np.float32)
+
+    srv1 = PathServer(single, batch_size=args.batch)
+    srv1.warmup()
+    ref = srv1.query(s, t)
+    srv2 = PathServer(eng, batch_size=args.batch)
+    srv2.warmup()
+    out = srv2.query(s, t)
+    print(f"  single-device: {srv1.stats.us_per_query:.1f} us/query; "
+          f"sharded: {srv2.stats.us_per_query:.1f} us/query "
+          f"({srv2.stats.qps:,.0f} qps)")
+    for st in srv2.stats.per_shard:
+        print(f"  shard {st.shard} [{st.device}]: regions={st.regions} "
+              f"bytes={st.device_bytes / 1e6:.2f}MB occ={st.occupancy:.0%} "
+              f"batches={st.batches} slots={st.slots} "
+              f"gathers_out={st.gathers_out} "
+              f"{st.us_per_slot:.1f} us/slot")
+
+    failures = []
+    fin = np.isfinite(ref)
+    if not (np.array_equal(fin, np.isfinite(out))
+            and np.array_equal(np.where(fin, ref, 0),
+                               np.where(fin, out, 0))):
+        bad = int((np.where(fin, ref, 0) != np.where(fin, out, 0)).sum())
+        failures.append(f"{bad} answers differ from single-device engine")
+    cap = args.shard_tol * sharded.device_bytes() / args.shards
+    if max(per) > cap:
+        failures.append(f"max shard {max(per)}B over per-device cap "
+                        f"{cap:.0f}B")
+    if failures:
+        print("SHARDED SMOKE FAILED:\n  " + "\n  ".join(failures))
+        sys.exit(1)
+    print(f"sharded smoke OK: {len(s)} answers bitwise-identical, "
+          f"per-shard bytes within {args.shard_tol:.2f}x of fair share")
+
+
 def run_adaptive(args, backend: str) -> None:
     """Closed-loop demo: the served workload shifts mid-run and the index
     manager recompresses + hot-swaps to follow it, holding the device-byte
@@ -149,6 +253,13 @@ def run_adaptive(args, backend: str) -> None:
     graph = build_visgraph(scene)
     index = build_ehl(scene, cell_size=2.0, graph=graph)
     budget = int(bucketed_device_bytes(index) * args.budget)
+    shard_kw = {}
+    if args.shards > 1:
+        from repro.sharding import sharded_overhead_bytes
+        budget += sharded_overhead_bytes(index, args.shards)
+        shard_kw = dict(num_shards=args.shards,
+                        mesh=serving_mesh_or_none(args.shards),
+                        shard_tol=args.shard_tol)
 
     # validate_tol=0: a candidate only goes live if the probe answers are
     # *bitwise* identical, so the smoke gate below (np.array_equal across
@@ -159,8 +270,8 @@ def run_adaptive(args, backend: str) -> None:
     mgr = IndexManager(index, budget, backend=backend,
                        batch_size=args.batch,
                        min_queries=max(64, args.queries // 4),
-                       replan_threshold=0.10, probe_n=64, seed=17,
-                       validate_tol=0.0)
+                       replan_threshold=0.10, min_dwell=1, probe_n=64,
+                       seed=17, validate_tol=0.0, **shard_kw)
     uniform_engine = mgr.engine.current    # generation-0 uniform-score ref
     srv = PathServer(mgr.engine, batch_size=args.batch,
                      recorder=mgr.recorder)

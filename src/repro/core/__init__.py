@@ -19,10 +19,12 @@ from .query import query, query_distance, path_length       # noqa: F401
 from .query import unwind_path                              # noqa: F401
 from .packed import (PackedIndex, BucketedIndex,            # noqa: F401
                      pack_index, pack_bucketed, plan_buckets,
+                     pack_bucketed_split,
                      slab_device_bytes, slab_label_slots,
                      bucketed_device_bytes,
                      query_batch, query_batch_argmin,
-                     query_batch_bucketed, dispatch_buckets)
+                     query_batch_bucketed, dispatch_buckets,
+                     gather_labels_at_width, join_gathered)
 from .workload import (QuerySet, make_clusters,             # noqa: F401
                        cluster_queries, uniform_queries, mixed_queries,
                        historical_workload, workload_scores)

@@ -479,7 +479,8 @@ def query_batch_argmin(idx: PackedIndex, s: jnp.ndarray, t: jnp.ndarray,
 # bucketed dispatch
 # ---------------------------------------------------------------------------
 
-def _gather_bucketed(bx: BucketedIndex, regions: jnp.ndarray, bucket: int):
+def _gather_bucketed(bx: BucketedIndex, regions: jnp.ndarray, bucket: int,
+                     width: int | None = None):
     """Gather per-query labels from buckets <= ``bucket``, padded to its width.
 
     One masked gather per source bucket (a handful of O(B*W) memory ops) in
@@ -487,8 +488,13 @@ def _gather_bucketed(bx: BucketedIndex, regions: jnp.ndarray, bucket: int):
     dispatch width instead of the global Lmax.  Regions living in a *wider*
     bucket than ``bucket`` come back as pure padding (inf distances) — the
     caller must dispatch each query at the max of its endpoint buckets.
+
+    ``width`` (>= ``widths[bucket]``) pads the gather beyond the bucket's
+    own width.  The extra slots are HUB_PAD/inf — inert in the join — so a
+    sharded query whose two endpoints live on shards with different bucket
+    ladders can be joined at the pair's common width (``repro.sharding``).
     """
-    W = bx.widths[bucket]
+    W = bx.widths[bucket] if width is None else width
     B = regions.shape[0]
     hub = jnp.full((B, W), HUB_PAD, jnp.int32)
     xy = jnp.zeros((B, W, 2), jnp.float32)
@@ -533,6 +539,159 @@ def query_batch_at_bucket(bx: BucketedIndex, s: jnp.ndarray, t: jnp.ndarray,
     return _labels_to_distances(
         _gather_bucketed(bx, rs, bucket), _gather_bucketed(bx, rt, bucket),
         s, t, bx.edges_a, bx.edges_b, use_kernels, want_argmin)
+
+
+# ---------------------------------------------------------------------------
+# sharded dispatch primitives (repro.sharding)
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("width",))
+def gather_labels_at_width(bx: BucketedIndex, regions: jnp.ndarray,
+                           width: int):
+    """Gather [B] regions' labels as dense [B, width] tensors.
+
+    The device half of sharded routing: each shard gathers its *own*
+    endpoints' label rows at the pair's join width; for a cross-shard query
+    the t-side tensors are then shipped to the s-side device and joined
+    there (:func:`join_gathered`).  ``width`` must be >= the widest bucket
+    any of ``regions`` lives in — the host router guarantees that by
+    dispatching at ``max(endpoint widths)``.
+    """
+    bucket = max((k for k, w in enumerate(bx.widths) if w <= width),
+                 default=0)
+    return _gather_bucketed(bx, regions, bucket, width)
+
+
+@partial(jax.jit, static_argnames=("use_kernels", "want_argmin"))
+def join_gathered(labels_s, labels_t, s: jnp.ndarray, t: jnp.ndarray,
+                  edges_a: jnp.ndarray, edges_b: jnp.ndarray,
+                  use_kernels: bool = False, want_argmin: bool = False):
+    """Eq. 1-3 over pre-gathered label tensors (both sides [B, W]).
+
+    Same distance/join core as every other entry point, minus the on-device
+    region lookup — the labels arrive already gathered (possibly from
+    another shard's device).  With identical label/edge values this is
+    bitwise-identical to ``query_batch_at_bucket`` at width W: the compute
+    graph below the gather is the same code.
+    """
+    s = s.astype(jnp.float32)
+    t = t.astype(jnp.float32)
+    return _labels_to_distances(labels_s, labels_t, s, t, edges_a, edges_b,
+                                use_kernels, want_argmin)
+
+
+def pack_bucketed_split(index: EHLIndex, region_shard: np.ndarray,
+                        num_shards: int | None = None, lane: int = 128,
+                        reuse_edges_from=None):
+    """Freeze a host index into per-shard width-bucketed slabs.
+
+    The shard-aware sibling of :func:`pack_bucketed`: ``region_shard`` maps
+    each live region (in live-rid order, as ``packed_label_counts``) to a
+    shard; each shard gets its own :class:`BucketedIndex` holding only its
+    regions' slabs, with the bucket ladder recomputed from its own label
+    counts (a region's bucket *width* is invariant — smallest power-of-two
+    multiple of ``lane`` — so sharded join widths match the unsharded
+    dispatch widths exactly).
+
+    Every shard's mapper covers the full grid; cells owned by other shards
+    resolve to local row 0 — harmless, because the host-side routing table
+    returned alongside is what decides which shard a query is sent to.
+
+    ``reuse_edges_from``: a previous artifact (single ``BucketedIndex`` /
+    ``PackedIndex``) or a per-shard sequence of them — the scene never
+    changes across recompressions, so the padded edge tensors are aliased
+    instead of re-uploaded (the multi-shard hot-swap fast path, mirroring
+    ``pack_bucketed``).
+
+    Returns ``(shards, route)``: the per-shard ``BucketedIndex`` list plus
+    the host-side routing table, numpy arrays over grid cells —
+    ``cell_shard``/``cell_local`` (destination shard + local region id),
+    ``cell_bucket``/``cell_row`` (slab coordinates inside that shard) and
+    ``cell_width`` (the cell's bucket width, the join-width input).
+    """
+    live, packs = _host_packs(index)
+    R = len(live)
+    region_shard = np.asarray(region_shard, dtype=np.int32)
+    if region_shard.shape != (R,):
+        raise ValueError(f"region_shard has shape {region_shard.shape}, "
+                         f"index has {R} live regions")
+    S = int(num_shards) if num_shards is not None \
+        else int(region_shard.max(initial=-1)) + 1
+    counts = index.packed_label_counts()
+    if reuse_edges_from is None or hasattr(reuse_edges_from, "edges_a"):
+        reuse_edges_from = [reuse_edges_from] * S
+    ea0, eb0 = None, None       # packed once, aliased across shards
+
+    # global region -> (local id, local bucket, local row) within its shard
+    region_local = np.zeros(R, dtype=np.int32)
+    region_lbucket = np.zeros(R, dtype=np.int32)
+    region_lrow = np.zeros(R, dtype=np.int32)
+    region_width = np.array([bucket_width(max(1, int(c)), lane)
+                             for c in counts], dtype=np.int32)
+    cell_region = _cell_mapper(index, live)
+
+    shards = []
+    for k in range(S):
+        members = np.nonzero(region_shard == k)[0]
+        if members.size == 0:
+            raise ValueError(f"shard {k} owns no regions — plan fewer "
+                             "shards or rebalance")
+        region_local[members] = np.arange(members.size, dtype=np.int32)
+        widths_k = sorted({int(region_width[i]) for i in members})
+        bucket_of_width = {w: b for b, w in enumerate(widths_k)}
+        lbucket = np.array([bucket_of_width[int(region_width[i])]
+                            for i in members], dtype=np.int32)
+        lrow = np.zeros(members.size, dtype=np.int32)
+        slab_members: list[list[int]] = [[] for _ in widths_k]
+        for li, gi in enumerate(members):
+            b = lbucket[li]
+            lrow[li] = len(slab_members[b])
+            slab_members[b].append(int(gi))
+        region_lbucket[members] = lbucket
+        region_lrow[members] = lrow
+
+        slabs = []
+        for b, w in enumerate(widths_k):
+            arrs = _alloc_slab(max(1, len(slab_members[b])), w)
+            for row, gi in enumerate(slab_members[b]):
+                _fill_row(arrs, row, packs[gi])
+            slabs.append(arrs)
+
+        reuse = reuse_edges_from[k]
+        if reuse is not None:
+            ea, eb = reuse.edges_a, reuse.edges_b
+        else:
+            if ea0 is None:
+                ea0, eb0 = _pack_edges(index, lane)
+                ea0, eb0 = jnp.asarray(ea0), jnp.asarray(eb0)
+            ea, eb = ea0, eb0
+
+        # full-grid mapper: owned cells -> local id, foreign cells -> 0
+        mapper_k = np.where(region_shard[cell_region] == k,
+                            region_local[cell_region], 0).astype(np.int32)
+        shards.append(BucketedIndex(
+            hub_ids=tuple(jnp.asarray(a[0]) for a in slabs),
+            via_xy=tuple(jnp.asarray(a[1]) for a in slabs),
+            via_d=tuple(jnp.asarray(a[2]) for a in slabs),
+            via_ids=tuple(jnp.asarray(a[3]) for a in slabs),
+            mapper=jnp.asarray(mapper_k),
+            region_bucket=jnp.asarray(lbucket),
+            region_row=jnp.asarray(lrow),
+            edges_a=ea, edges_b=eb,
+            nx=index.nx, ny=index.ny, cell_size=float(index.cell_size),
+            width=float(index.scene.width), height=float(index.scene.height),
+            widths=tuple(widths_k)))
+
+    route = dict(
+        region_shard=region_shard,
+        region_local=region_local,
+        cell_region=cell_region,
+        cell_shard=region_shard[cell_region],
+        cell_local=region_local[cell_region],
+        cell_bucket=region_lbucket[cell_region],
+        cell_row=region_lrow[cell_region],
+        cell_width=region_width[cell_region])
+    return shards, route
 
 
 def dispatch_buckets(bx: BucketedIndex, s, t) -> np.ndarray:

@@ -1,0 +1,64 @@
+"""Version-tolerant shims over the moving jax.sharding API surface.
+
+Mirrors ``repro.kernels.compat`` for the distributed side: JAX has moved
+mesh-construction details across releases (``jax.sharding.AxisType`` and the
+``axis_types=`` kwarg of ``jax.make_mesh`` exist only on newer lines;
+``jax.make_mesh`` itself is absent on very old ones).  Every mesh in this
+repo — training, serving, tests — is built through :func:`make_mesh` so the
+call sites stay pinned to one spelling and the test suite stops erroring on
+whichever jax the container ships.
+
+True-TPU-only features have no shim: code that genuinely needs them must
+skip with a reason (see ``requires_axis_types``).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def auto_axis_types(n: int):
+    """``(AxisType.Auto,) * n`` on jax lines that have it, else None."""
+    at = getattr(jax.sharding, "AxisType", None)
+    if at is None:
+        return None
+    return (at.Auto,) * n
+
+
+def requires_axis_types() -> str | None:
+    """Skip-reason string when explicit axis types are unavailable.
+
+    Returns None when ``jax.sharding.AxisType`` exists; otherwise a message
+    suitable for ``pytest.skip`` — used by tests that exercise the explicit
+    Auto/Explicit sharding mode itself rather than merely building a mesh.
+    """
+    if getattr(jax.sharding, "AxisType", None) is None:
+        return ("jax.sharding.AxisType not available on this jax "
+                f"({jax.__version__}); explicit axis-type semantics "
+                "need a newer release")
+    return None
+
+
+def make_mesh(axis_shapes, axis_names, *, devices=None):
+    """``jax.make_mesh`` across API drift; axis types are Auto when spellable.
+
+    Order of attempts: new API with ``axis_types``, new API without, then
+    the legacy ``jax.sharding.Mesh`` over ``mesh_utils.create_device_mesh``.
+    """
+    axis_shapes = tuple(int(s) for s in axis_shapes)
+    axis_names = tuple(axis_names)
+    kw = {}
+    if devices is not None:
+        kw["devices"] = devices
+    mk = getattr(jax, "make_mesh", None)
+    if mk is not None:
+        at = auto_axis_types(len(axis_names))
+        if at is not None:
+            try:
+                return mk(axis_shapes, axis_names, axis_types=at, **kw)
+            except TypeError:
+                pass        # this jax.make_mesh predates axis_types=
+        return mk(axis_shapes, axis_names, **kw)
+    from jax.experimental import mesh_utils
+    devs = mesh_utils.create_device_mesh(axis_shapes, devices=devices)
+    return jax.sharding.Mesh(devs, axis_names)

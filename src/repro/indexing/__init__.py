@@ -18,4 +18,5 @@ artifact continuously re-optimized under a device-byte budget:
 from .recorder import WorkloadRecorder                      # noqa: F401
 from .planner import BudgetPlanner, PlanDecision            # noqa: F401
 from .swap import SwappableEngine                           # noqa: F401
-from .manager import IndexManager, SwapRecord               # noqa: F401
+from .manager import (IndexManager, SwapRecord,             # noqa: F401
+                      engine_answers)

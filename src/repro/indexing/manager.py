@@ -34,12 +34,32 @@ import time
 import numpy as np
 
 from repro.core.grid import EHLIndex
-from repro.core.packed import pack_bucketed, query_batch_bucketed
+from repro.core.packed import pack_bucketed
 from repro.serving.query_engine import make_engine
 
 from .planner import BudgetPlanner, PlanDecision
 from .recorder import WorkloadRecorder
 from .swap import SwappableEngine
+
+
+def engine_answers(engine, s: np.ndarray, t: np.ndarray) -> np.ndarray:
+    """Route a batch through any ``QueryEngine`` with exact shapes.
+
+    Engines with a full-pipeline ``query`` (the sharded engine) use it;
+    otherwise the batch is grouped by ``buckets_of`` and dispatched per
+    routing key — the same calls ``query_batch_bucketed`` makes for a
+    device engine, so probe validation stays bitwise-comparable across
+    engine kinds and generations.
+    """
+    fn = getattr(engine, "query", None)
+    if fn is not None:
+        return np.asarray(fn(s, t))
+    keys = engine.buckets_of(s, t)
+    out = np.empty(len(s), np.float32)
+    for k in np.unique(keys):
+        m = keys == k
+        out[m] = np.asarray(engine.batch(s[m], t[m], bucket=int(k)))
+    return out
 
 
 @dataclasses.dataclass
@@ -76,8 +96,11 @@ class IndexManager:
                  backend: str = "jnp", lane: int = 128, alpha: float = 0.2,
                  batch_size: int = 256, probe=None, probe_n: int = 64,
                  validate_tol: float = 1e-4, min_queries: int = 256,
-                 replan_threshold: float = 0.15, halflife: float = 4000.0,
-                 warm_argmin: bool = False, seed: int = 0):
+                 replan_threshold: float = 0.15,
+                 exit_threshold: float | None = None, min_dwell: int = 2,
+                 halflife: float = 4000.0, warm_argmin: bool = False,
+                 num_shards: int = 0, mesh=None, shard_tol: float = 1.15,
+                 seed: int = 0):
         if backend not in ("jnp", "pallas"):
             raise ValueError("IndexManager serves packed artifacts; "
                              f"backend must be jnp|pallas, got {backend!r}")
@@ -91,22 +114,44 @@ class IndexManager:
         self.batch_size = batch_size
         self.validate_tol = float(validate_tol)
         self.warm_argmin = warm_argmin
+        # sharded serving (repro.sharding): the budget stays a *total*
+        # device-byte budget; each shard replicates the mapper + edge
+        # tensors, so the compressible slab budget shrinks by that overhead
+        # and candidates are additionally held to a per-device cap
+        self.num_shards = int(num_shards)
+        self.mesh = mesh
+        self.shard_tol = float(shard_tol)
+        self._shard_planner = None
+        overhead = 0
+        if self.num_shards > 1:
+            from repro.sharding import ShardPlanner, sharded_overhead_bytes
+            self._shard_planner = ShardPlanner(self.num_shards, lane=lane,
+                                               tol=shard_tol)
+            overhead = sharded_overhead_bytes(index, self.num_shards, lane)
+            if overhead >= device_budget_bytes:
+                raise ValueError(
+                    f"device budget {device_budget_bytes}B is infeasible "
+                    f"for {self.num_shards} shards: replicated mapper + "
+                    f"edge tensors alone cost {overhead}B")
+        self._shard_overhead = overhead
+        slab_budget = device_budget_bytes - overhead
         self.recorder = WorkloadRecorder.for_index(index, halflife=halflife)
-        self.planner = BudgetPlanner(device_budget_bytes, alpha=alpha,
+        self.planner = BudgetPlanner(slab_budget, alpha=alpha,
                                      min_queries=min_queries,
                                      replan_threshold=replan_threshold,
-                                     lane=lane)
+                                     exit_threshold=exit_threshold,
+                                     min_dwell=min_dwell, lane=lane)
         # initial fit: uniform scores (no traffic observed yet)
-        if bucketed_device_bytes(index, lane) > device_budget_bytes:
-            compress_to_device_budget(index, device_budget_bytes, lane=lane)
-        bx0 = pack_bucketed(index, lane=lane)
-        if bx0.device_bytes() > device_budget_bytes:
+        if bucketed_device_bytes(index, lane) > slab_budget:
+            compress_to_device_budget(index, slab_budget, lane=lane)
+        art0 = self._pack()
+        if art0.device_bytes() > device_budget_bytes:
             raise ValueError(
                 f"device budget {device_budget_bytes}B is infeasible: after "
                 f"budget-driven merging the artifact still needs "
-                f"{bx0.device_bytes()}B (mapper + edge tensors are a fixed "
+                f"{art0.device_bytes()}B (mapper + edge tensors are a fixed "
                 "floor no amount of merging removes)")
-        self.engine = SwappableEngine(make_engine(bx0, backend=backend))
+        self.engine = SwappableEngine(self._make_engine(art0))
         if probe is not None:
             self._probe_s = np.asarray(probe[0], np.float32)
             self._probe_t = np.asarray(probe[1], np.float32)
@@ -134,23 +179,36 @@ class IndexManager:
         return self.engine.device_bytes()
 
     def device_budget_bytes(self) -> int:
-        return self.planner.device_budget_bytes
+        """Total budget (slab budget + per-shard replication overhead)."""
+        return self.planner.device_budget_bytes + self._shard_overhead
 
     def set_budget(self, device_budget_bytes: int) -> None:
-        self.planner.set_budget(device_budget_bytes)
+        self.planner.set_budget(device_budget_bytes - self._shard_overhead)
 
     def probe_set(self) -> tuple[np.ndarray, np.ndarray]:
         """The fixed probe queries swap validation runs against."""
         return self._probe_s, self._probe_t
 
     def probe_answers(self) -> np.ndarray:
-        """Current live artifact's answers on the probe set."""
-        return self._answers(self.engine.artifact)
+        """Current live engine's answers on the probe set."""
+        return engine_answers(self.engine.current,
+                              self._probe_s, self._probe_t)
 
-    def _answers(self, artifact) -> np.ndarray:
-        return np.asarray(query_batch_bucketed(
-            artifact, self._probe_s, self._probe_t,
-            use_kernels=self.engine.use_kernels))
+    # ------------------------------------------------------------- packing
+    def _pack(self, reuse_from=None):
+        """Freeze host_index into the serving artifact (sharded or not)."""
+        if self._shard_planner is not None:
+            return self._shard_planner.build(self.host_index,
+                                             reuse_edges_from=reuse_from)
+        return pack_bucketed(self.host_index, lane=self.lane,
+                             reuse_edges_from=reuse_from)
+
+    def _make_engine(self, artifact):
+        if self._shard_planner is not None:
+            from repro.sharding import ShardedQueryEngine
+            return ShardedQueryEngine(artifact, mesh=self.mesh,
+                                      use_kernels=self.backend == "pallas")
+        return make_engine(artifact, backend=self.backend)
 
     # ------------------------------------------------------------ adaptation
     def maybe_adapt(self, block: bool = True) -> bool:
@@ -190,17 +248,26 @@ class IndexManager:
             build_s = time.perf_counter() - t0
 
             t0 = time.perf_counter()
-            bx = pack_bucketed(self.host_index, lane=self.lane,
-                               reuse_edges_from=self.engine.artifact)
-            candidate = make_engine(bx, backend=self.backend)
+            reuse = self.engine.artifact
+            if self._shard_planner is not None:
+                # alias the *device-placed* per-shard edge tensors (the
+                # router's copies), so the new generation's device_put is a
+                # no-op for them — the host-side ShardedIndex copies would
+                # be re-uploaded to every non-default device each swap
+                router = getattr(self.engine.current, "router", None)
+                if router is not None:
+                    reuse = router.shards
+            bx = self._pack(reuse_from=reuse)
+            candidate = self._make_engine(bx)
             # warm the candidate's jit entries off the serving path so the
             # first post-swap batch pays zero compile time
             candidate.warmup(self.batch_size, want_argmin=self.warm_argmin)
             pack_s = time.perf_counter() - t0
 
             t0 = time.perf_counter()
-            d_live = self._answers(self.engine.artifact)
-            d_cand = self._answers(bx)
+            d_live = engine_answers(self.engine.current,
+                                    self._probe_s, self._probe_t)
+            d_cand = engine_answers(candidate, self._probe_s, self._probe_t)
             both_inf = ~np.isfinite(d_live) & ~np.isfinite(d_cand)
             # np.max, not nanmax: a NaN-vs-finite disagreement must
             # propagate into max_err and abort, not be skipped over
@@ -210,11 +277,22 @@ class IndexManager:
             abort = "" if ok else (f"probe mismatch {max_err:.3e} > "
                                    f"{self.validate_tol:.1e}")
             # the documented guarantee: no over-budget candidate goes live
-            budget = self.planner.device_budget_bytes
+            budget = self.device_budget_bytes()
             if ok and bx.device_bytes() > budget:
                 ok = False
                 abort = (f"candidate {bx.device_bytes()}B over device "
                          f"budget {budget}B")
+            if ok and self._shard_planner is not None:
+                # per-device cap: no shard may exceed its fair share of the
+                # total budget by more than the balance tolerance
+                cap = self.shard_tol * budget / self.num_shards
+                worst = max(bx.per_shard_bytes())
+                if worst > cap:
+                    ok = False
+                    abort = (f"shard imbalance: max shard {worst}B over "
+                             f"per-device cap {cap:.0f}B "
+                             f"({self.shard_tol:.2f}x budget/"
+                             f"{self.num_shards})")
             validate_s = time.perf_counter() - t0
 
             rec = SwapRecord(
@@ -231,17 +309,26 @@ class IndexManager:
                 self.planner.discard()
                 self.host_index.restore_regions(pre)    # roll back mirror
                 return False
+            # validation traffic must not leak into the live serving stats
+            reset = getattr(candidate, "reset_serve_counters", None)
+            if reset is not None:
+                reset()
             self.engine.swap(candidate)
             self.planner.commit()
             return True
 
     def stats(self) -> dict:
         """Lifecycle summary for logs / benches."""
-        return dict(generation=self.generation, swaps=self.swaps,
-                    drops=self.engine.drops,
-                    retired_pending=len(self.engine.retired_generations()),
-                    validation_failures=self.validation_failures,
-                    recorded_queries=self.recorder.queries,
-                    device_bytes=self.device_bytes(),
-                    device_budget_bytes=self.planner.device_budget_bytes,
-                    attempts=len(self.history))
+        out = dict(generation=self.generation, swaps=self.swaps,
+                   drops=self.engine.drops,
+                   retired_pending=len(self.engine.retired_generations()),
+                   validation_failures=self.validation_failures,
+                   recorded_queries=self.recorder.queries,
+                   device_bytes=self.device_bytes(),
+                   device_budget_bytes=self.device_budget_bytes(),
+                   attempts=len(self.history))
+        if self._shard_planner is not None:
+            out.update(num_shards=self.num_shards,
+                       per_shard_bytes=self.engine.per_shard_bytes(),
+                       shard_imbalance=round(self.engine.imbalance(), 4))
+        return out

@@ -18,6 +18,23 @@ sufficient action:
 Drift is total-variation distance between normalized workloads; the budget
 is a **device-byte** budget on the packed bucketed artifact
 (``compress_to_device_budget``), i.e. what serving actually allocates.
+
+**Hysteresis.**  A replan is expensive (host merge loop + repack + probe
+validation) and resets the drift baseline, so a workload hovering *at* the
+threshold would otherwise re-trigger on every noise excursion — swap churn.
+Two guards stop it:
+
+* enter/exit thresholds (a Schmitt trigger): the drift alarm raises at
+  ``replan_threshold`` and stays latched until drift falls to
+  ``exit_threshold`` — a brief dip back under the enter threshold neither
+  clears the alarm nor re-fires it;
+* min-dwell: after a *committed* replan, ``min_dwell`` further eligible
+  ``decide()`` calls must pass before the next replan, bounding the replan
+  rate regardless of how the drift signal oscillates.
+
+Budget-overflow ``incremental`` decisions bypass both guards — holding the
+device budget is a correctness property, churn control is not allowed to
+defer it.
 """
 
 from __future__ import annotations
@@ -42,15 +59,26 @@ class BudgetPlanner:
 
     def __init__(self, device_budget_bytes: int, alpha: float = 0.2,
                  min_queries: int = 256, replan_threshold: float = 0.15,
+                 exit_threshold: float | None = None, min_dwell: int = 2,
                  lane: int = 128):
         self.device_budget_bytes = int(device_budget_bytes)
         self.alpha = float(alpha)
         self.min_queries = int(min_queries)
         self.replan_threshold = float(replan_threshold)
+        # hysteresis: alarm clears only below exit (default half of enter);
+        # min_dwell eligible decide() calls must pass between replans
+        self.exit_threshold = (float(exit_threshold)
+                               if exit_threshold is not None
+                               else self.replan_threshold / 2.0)
+        if self.exit_threshold > self.replan_threshold:
+            raise ValueError("exit_threshold must be <= replan_threshold")
+        self.min_dwell = int(min_dwell)
         self.lane = int(lane)
         self._planned_dist: np.ndarray | None = None
         self._planned_at_queries = 0
         self._pending: tuple | None = None
+        self._alarm = False
+        self._dwell_left = 0
 
     # ------------------------------------------------------------ decisions
     def drift(self, recorder) -> float:
@@ -73,15 +101,38 @@ class BudgetPlanner:
             return PlanDecision("skip", 0.0,
                                 f"only {fresh} queries since last plan")
         d = self.drift(recorder)
-        if d >= self.replan_threshold:
+        # min-dwell: every *eligible* decide() call (enough fresh traffic)
+        # burns one dwell credit, alarmed or calm — a long calm stretch
+        # after a replan uses the window up, so a genuine later shift is
+        # not penalized for churn that never happened
+        dwelling = self._dwell_left > 0
+        if dwelling:
+            self._dwell_left -= 1
+        # Schmitt trigger: raise at enter, clear only at exit — the alarm
+        # latches across dips into the (exit, enter) band
+        if not self._alarm and d >= self.replan_threshold:
+            self._alarm = True
+        elif self._alarm and d <= self.exit_threshold:
+            self._alarm = False
+        if self._alarm and dwelling:
+            if dev > self.device_budget_bytes:
+                return PlanDecision("incremental", d,
+                                    f"artifact {dev}B over budget "
+                                    f"{self.device_budget_bytes}B")
+            return PlanDecision(
+                "skip", d, f"drift {d:.3f} alarmed but dwelling "
+                f"({self._dwell_left + 1} more decisions before replan)")
+        if self._alarm:
             return PlanDecision("replan", d,
                                 f"workload drift {d:.3f} >= "
-                                f"{self.replan_threshold}")
+                                f"{self.replan_threshold} (alarm latched)")
         if dev > self.device_budget_bytes:
             return PlanDecision("incremental", d,
                                 f"artifact {dev}B over budget "
                                 f"{self.device_budget_bytes}B")
-        return PlanDecision("skip", d, f"drift {d:.3f} below threshold")
+        return PlanDecision("skip", d,
+                            f"drift {d:.3f} below enter threshold "
+                            f"{self.replan_threshold}")
 
     # ------------------------------------------------------------ execution
     def execute(self, decision: PlanDecision, index, recorder,
@@ -115,10 +166,17 @@ class BudgetPlanner:
 
     def commit(self) -> None:
         """Adopt the pending plan's workload as the planned-under baseline
-        (call after the artifact built from it was published)."""
+        (call after the artifact built from it was published).
+
+        Publishing also clears the drift alarm (drift vs the new baseline
+        restarts near zero) and arms the min-dwell window: the next replan
+        needs ``min_dwell`` further eligible ``decide()`` calls first.
+        """
         if self._pending is not None:
             self._planned_dist, self._planned_at_queries = self._pending
             self._pending = None
+            self._alarm = False
+            self._dwell_left = self.min_dwell
 
     def discard(self) -> None:
         """Drop the pending plan (the candidate was rejected)."""

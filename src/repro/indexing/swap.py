@@ -132,3 +132,19 @@ class SwappableEngine(QueryEngine):
     def device_bytes(self) -> int:
         """Bytes of the *current* artifact (retired ones are draining)."""
         return self._current.device_bytes()
+
+    def __getattr__(self, name):
+        """Delegate engine-specific surface (e.g. the sharded engine's
+        ``shard_stats``/``per_shard_bytes``/``query``) to the current
+        engine.  Unpinned like ``batch`` — multi-call consistency goes
+        through ``pin()``.
+
+        ``index`` is deliberately NOT delegated: long-lived holders (e.g.
+        ``PathServer.__init__``'s ``getattr(engine, "index", None)``) would
+        capture one generation's artifact and keep its device buffers alive
+        across every future swap, defeating the drop-after-drain release.
+        ``artifact`` is the sanctioned (momentary) accessor.
+        """
+        if name.startswith("_") or name == "index":
+            raise AttributeError(name)
+        return getattr(self._current, name)

@@ -1,9 +1,16 @@
 """Production mesh construction (function, not module constant — importing
-this module never touches jax device state)."""
+this module never touches jax device state).
+
+All meshes go through :func:`repro.distributed.compat.make_mesh`, which
+absorbs the ``jax.sharding.AxisType`` / ``axis_types=`` API drift across
+jax releases.
+"""
 
 from __future__ import annotations
 
 import jax
+
+from repro.distributed.compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -15,17 +22,50 @@ def make_production_mesh(*, multi_pod: bool = False):
     """
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(model_axis: int = 1):
     """Tiny mesh over whatever devices exist — tests / CPU smoke runs."""
     n = len(jax.devices())
     model_axis = min(model_axis, n)
-    return jax.make_mesh(
-        (n // model_axis, model_axis), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((n // model_axis, model_axis), ("data", "model"))
+
+
+def make_serving_mesh(num_shards: int):
+    """1-D ``shard`` mesh over the first ``num_shards`` devices.
+
+    The sharded query engine (``repro.sharding``) places one region-shard's
+    bucket slabs per mesh device and routes batches by (shard, bucket).
+    Raises when the runtime has fewer devices than shards — callers that
+    want oversubscription (tests on a single CPU device) pass ``mesh=None``
+    to the router, which round-robins shards onto the available devices.
+    """
+    devs = jax.devices()
+    if num_shards > len(devs):
+        raise ValueError(f"need {num_shards} devices for a serving mesh, "
+                         f"runtime has {len(devs)} (set XLA_FLAGS="
+                         f"--xla_force_host_platform_device_count="
+                         f"{num_shards} for host smoke runs)")
+    return make_mesh((num_shards,), ("shard",), devices=devs[:num_shards])
+
+
+def shard_devices(mesh, num_shards: int) -> list:
+    """Per-shard device placement: mesh devices, or round-robin fallback.
+
+    With a mesh, shard ``k`` lives on ``mesh.devices.flat[k]`` (one shard
+    per device, the production regime).  Without one, shards wrap onto
+    whatever devices exist — same routing/merging code paths, so the whole
+    subsystem is testable on a single CPU device.
+    """
+    if mesh is not None:
+        devs = list(mesh.devices.flat)
+        if len(devs) < num_shards:
+            raise ValueError(f"mesh has {len(devs)} devices for "
+                             f"{num_shards} shards")
+        return devs[:num_shards]
+    devs = jax.devices()
+    return [devs[k % len(devs)] for k in range(num_shards)]
 
 
 def data_axes(mesh) -> tuple:

@@ -2,3 +2,4 @@ from .engine import (BucketStats, LMServer, PathServer,  # noqa: F401
                      ServeStats, expected_join_cost)
 from .query_engine import (DeviceEngine, HostEngine, JnpEngine,  # noqa: F401
                            PallasEngine, QueryEngine, make_engine)
+from .shard_router import ShardRouter  # noqa: F401

@@ -61,6 +61,9 @@ class ServeStats:
     generation: int = 0     # generation the last request was served on
     swaps: int = 0          # generation changes observed by this server
     stale_batches: int = 0  # batches that finished on a superseded artifact
+    # sharded serving (repro.sharding): per-shard ShardStats rows, refreshed
+    # from the engine after every request (empty for unsharded engines)
+    per_shard: list = dataclasses.field(default_factory=list)
 
     @property
     def us_per_query(self) -> float:
@@ -181,6 +184,9 @@ class PathServer:
                     self.stats.batches += 1
                 bstats.queries += len(idxs)
                 bstats.seconds += time.perf_counter() - tb0
+            shard_stats = getattr(eng, "shard_stats", None)
+            if shard_stats is not None:
+                self.stats.per_shard = shard_stats()
         if self.engine.generation != gen0:
             # swap published while we served on the old pin: these batches
             # completed on a superseded artifact (answers still exact)

@@ -1,0 +1,152 @@
+"""(shard, bucket) batch routing over a region-sharded index.
+
+The serving half of ``repro.sharding`` (DESIGN.md §9): a
+:class:`~repro.sharding.planner.ShardedIndex` keeps each shard's bucket
+slabs on its own mesh device; the router turns an incoming query batch into
+per-(shard-pair, width) sub-batches and merges the answers back in input
+order.
+
+Routing path per query (all host-side numpy, O(1) per endpoint):
+
+1. locate both endpoints' cells (same float32 floor-divide the device
+   engines jit — bit-identical cell ids);
+2. the routing table maps each cell to ``(shard, bucket width)``;
+3. the composite key ``(shard_s, shard_t, join width)`` groups the batch.
+
+Dispatch per group:
+
+* **same-shard** — both endpoints' label rows are gathered on the owning
+  device and joined there; the common case a locality-aware placement
+  maximizes.
+* **cross-shard** — each side gathers on its own device, the t-side label
+  tensors are shipped to the s-side device (``jax.device_put``, a
+  [B, W]-sized transfer — the slabs themselves never move), and the join
+  runs on the s-side device.
+
+Both paths end in :func:`repro.core.packed.join_gathered` — the same
+distance/join core as the single-device engine, so answers are
+bitwise-identical to the unsharded ``BucketedIndex`` engine.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.packed import gather_labels_at_width, join_gathered
+from repro.launch.mesh import shard_devices
+
+
+class ShardRouter:
+    """Split batches by destination shard, dispatch, merge in input order."""
+
+    def __init__(self, sharded, mesh=None, use_kernels: bool = False):
+        self.sharded = sharded
+        self.use_kernels = use_kernels
+        self.num_shards = sharded.num_shards
+        self.devices = shard_devices(mesh, self.num_shards)
+        # one device_put per shard: the slabs live on their mesh device for
+        # the artifact's whole generation; queries are the only per-request
+        # transfers.  Leaves already committed to the right device (the
+        # hot-swap path aliases the previous router's placed edge tensors)
+        # pass through without a copy.
+        self.shards = [jax.device_put(bx, dev)
+                       for bx, dev in zip(sharded.shards, self.devices)]
+        self.width_classes = np.asarray(sharded.width_classes, np.int64)
+        self._nw = len(self.width_classes)
+        # per-shard clip bound: foreign/padding cells can carry local ids
+        # from wider shards; clipping keeps the (discarded) gather in range
+        self._rmax = np.array([max(0, bx.num_regions - 1)
+                               for bx in self.shards], dtype=np.int32)
+
+    # ------------------------------------------------------------- routing
+    def _cells(self, pts: np.ndarray) -> np.ndarray:
+        """Float32 floor-divide cell location — mirrors ``locate_regions``
+        bit-for-bit so host routing and device gathers agree."""
+        p = np.asarray(pts, np.float32)
+        cs = np.float32(self.sharded.cell_size)
+        ix = np.clip((p[:, 0] / cs).astype(np.int32), 0, self.sharded.nx - 1)
+        iy = np.clip((p[:, 1] / cs).astype(np.int32), 0, self.sharded.ny - 1)
+        return iy * self.sharded.nx + ix
+
+    def route_keys(self, s, t) -> np.ndarray:
+        """[B] composite routing keys ``(shard_s, shard_t, width-class)``."""
+        cs, ct = self._cells(s), self._cells(t)
+        sh_s = self.sharded.cell_shard[cs].astype(np.int64)
+        sh_t = self.sharded.cell_shard[ct].astype(np.int64)
+        w = np.maximum(self.sharded.cell_width[cs],
+                       self.sharded.cell_width[ct])
+        wc = np.searchsorted(self.width_classes, w)
+        return ((sh_s * self.num_shards + sh_t) * self._nw + wc
+                ).astype(np.int32)
+
+    def decode_key(self, key: int) -> tuple:
+        """key -> (shard_s, shard_t, join width)."""
+        key = int(key)
+        wc = key % self._nw
+        pair = key // self._nw
+        return (pair // self.num_shards, pair % self.num_shards,
+                int(self.width_classes[wc]))
+
+    def key_width(self, key: int) -> int:
+        return int(self.width_classes[int(key) % self._nw])
+
+    # ------------------------------------------------------------ dispatch
+    def _locals(self, cells: np.ndarray, shard: int) -> jnp.ndarray:
+        ids = np.minimum(self.sharded.cell_local[cells], self._rmax[shard])
+        # one host->device transfer straight onto the gathering shard (a
+        # detour through the default device would double the traffic)
+        return jax.device_put(ids, self.devices[shard])
+
+    def dispatch(self, s, t, key: int, want_argmin: bool = False):
+        """Answer one routed sub-batch on its destination shard's device.
+
+        Every query in ``s``/``t`` must carry routing key ``key`` (padding
+        rows are exempt — their answers are garbage the caller discards,
+        exactly like per-bucket dispatch under-width padding).  Returns
+        device arrays; ``(i, j)`` — the shards that participated — ride
+        along for the caller's stats.
+        """
+        i, j, W = self.decode_key(key)
+        s = np.asarray(s, np.float32)
+        t = np.asarray(t, np.float32)
+        cs, ct = self._cells(s), self._cells(t)
+        dev = self.devices[i]
+
+        labels_s = gather_labels_at_width(
+            self.shards[i], self._locals(cs, i), W)
+        labels_t = gather_labels_at_width(
+            self.shards[j], self._locals(ct, j), W)
+        if i != j:
+            # ship the gathered [B, W] rows, not the slabs
+            labels_t = jax.device_put(labels_t, dev)
+        res = join_gathered(
+            labels_s, labels_t,
+            jax.device_put(s, dev), jax.device_put(t, dev),
+            self.shards[i].edges_a, self.shards[i].edges_b,
+            use_kernels=self.use_kernels, want_argmin=want_argmin)
+        return res, (i, j)
+
+    # ------------------------------------------------------------- serving
+    def warmup(self, batch_size: int, want_argmin: bool = False) -> None:
+        """Trace every (device, width) gather/join entry at serving shape."""
+        z = np.zeros((batch_size, 2), np.float32)
+        zr = np.zeros((batch_size,), np.int32)
+        for k, bx in enumerate(self.shards):
+            dev = self.devices[k]
+            zd = jax.device_put(z, dev)
+            zrd = jax.device_put(zr, dev)
+            for W in self.width_classes:
+                W = int(W)
+                if W < bx.widths[0]:
+                    continue        # no local bucket fits under this width
+                labels = gather_labels_at_width(bx, zrd, W)
+                jax.block_until_ready(join_gathered(
+                    labels, labels, zd, zd, bx.edges_a, bx.edges_b,
+                    use_kernels=self.use_kernels, want_argmin=False))
+                if want_argmin:
+                    jax.block_until_ready(join_gathered(
+                        labels, labels, zd, zd, bx.edges_a, bx.edges_b,
+                        use_kernels=self.use_kernels, want_argmin=True))

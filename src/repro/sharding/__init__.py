@@ -1,0 +1,23 @@
+"""Sharded serving: region-sharded bucket slabs over a device mesh
+(DESIGN.md §9).
+
+For maps whose *budgeted* artifact still exceeds one accelerator's HBM, the
+index is placed rather than shrunk further:
+
+* :class:`ShardPlanner`       — byte-balanced, locality-aware region ->
+  shard placement (Morton-order bin-pack + bounded rebalance);
+* :class:`ShardedIndex`       — per-shard ``BucketedIndex`` slabs plus the
+  host-side (cell) -> (shard, bucket, row) routing table;
+* :class:`ShardedQueryEngine` — the ``QueryEngine`` implementation routing
+  per-(shard, bucket) sub-batches over the mesh with cross-shard label
+  gathers, answers bitwise-identical to the single-device engine;
+* :class:`ShardStats`         — per-shard occupancy/latency/imbalance,
+  surfaced through ``ServeStats.per_shard``.
+
+The dispatch mechanics live in :mod:`repro.serving.shard_router`.
+"""
+
+from .planner import (ShardPlan, ShardPlanner, ShardedIndex,  # noqa: F401
+                      region_centroids, sharded_overhead_bytes)
+from .engine import (ShardStats, ShardedQueryEngine,  # noqa: F401
+                     shard_imbalance)

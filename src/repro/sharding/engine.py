@@ -1,0 +1,176 @@
+"""Sharded serving behind the standard ``QueryEngine`` protocol.
+
+:class:`ShardedQueryEngine` fronts a :class:`~repro.serving.shard_router.
+ShardRouter` with the exact interface ``PathServer`` already speaks —
+``buckets_of`` returns composite (shard_s, shard_t, width) routing keys
+instead of bucket ids, and ``batch``/``batch_argmin`` decode them — so the
+whole serving stack (fixed-shape batching, per-bucket stats, pinning,
+``SwappableEngine`` hot-swap, the adaptive ``IndexManager``) runs unchanged
+over a mesh-sharded index.
+
+Atomic multi-shard swap falls out of the object model: the engine *is* the
+full shard set, so ``SwappableEngine.swap(new ShardedQueryEngine)`` flips
+every shard under one generation — a pinned request keeps the entire old
+shard set alive until it drains; no mixed-generation batch is expressible.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+import jax
+
+from repro.core.grid import EHLIndex
+from repro.serving.query_engine import QueryEngine
+from repro.serving.shard_router import ShardRouter
+
+from .planner import ShardedIndex, ShardPlanner
+
+
+@dataclasses.dataclass
+class ShardStats:
+    """Per-shard serving + occupancy counters (surfaced via ``ServeStats``)."""
+    shard: int
+    device: str
+    regions: int
+    device_bytes: int
+    used_slots: int             # label slots holding real labels
+    total_slots: int            # label slots allocated (slab area)
+    batches: int = 0            # sub-batches joined on this shard
+    slots: int = 0              # query slots dispatched here (incl. padding)
+    seconds: float = 0.0
+    gathers_out: int = 0        # label rows gathered here for another shard
+
+    @property
+    def occupancy(self) -> float:
+        """Real labels / allocated slab slots (packing efficiency)."""
+        return self.used_slots / max(1, self.total_slots)
+
+    @property
+    def us_per_slot(self) -> float:
+        return 1e6 * self.seconds / max(1, self.slots)
+
+
+def shard_imbalance(stats: list) -> float:
+    """max/mean of per-shard device bytes across a ``ShardStats`` list."""
+    b = np.array([s.device_bytes for s in stats], dtype=np.float64)
+    return float(b.max() / max(1.0, b.mean()))
+
+
+class ShardedQueryEngine(QueryEngine):
+    """Region-sharded slabs over a device mesh, one ``QueryEngine``.
+
+    ``index``: a planned :class:`ShardedIndex`, or a host ``EHLIndex`` that
+    is planned + packed here (``num_shards`` required).  ``mesh``: a
+    ``launch.mesh.make_serving_mesh`` mesh; ``None`` round-robins shards
+    onto the available devices (single-device test mode — identical code
+    paths, the transfers just degenerate to same-device copies).
+    """
+
+    name = "sharded"
+    static_shapes = True
+
+    def __init__(self, index, num_shards: int | None = None, mesh=None,
+                 use_kernels: bool = False, lane: int = 128,
+                 tol: float = 1.15, reuse_edges_from=None):
+        if isinstance(index, EHLIndex):
+            if not num_shards or num_shards < 1:
+                raise ValueError("building from a host index needs "
+                                 "num_shards >= 1")
+            planner = ShardPlanner(num_shards, lane=lane, tol=tol)
+            index = planner.build(index, reuse_edges_from=reuse_edges_from)
+        if not isinstance(index, ShardedIndex):
+            raise TypeError(f"unsupported artifact: {type(index)!r}")
+        self.index = index
+        self.use_kernels = use_kernels
+        self.router = ShardRouter(index, mesh=mesh, use_kernels=use_kernels)
+        self._stats = [
+            ShardStats(
+                shard=k, device=str(dev), regions=bx.num_regions,
+                device_bytes=bx.device_bytes(),
+                used_slots=bx.label_slots()[0],
+                total_slots=bx.label_slots()[1])
+            for k, (bx, dev) in enumerate(zip(index.shards,
+                                              self.router.devices))]
+
+    # ------------------------------------------------- QueryEngine protocol
+    @property
+    def num_buckets(self) -> int:
+        """Size of the composite key space (routing keys index into it)."""
+        s = self.index.num_shards
+        return s * s * len(self.index.width_classes)
+
+    def buckets_of(self, s, t) -> np.ndarray:
+        return self.router.route_keys(s, t)
+
+    def bucket_width(self, bucket: int) -> int:
+        """Join width of a routing key — the W^2 a query at this key pays."""
+        return self.router.key_width(bucket)
+
+    def _run(self, s, t, key: int, want_argmin: bool):
+        t0 = time.perf_counter()
+        res, (i, j) = self.router.dispatch(s, t, key,
+                                           want_argmin=want_argmin)
+        jax.block_until_ready(res)
+        st = self._stats[i]
+        st.seconds += time.perf_counter() - t0
+        st.batches += 1
+        st.slots += len(s)
+        if j != i:
+            self._stats[j].gathers_out += len(s)
+        return res
+
+    def batch(self, s, t, bucket: int = 0) -> np.ndarray:
+        return self._run(s, t, bucket, want_argmin=False)
+
+    def batch_argmin(self, s, t, bucket: int = 0):
+        return self._run(s, t, bucket, want_argmin=True)
+
+    def warmup(self, batch_size: int, want_argmin: bool = False) -> None:
+        self.router.warmup(batch_size, want_argmin=want_argmin)
+
+    def device_bytes(self) -> int:
+        """Total across the mesh; ``per_shard_bytes`` has the HBM view."""
+        return self.index.device_bytes()
+
+    # --------------------------------------------------------- observability
+    def per_shard_bytes(self) -> list:
+        return self.index.per_shard_bytes()
+
+    def shard_stats(self) -> list:
+        return self._stats
+
+    def reset_serve_counters(self) -> None:
+        """Zero the traffic counters (occupancy/bytes stay — they describe
+        the artifact).  The IndexManager calls this after probe validation
+        so a freshly swapped-in engine reports only real serving traffic."""
+        for st in self._stats:
+            st.batches = 0
+            st.slots = 0
+            st.seconds = 0.0
+            st.gathers_out = 0
+
+    def imbalance(self) -> float:
+        return shard_imbalance(self._stats)
+
+    # ------------------------------------------------------------- serving
+    def query(self, s, t, want_argmin: bool = False):
+        """Route + dispatch + in-order merge for a whole batch (exact
+        shapes, no padding) — validation/bench/test entry.  Same dispatch
+        path as ``batch`` so per-shard stats record either way."""
+        from repro.core.packed import empty_results
+
+        s = np.asarray(s, np.float32)
+        t = np.asarray(t, np.float32)
+        n = len(s)
+        outs = empty_results(n, want_argmin)
+        keys = self.buckets_of(s, t) if n else np.zeros(0, np.int32)
+        for key in np.unique(keys):
+            m = keys == key
+            res = self._run(s[m], t[m], int(key), want_argmin)
+            for o, r in zip(outs, res if want_argmin else (res,)):
+                o[m] = np.asarray(r)
+        return tuple(outs) if want_argmin else outs[0]

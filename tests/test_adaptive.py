@@ -120,6 +120,134 @@ def test_planner_decisions(scene_s, graph_s, hl_s):
         pl.execute(dec2, idx, rec, base_snapshot=None)
 
 
+# ------------------------------------------------------------- hysteresis
+
+class _FakeRecorder:
+    """Drives decide() with a hand-set distribution (drift = TV distance)."""
+
+    def __init__(self):
+        self.queries = 0
+        self._base = np.array([1.0, 0.0])
+        self._dist = self._base.copy()
+
+    def set_drift(self, x: float) -> None:
+        """TV distance exactly ``x`` vs the last published distribution."""
+        self._dist = self._base + np.array([-x, x])
+
+    def rebase(self) -> None:
+        """A plan was published from the current distribution."""
+        self._base = self._dist.copy()
+
+    def distribution(self) -> np.ndarray:
+        return self._dist.copy()
+
+    def scores(self) -> np.ndarray:
+        return np.ones_like(self._dist)
+
+
+def _publish(pl: BudgetPlanner, rec: _FakeRecorder) -> None:
+    """Simulate a swapped candidate built from the current workload."""
+    pl._pending = (rec.distribution(), rec.queries)
+    pl.commit()
+    rec.rebase()
+
+
+def test_planner_min_dwell_stops_swap_churn(ehl_s):
+    """Drift hovering at the replan threshold fires once per dwell window,
+    not once per decision — the churn case the hysteresis exists for."""
+    budget = bucketed_device_bytes(ehl_s) * 2        # artifact always fits
+    pl = BudgetPlanner(budget, min_queries=10, replan_threshold=0.15,
+                       exit_threshold=0.05, min_dwell=3)
+    rec = _FakeRecorder()
+    rec.queries = 20
+    assert pl.decide(rec, ehl_s).kind == "replan"    # no baseline yet
+    _publish(pl, rec)
+
+    # 12 decisions with drift oscillating just around the threshold
+    replans = 0
+    for i in range(12):
+        rec.set_drift(0.16 if i % 2 == 0 else 0.14)
+        rec.queries += 20
+        dec = pl.decide(rec, ehl_s)
+        assert dec.kind in ("replan", "skip")
+        if dec.kind == "replan":
+            replans += 1
+            _publish(pl, rec)
+        else:
+            assert "dwelling" in dec.reason
+    # without hysteresis every 0.16 reading (6 of them) would fire; the
+    # dwell window bounds the rate to one per (min_dwell + 1) decisions
+    assert replans == 3
+
+
+def test_planner_alarm_latches_through_midband_dip(ehl_s):
+    """A spike over the enter threshold during dwell still replans after
+    the window even if drift has dipped into the (exit, enter) band."""
+    budget = bucketed_device_bytes(ehl_s) * 2
+    pl = BudgetPlanner(budget, min_queries=10, replan_threshold=0.15,
+                       exit_threshold=0.05, min_dwell=2)
+    rec = _FakeRecorder()
+    rec.queries = 20
+    assert pl.decide(rec, ehl_s).kind == "replan"
+    _publish(pl, rec)
+
+    rec.set_drift(0.20)                      # alarm raises, dwell blocks
+    rec.queries += 20
+    assert pl.decide(rec, ehl_s).kind == "skip"
+    rec.set_drift(0.10)                      # dip below enter: still latched
+    rec.queries += 20
+    assert pl.decide(rec, ehl_s).kind == "skip"
+    rec.queries += 20
+    assert pl.decide(rec, ehl_s).kind == "replan"    # dwell over, latched
+
+
+def test_planner_exit_threshold_disarms(ehl_s):
+    """Mid-band drift never replans unless the alarm was raised first, and
+    falling to the exit threshold clears a raised alarm."""
+    budget = bucketed_device_bytes(ehl_s) * 2
+    pl = BudgetPlanner(budget, min_queries=10, replan_threshold=0.15,
+                       exit_threshold=0.05, min_dwell=0)
+    rec = _FakeRecorder()
+    rec.queries = 20
+    assert pl.decide(rec, ehl_s).kind == "replan"
+    _publish(pl, rec)
+
+    rec.set_drift(0.10)                      # mid-band, never alarmed
+    rec.queries += 20
+    assert pl.decide(rec, ehl_s).kind == "skip"
+    rec.set_drift(0.16)                      # alarm
+    rec.queries += 20
+    assert pl.decide(rec, ehl_s).kind == "replan"    # min_dwell=0: fires
+    # NOT published (e.g. candidate aborted): alarm stays latched
+    rec.set_drift(0.10)
+    rec.queries += 20
+    assert pl.decide(rec, ehl_s).kind == "replan"    # retry while latched
+    rec.set_drift(0.04)                      # at/below exit: disarms
+    rec.queries += 20
+    assert pl.decide(rec, ehl_s).kind == "skip"
+    rec.set_drift(0.10)                      # mid-band again: still calm
+    rec.queries += 20
+    assert pl.decide(rec, ehl_s).kind == "skip"
+
+
+def test_planner_budget_overflow_bypasses_dwell(ehl_s):
+    """Holding the device budget outranks churn control: an over-budget
+    artifact triggers incremental even inside the dwell window."""
+    budget = bucketed_device_bytes(ehl_s) * 2
+    pl = BudgetPlanner(budget, min_queries=10, replan_threshold=0.15,
+                       exit_threshold=0.05, min_dwell=5)
+    rec = _FakeRecorder()
+    rec.queries = 20
+    assert pl.decide(rec, ehl_s).kind == "replan"
+    _publish(pl, rec)
+    rec.set_drift(0.20)                      # alarmed + dwelling
+    rec.queries += 20
+    assert pl.decide(rec, ehl_s).kind == "skip"
+    pl.set_budget(1000)                      # budget collapses under artifact
+    rec.queries += 20
+    assert pl.decide(rec, ehl_s).kind == "incremental"
+
+
 # ------------------------------------------------- manager / hot swap
 
 @pytest.fixture(scope="module")
