@@ -1,0 +1,114 @@
+"""Edge-grid pruning bench — edges tested per query, dense vs grid (§10).
+
+The §5 predicate's dense form tests every segment against every packed
+edge slot; the grid walk gathers only the cells a segment's bounding box
+overlaps.  This bench measures, per suite map (plus the edge-heavy
+``scatter-L``):
+
+* **edges touched per segment**: real edge slots the grid path evaluates
+  (duplicate registrations counted — they are evaluated) vs the dense
+  ``E``, on the engine's actual segment population (query point -> via
+  vertex, plus direct s->t pairs);
+* **tile vs slab slots**: the padded per-segment gather cost
+  (``tile_slots``) vs the padded dense edge count — the auto-attach
+  policy's decision quantity;
+* **visibility wall time** through ``segvis_ref`` dense vs ``segvis_grid``
+  (identical results, asserted here too — this is the §10 bitwise gate
+  CI leans on).
+
+Writes ``artifacts/segvis_grid.json`` for ``make_tables``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.edgegrid import build_edge_grid, segvis_grid
+from repro.core.maps import make_map
+from repro.core.packed import _pack_edges
+from repro.kernels import ops
+
+from . import common
+
+OUT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "artifacts")
+
+MAPS = ("rooms-M", "maze-M", "scatter-M", "scatter-L")
+
+
+def _segments(scene, n: int, seed: int):
+    """The engine's segment population: half point->via, half s->t."""
+    rng = np.random.default_rng(seed)
+    V = scene.vertices.astype(np.float32)
+    P = rng.uniform(0, [scene.width, scene.height], (n, 2)).astype(np.float32)
+    Q = np.empty_like(P)
+    half = n // 2
+    Q[:half] = V[rng.integers(0, len(V), half)]
+    Q[half:] = rng.uniform(0, [scene.width, scene.height],
+                           (n - half, 2)).astype(np.float32)
+    return P, Q
+
+
+def _best_us(fn, reps: int = 5) -> float:
+    best = np.inf
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def run(maps=MAPS, n_segments: int = 2048, quick: bool = False):
+    if quick:
+        maps = maps[:1] + maps[-1:]
+        n_segments = 512
+    rows, table = [], []
+    for name in maps:
+        scene = make_map(name, seed=0)
+        E = scene.edges.shape[0]
+        ea, eb, ec = _pack_edges(scene, lane=128)
+        grid = build_edge_grid(ea, eb, E, scene.width, scene.height,
+                               sentinel=ea.shape[0] - 1)
+        P, Q = _segments(scene, n_segments, seed=7)
+        touched = grid.edges_touched(P, Q)
+
+        p, q = jnp.asarray(P), jnp.asarray(Q)
+        ea_, eb_, ec_ = map(jnp.asarray, (ea, eb, ec))
+        dense_fn = jax.jit(lambda a, b: ops.segvis_ref(a, b, ea_, eb_, ec_))
+        grid_fn = jax.jit(lambda a, b: segvis_grid(a, b, ea_, eb_, ec_,
+                                                   grid))
+        dense = np.asarray(dense_fn(p, q))
+        pruned = np.asarray(grid_fn(p, q))
+        assert (dense == pruned).all(), f"grid/dense split on {name}"
+
+        us_dense = _best_us(lambda: dense_fn(p, q))
+        us_grid = _best_us(lambda: grid_fn(p, q))
+        red = E / max(1.0, touched.mean())
+        rows.append(common.emit(
+            f"segvis_grid/{name}/dense", us_dense,
+            f"E={E};slots={ea.shape[0]}"))
+        rows.append(common.emit(
+            f"segvis_grid/{name}/grid", us_grid,
+            f"touched={touched.mean():.1f};reduction={red:.1f}x"))
+        table.append(dict(
+            map=name, edges=E, padded_slots=int(ea.shape[0]),
+            grid=f"{grid.gnx}x{grid.gny}", ell_width=int(grid.ell_width),
+            tile_slots=int(grid.tile_slots),
+            mean_touched=float(touched.mean()),
+            p99_touched=float(np.percentile(touched, 99)),
+            reduction=float(red),
+            us_dense=float(us_dense), us_grid=float(us_grid),
+            identical=True))
+    os.makedirs(OUT, exist_ok=True)
+    with open(os.path.join(OUT, "segvis_grid.json"), "w") as f:
+        json.dump(dict(n_segments=n_segments, maps=table), f, indent=1)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -28,6 +28,12 @@ BUDGETS = (0.8, 0.6, 0.4, 0.2, 0.1, 0.05)
 INDEX_CACHE = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                            "artifacts", "index_cache")
 
+# Label-construction version: bump when offline-phase code changes the label
+# sets a given scene produces (the scene hash alone cannot see code changes).
+# v2: exact-chord _point_in_star (degenerate shadow-boundary chords no longer
+# hand far cells phantom visibility labels).
+LABELS_VERSION = 2
+
 
 @dataclasses.dataclass
 class SuiteContext:
@@ -97,7 +103,7 @@ def _cache_path(ctx: SuiteContext, fraction, cell_mult: int,
     frac = "full" if fraction is None else f"{fraction:g}"
     return os.path.join(
         INDEX_CACHE,
-        f"{ctx.name}_{_scene_hash(ctx.scene)}"
+        f"{ctx.name}_{_scene_hash(ctx.scene)}_v{LABELS_VERSION}"
         f"_cell{ctx.base_cell * cell_mult:g}_f{frac}"
         f"_{_workload_hash(scores, alpha)}.npz")
 

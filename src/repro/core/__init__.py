@@ -6,7 +6,10 @@ EHL* budgeted compression (Algorithm 1).  Online: Eq. 1-3 query processing
 ``repro.kernels``).
 """
 
-from .geometry import Scene, edist, visible, visible_batch  # noqa: F401
+from .geometry import (Scene, edist, visible, visible_batch,  # noqa: F401
+                       blocked_strict_batch, segments_block_strict)
+from .edgegrid import (EdgeGrid, build_edge_grid,           # noqa: F401
+                       gather_edge_tiles, segvis_grid)
 from .visgraph import VisGraph, build_visgraph, astar       # noqa: F401
 from .hublabel import HubLabels, build_hub_labels           # noqa: F401
 from .grid import EHLIndex, Region, build_ehl, LABEL_BYTES  # noqa: F401
@@ -19,12 +22,13 @@ from .query import query, query_distance, path_length       # noqa: F401
 from .query import unwind_path                              # noqa: F401
 from .packed import (PackedIndex, BucketedIndex,            # noqa: F401
                      pack_index, pack_bucketed, plan_buckets,
-                     pack_bucketed_split,
+                     pack_bucketed_split, padded_edge_count,
                      slab_device_bytes, slab_label_slots,
                      bucketed_device_bytes,
                      query_batch, query_batch_argmin,
                      query_batch_bucketed, dispatch_buckets,
-                     gather_labels_at_width, join_gathered)
+                     gather_labels_at_width, join_gathered,
+                     gather_masked_labels, join_masked, covis_blocked)
 from .workload import (QuerySet, make_clusters,             # noqa: F401
                        cluster_queries, uniform_queries, mixed_queries,
                        historical_workload, workload_scores)

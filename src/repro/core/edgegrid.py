@@ -1,0 +1,329 @@
+"""Spatially-bucketed obstacle edges: the O(L·E) -> O(L·E_local) subsystem.
+
+The query-phase visibility predicate tests every candidate segment against
+every obstacle edge (DESIGN.md §3) — O(L·E) per query, dominant on
+edge-heavy maps.  :class:`EdgeGrid` rasterizes the packed edge tensors into
+a uniform cell grid (ELL layout: per-cell edge-id lists, padded with a
+degenerate *sentinel* edge id), and the query side walks only the cells a
+segment passes through, gathering per-segment edge tiles for the same
+VMEM-resident OR-reduction (``kernels.segvis_tiles`` /
+``ref.segvis_tiles_ref``).  See DESIGN.md §10.
+
+Correctness is a *superset* argument, so grid pruning is bitwise-identical
+to the dense predicate by construction:
+
+* every edge is registered in every cell its bounding box overlaps (host
+  float64, exact);
+* the walk visits every cell the segment touches, dilated by ``eps`` (a
+  1e-3 fraction of a cell) so float32 clipping arithmetic on device can
+  never round a visited cell away;
+* any edge that blocks a segment intersects it, the intersection point
+  lies in a cell both registered for the edge and visited by the walk, so
+  the edge id is always gathered; every gathered edge evaluates the exact
+  same per-(segment, edge) predicate as the dense path, and extra gathered
+  edges contribute ``False`` to the OR.
+
+The walk is a dominant-axis column scan in fixed shapes: at most
+``max(gnx, gny)`` columns, at most 3 rows per column (cells are square and
+the minor-axis slope is <= 1), so every segment visits <= ``3*max(gnx,gny)``
+cell slots — long map-crossing segments and degenerate (point, axis-aligned,
+cell-boundary) segments included, with no data-dependent shapes anywhere.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class EdgeGrid:
+    """Uniform-cell edge buckets over the packed edge tensors.
+
+    ``cell_ids[c]`` lists the edge ids whose bounding box overlaps cell
+    ``c`` (row-major, ``iy * gnx + ix``), padded to the ELL width ``M``
+    with ``sentinel`` — the id of a degenerate (a == b == c) slot in the
+    packed edge tensors, which the §5 predicate can never block on.  Row
+    ``gnx * gny`` is the all-sentinel row that out-of-walk cell slots
+    resolve to.
+    """
+
+    cell_ids: jnp.ndarray       # [C+1, M] int32 edge ids, sentinel padded
+    cell_len: jnp.ndarray       # [C+1] int32 real ids per cell (stats)
+    # static metadata
+    gnx: int
+    gny: int
+    gcell: float                # exactly representable in float32
+    sentinel: int               # padding edge id (degenerate packed slot)
+    eps: float                  # walk dilation, world units
+
+    # -- pytree protocol ----------------------------------------------------
+    def tree_flatten(self):
+        children = (self.cell_ids, self.cell_len)
+        aux = (self.gnx, self.gny, self.gcell, self.sentinel, self.eps)
+        return children, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+    # -- properties ----------------------------------------------------------
+    @property
+    def num_cells(self) -> int:
+        return self.gnx * self.gny
+
+    @property
+    def ell_width(self) -> int:
+        return self.cell_ids.shape[1]
+
+    @property
+    def walk_slots(self) -> int:
+        """Cell slots per segment walk (3 rows x max(gnx, gny) columns)."""
+        return 3 * max(self.gnx, self.gny)
+
+    @property
+    def tile_slots(self) -> int:
+        """Edge slots gathered per segment — the padded per-segment cost."""
+        return self.walk_slots * self.ell_width
+
+    def device_bytes(self) -> int:
+        return int(np.prod(self.cell_ids.shape) * 4
+                   + np.prod(self.cell_len.shape) * 4)
+
+    # ------------------------------------------------------------------ walk
+    def visited_cells(self, p: jnp.ndarray, q: jnp.ndarray) -> jnp.ndarray:
+        """[N, walk_slots] cell ids each segment touches (pad = num_cells).
+
+        Dominant-axis column walk: for each grid column the segment's
+        bounding box overlaps (dilated by ``eps``), the segment is clipped
+        to the column's slab and the minor-axis interval (again dilated)
+        yields at most 3 rows.  Every cell containing any point of the
+        segment — including points landing exactly on cell boundaries —
+        appears in the output; slots beyond the segment's span resolve to
+        the empty sentinel row.
+        """
+        g = jnp.float32(self.gcell)
+        eps = jnp.float32(self.eps)
+        gnx, gny = self.gnx, self.gny
+        KA = max(gnx, gny)
+        px, py = p[:, 0], p[:, 1]
+        qx, qy = q[:, 0], q[:, 1]
+        dx = qx - px
+        dy = qy - py
+        swap = jnp.abs(dy) > jnp.abs(dx)        # dominant axis = y
+        u0 = jnp.where(swap, py, px)
+        u1 = jnp.where(swap, qy, qx)
+        v0 = jnp.where(swap, px, py)
+        v1 = jnp.where(swap, qx, qy)
+        du = u1 - u0
+        dv = v1 - v0
+        Gu = jnp.where(swap, gny, gnx)
+        Gv = jnp.where(swap, gnx, gny)
+        ulo = jnp.minimum(u0, u1)
+        uhi = jnp.maximum(u0, u1)
+        col0 = jnp.clip(jnp.floor((ulo - eps) / g).astype(jnp.int32),
+                        0, Gu - 1)
+        col1 = jnp.clip(jnp.floor((uhi + eps) / g).astype(jnp.int32),
+                        0, Gu - 1)
+        k = jnp.arange(KA, dtype=jnp.int32)[None, :]
+        col = col0[:, None] + k                              # [N, KA]
+        valid_col = col <= col1[:, None]
+        # clip to the column's (dilated) u-slab; degenerate du -> whole seg
+        slab_lo = col.astype(jnp.float32) * g - eps
+        slab_hi = (col + 1).astype(jnp.float32) * g + eps
+        degen = (du == 0)[:, None]
+        safe_du = jnp.where(du == 0, 1.0, du)[:, None]
+        t0 = (slab_lo - u0[:, None]) / safe_du
+        t1 = (slab_hi - u0[:, None]) / safe_du
+        tlo = jnp.where(degen, 0.0, jnp.clip(jnp.minimum(t0, t1), 0.0, 1.0))
+        thi = jnp.where(degen, 1.0, jnp.clip(jnp.maximum(t0, t1), 0.0, 1.0))
+        va = v0[:, None] + tlo * dv[:, None]
+        vb = v0[:, None] + thi * dv[:, None]
+        vlo = jnp.minimum(va, vb) - eps
+        vhi = jnp.maximum(va, vb) + eps
+        r0 = jnp.clip(jnp.floor(vlo / g).astype(jnp.int32),
+                      0, Gv[:, None] - 1)
+        r1 = jnp.clip(jnp.floor(vhi / g).astype(jnp.int32),
+                      0, Gv[:, None] - 1)
+        r = r0[:, :, None] + jnp.arange(3, dtype=jnp.int32)[None, None, :]
+        valid = valid_col[:, :, None] & (r <= r1[:, :, None])
+        sw = swap[:, None, None]
+        ix = jnp.where(sw, r, col[:, :, None])
+        iy = jnp.where(sw, col[:, :, None], r)
+        cell = jnp.where(valid, iy * gnx + ix, gnx * gny)
+        return cell.reshape(p.shape[0], KA * 3)
+
+    # ---------------------------------------------------------------- stats
+    def edges_touched(self, p, q) -> np.ndarray:
+        """[N] real edge slots each segment's walk gathers (bench metric).
+
+        Dense visibility tests every segment against every edge; this is
+        the grid path's actual predicate workload (duplicate registrations
+        counted — they are evaluated).
+        """
+        cells = self.visited_cells(jnp.asarray(p, jnp.float32),
+                                   jnp.asarray(q, jnp.float32))
+        return np.asarray(self.cell_len[cells].sum(axis=1))
+
+
+# ---------------------------------------------------------------------------
+# host-side construction
+# ---------------------------------------------------------------------------
+
+def plan_grid_shape(num_real: int, width: float, height: float,
+                    target_cells: int | None = None
+                    ) -> tuple[int, int, float]:
+    """(gnx, gny, gcell) for ``num_real`` edges over a width x height map.
+
+    Resolution targets ~O(sqrt(E)) cells per axis so mean occupancy stays
+    O(1); ``gcell`` is snapped to its float32 value so the host
+    rasterization and the device walk divide by the *same* number.
+    Deterministic — the analytic byte accounting in ``core.packed`` calls
+    this too.
+    """
+    if target_cells is None:
+        target_cells = int(np.clip(
+            1 << int(np.ceil(np.log2(max(8.0, np.sqrt(2.0 * max(num_real,
+                                                                1)))))),
+            8, 64))
+    side = max(float(width), float(height))
+    gcell = float(np.float32(side / target_cells))
+    gnx = max(1, int(np.ceil(width / gcell)))
+    gny = max(1, int(np.ceil(height / gcell)))
+    return gnx, gny, gcell
+
+
+def _cell_lists(ea: np.ndarray, eb: np.ndarray, num_real: int,
+                gnx: int, gny: int, gcell: float) -> list:
+    """Per-cell edge-id lists from exact float64 bounding boxes."""
+    lists: list[list[int]] = [[] for _ in range(gnx * gny)]
+    a = np.asarray(ea[:num_real], dtype=np.float64)
+    b = np.asarray(eb[:num_real], dtype=np.float64)
+    if num_real == 0:
+        return lists
+    x0 = np.clip(np.floor(np.minimum(a[:, 0], b[:, 0]) / gcell), 0,
+                 gnx - 1).astype(np.int64)
+    x1 = np.clip(np.floor(np.maximum(a[:, 0], b[:, 0]) / gcell), 0,
+                 gnx - 1).astype(np.int64)
+    y0 = np.clip(np.floor(np.minimum(a[:, 1], b[:, 1]) / gcell), 0,
+                 gny - 1).astype(np.int64)
+    y1 = np.clip(np.floor(np.maximum(a[:, 1], b[:, 1]) / gcell), 0,
+                 gny - 1).astype(np.int64)
+    for e in range(num_real):
+        for iy in range(y0[e], y1[e] + 1):
+            base = iy * gnx
+            for ix in range(x0[e], x1[e] + 1):
+                lists[base + ix].append(e)
+    return lists
+
+
+def plan_grid(ea: np.ndarray, eb: np.ndarray, num_real: int,
+              width: float, height: float,
+              target_cells: int | None = None) -> tuple[int, int, float, int]:
+    """Host-only grid plan ``(gnx, gny, gcell, ell_width)`` — no device
+    arrays, so the analytic byte estimators (called repeatedly inside
+    compression budget searches) can mirror :func:`build_edge_grid`'s
+    shape and the packers' attach policy without allocating anything."""
+    gnx, gny, gcell = plan_grid_shape(num_real, width, height, target_cells)
+    lists = _cell_lists(ea, eb, num_real, gnx, gny, gcell)
+    M = _round_up(max([len(l) for l in lists], default=0) or 1, 4)
+    return gnx, gny, gcell, M
+
+
+def ell_bytes(gnx: int, gny: int, ell_width: int) -> int:
+    """``EdgeGrid.device_bytes()`` of a planned grid: [C+1, M] ids + [C+1]
+    lengths, int32.  Single definition shared by the analytic estimators."""
+    C = gnx * gny
+    return (C + 1) * ell_width * 4 + (C + 1) * 4
+
+
+def plan_grid_bytes(ea: np.ndarray, eb: np.ndarray, num_real: int,
+                    width: float, height: float,
+                    target_cells: int | None = None) -> int:
+    """Exact ``EdgeGrid.device_bytes()`` without materializing device arrays.
+
+    ``ea``/``eb`` (the packed edge tensors) size the ELL width exactly —
+    one host rasterization pass, no device allocation.
+    """
+    gnx, gny, _, M = plan_grid(ea, eb, num_real, width, height, target_cells)
+    return ell_bytes(gnx, gny, M)
+
+
+def build_edge_grid(ea: np.ndarray, eb: np.ndarray, num_real: int,
+                    width: float, height: float, sentinel: int,
+                    target_cells: int | None = None) -> EdgeGrid:
+    """Rasterize packed edge tensors into an :class:`EdgeGrid`.
+
+    ``ea``/``eb`` are the *packed* [Ep, 2] tensors (real edges first,
+    degenerate padding after); ``sentinel`` is the id of a degenerate
+    padding slot — asserted here, because every unused ELL slot must be
+    provably non-blocking for every query segment.
+    """
+    ea = np.asarray(ea)
+    eb = np.asarray(eb)
+    if not (0 <= sentinel < ea.shape[0]):
+        raise ValueError(f"sentinel id {sentinel} outside packed edges "
+                         f"[0, {ea.shape[0]})")
+    if not np.array_equal(ea[sentinel], eb[sentinel]):
+        raise ValueError("sentinel edge must be degenerate (a == b) so "
+                         "padding slots can never block")
+    gnx, gny, gcell = plan_grid_shape(num_real, width, height, target_cells)
+    lists = _cell_lists(ea, eb, num_real, gnx, gny, gcell)
+    C = gnx * gny
+    M = _round_up(max([len(l) for l in lists], default=0) or 1, 4)
+    ids = np.full((C + 1, M), sentinel, dtype=np.int32)
+    lens = np.zeros(C + 1, dtype=np.int32)
+    for c, l in enumerate(lists):
+        ids[c, :len(l)] = l
+        lens[c] = len(l)
+    return EdgeGrid(cell_ids=jnp.asarray(ids), cell_len=jnp.asarray(lens),
+                    gnx=gnx, gny=gny, gcell=gcell, sentinel=int(sentinel),
+                    eps=float(np.float32(1e-3 * gcell)))
+
+
+# ---------------------------------------------------------------------------
+# query side
+# ---------------------------------------------------------------------------
+
+def gather_edge_tiles(grid: EdgeGrid, ea: jnp.ndarray, eb: jnp.ndarray,
+                      ec: jnp.ndarray, p: jnp.ndarray, q: jnp.ndarray):
+    """Per-segment edge tiles: six [N, S] coordinate arrays.
+
+    S = ``grid.tile_slots``; unused slots point at the degenerate sentinel
+    and contribute nothing to the OR-reduction.
+    """
+    cells = grid.visited_cells(p, q)                    # [N, K]
+    ids = grid.cell_ids[cells].reshape(p.shape[0], -1)  # [N, K*M]
+    return (ea[ids, 0], ea[ids, 1], eb[ids, 0], eb[ids, 1],
+            ec[ids, 0], ec[ids, 1])
+
+
+def segvis_grid(p: jnp.ndarray, q: jnp.ndarray, ea: jnp.ndarray,
+                eb: jnp.ndarray, ec: jnp.ndarray, grid: EdgeGrid,
+                use_kernels: bool = False, chunk: int = 8192) -> jnp.ndarray:
+    """[N] bool visibility through the edge grid (dense-path bitwise twin).
+
+    Chunks the segment axis so the gathered [chunk, S] tiles bound peak
+    memory regardless of batch size; shapes stay static inside jit (N is a
+    trace-time constant).
+    """
+    from repro.kernels import ops
+    fn = ops.segvis_tiles_kernel if use_kernels else ops.segvis_tiles_ref
+    N = p.shape[0]
+    if N <= chunk:
+        return fn(p, q, *gather_edge_tiles(grid, ea, eb, ec, p, q))
+    outs = []
+    for lo in range(0, N, chunk):
+        sl = slice(lo, min(N, lo + chunk))
+        outs.append(fn(p[sl], q[sl],
+                       *gather_edge_tiles(grid, ea, eb, ec, p[sl], q[sl])))
+    return jnp.concatenate(outs)

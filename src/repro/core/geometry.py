@@ -12,6 +12,21 @@ Conventions
   graze a polygon boundary (standard ESPP semantics).
 * A *convex vertex* is a polygon corner whose interior angle is < 180 deg —
   the only points where optimal Euclidean paths bend.
+
+Blocking convention (DESIGN.md §5): **touching != blocked, interior
+penetration = blocked**.  A segment may slide along an obstacle edge, graze
+a vertex tangentially, or end exactly on the boundary — none of that blocks
+it.  It is blocked exactly when its open interior enters an obstacle's open
+interior, *including* the degenerate entries: transversally through a
+vertex, or from a point on an open edge heading strictly inside.  The host
+oracle (:func:`visible_batch`, midpoint containment) realizes this
+convention exactly in float64; :func:`segments_block_strict` is the same
+convention written as the sign-rule predicate the device kernels implement
+(``repro.kernels``), so the two backends agree on every degenerate class
+and differ only by float32 rounding.  The sign rules detect boundary
+*crossings*, so their precondition is one endpoint in free space — every
+engine segment satisfies it (query points are free, vias are boundary
+vertices); a fully-interior segment is the oracle's job alone.
 """
 
 from __future__ import annotations
@@ -49,11 +64,16 @@ class Scene:
     vertices: np.ndarray     # [V,2] all polygon vertices
     vertex_poly: np.ndarray  # [V] polygon id per vertex
     convex_mask: np.ndarray  # [V] bool, True at convex corners
+    edge_next: np.ndarray    # [E,2] vertex after b along the CCW boundary
+    #   (through-vertex rule input; at a reflex b it is the sentinel
+    #   2b - a, which makes the arm-straddle test fire for any segment
+    #   through b that is not collinear with the incoming arm — correct,
+    #   because every non-collinear direction enters a reflex interior)
 
     @staticmethod
     def build(polygons: Iterable[np.ndarray], width: float, height: float) -> "Scene":
         polys = tuple(_ensure_ccw(np.asarray(p, dtype=np.float64)) for p in polygons)
-        edges, edge_poly, verts, vert_poly, convex = [], [], [], [], []
+        edges, edge_poly, verts, vert_poly, convex, enext = [], [], [], [], [], []
         for pid, poly in enumerate(polys):
             n = len(poly)
             nxt = np.roll(poly, -1, axis=0)
@@ -64,20 +84,28 @@ class Scene:
             vert_poly.append(np.full(n, pid))
             e1 = poly - prv
             e2 = nxt - poly
-            convex.append(e1[:, 0] * e2[:, 1] - e1[:, 1] * e2[:, 0] > EPS)
+            conv = e1[:, 0] * e2[:, 1] - e1[:, 1] * e2[:, 0] > EPS
+            convex.append(conv)
+            # per edge i: a=poly[i], b=poly[i+1], c=poly[i+2] when b is
+            # convex, else the reflex sentinel 2b - a
+            conv_b = np.roll(conv, -1)
+            nxt2 = np.roll(poly, -2, axis=0)
+            enext.append(np.where(conv_b[:, None], nxt2, 2 * nxt - poly))
         if polys:
             E = np.concatenate(edges)
             EP = np.concatenate(edge_poly)
             V = np.concatenate(verts)
             VP = np.concatenate(vert_poly)
             C = np.concatenate(convex)
+            EN = np.concatenate(enext)
         else:
             E = np.zeros((0, 2, 2))
             EP = np.zeros((0,), dtype=np.int64)
             V = np.zeros((0, 2))
             VP = np.zeros((0,), dtype=np.int64)
             C = np.zeros((0,), dtype=bool)
-        return Scene(polys, float(width), float(height), E, EP, V, VP, C)
+            EN = np.zeros((0, 2))
+        return Scene(polys, float(width), float(height), E, EP, V, VP, C, EN)
 
     @property
     def convex_vertices(self) -> np.ndarray:
@@ -274,8 +302,23 @@ def _point_in_star(vispoly: np.ndarray, v: np.ndarray, pts: np.ndarray,
                    slack: float = 1e-7) -> np.ndarray:
     """[N] bool — points inside the star-shaped polygon around v.
 
-    Uses the radial lookup: a point at angle theta is inside iff its radius is
-    below the linearly interpolated ray radius at theta.
+    Uses the radial lookup: a point at angle theta is inside iff it is on
+    the v-side of the boundary *chord* between the two ray hits bracketing
+    theta (the visible boundary between consecutive rays is the straight
+    edge r0->r1).  ``slack`` is a world-units distance tolerance toward
+    inclusion at the boundary.
+
+    The side test must stay meaningful on *degenerate chords*: at a shadow
+    discontinuity the ±ANG_EPS bracket rays hit the same point, the chord
+    collapses, and both cross products shrink to ~0 — an absolute product
+    slack then classified every point at that exact angle as inside, no
+    matter how far out (scene vertices and map corners are all in the ray
+    angle set, so e.g. a map corner sat at such an angle for *every*
+    viewpoint, handing far-away cells phantom visibility).  Sign agreement
+    is therefore exact, and the tolerance is the point's geometric distance
+    to the chord (falling back to distance-to-hit when the chord length
+    vanishes), which goes to zero only when the point really approaches
+    the boundary.
     """
     rel = vispoly - v
     ang = np.arctan2(rel[:, 1], rel[:, 0])
@@ -294,15 +337,16 @@ def _point_in_star(vispoly: np.ndarray, v: np.ndarray, pts: np.ndarray,
     idx = np.clip(idx, 1, len(ang) - 1)
     a0, a1 = ang[idx - 1], ang[idx]
     r0, r1 = rad[idx - 1], rad[idx]
-    # interpolate the *chord* between consecutive ray hits, not the radius:
-    # the visible boundary between two rays is the straight edge r0->r1.
     p0 = v + r0[:, None] * np.stack([np.cos(a0), np.sin(a0)], axis=1)
     p1 = v + r1[:, None] * np.stack([np.cos(a1), np.sin(a1)], axis=1)
-    # point is inside iff it is on the v-side of chord p0->p1
     crossv = _cross(p0, p1, pts)
     crossc = _cross(p0, p1, np.broadcast_to(v, pts.shape))
-    same_side = crossv * crossc >= -slack
-    return same_side & (prad > 0)
+    same_side = crossv * crossc > 0
+    clen = np.linalg.norm(p1 - p0, axis=-1)
+    dist = np.where(clen > 1e-12,
+                    np.abs(crossv) / np.maximum(clen, 1e-12),
+                    np.linalg.norm(pts - p0, axis=-1))
+    return (same_side | (dist <= slack)) & (prad > 0)
 
 
 def _segs_properly_cross(p0, p1, q0, q1):
@@ -317,6 +361,98 @@ def _segs_properly_cross(p0, p1, q0, q1):
     d4 = _cross(p0, p1, q1)
     return (((d1 > 0) & (d2 < 0)) | ((d1 < 0) & (d2 > 0))) & \
            (((d3 > 0) & (d4 < 0)) | ((d3 < 0) & (d4 > 0)))
+
+
+def _filtered_signs(t1, t2, band: float):
+    """(pos, neg) of ``t1 - t2`` with a relative zero band.
+
+    Float64 twin of ``repro.kernels.ref.filtered_signs`` — values within
+    ``band * eps * (|t1| + |t2|)`` of zero classify as neither, so exact
+    contact stays contact under any evaluation order of the products.
+    """
+    eps = band * np.finfo(np.float64).eps
+    d = t1 - t2
+    tau = eps * (np.abs(t1) + np.abs(t2))
+    return d > tau, d < -tau
+
+
+def segments_block_strict(P, Q, A, B, C, band: float = 8.0) -> np.ndarray:
+    """[N, E] bool — sign-rule blocking predicate (module convention).
+
+    The float64 twin of the device predicate in ``repro.kernels``: segment
+    ``P[i]->Q[i]`` vs CCW obstacle edge ``(A[j], B[j])`` with ``C[j]`` the
+    vertex after ``B[j]`` (:attr:`Scene.edge_next`).  Blocked iff
+
+    * **proper crossing** — both sign straddles, outside the zero band; or
+    * **endpoint-on-open-edge penetration** — a segment endpoint lies on the
+      open edge (in-band) and the other endpoint is strictly on the interior
+      (left) side of the edge line; or
+    * **through-vertex transversal** — the edge's b-vertex lies strictly
+      inside the segment (cross in-band, projection strictly interior) and
+      the two boundary arms (a, c) strictly straddle the segment line.
+
+    All contact that does not enter the interior (collinear slide, tangent
+    graze, endpoint touch) is non-blocking.  Sign tests are banded
+    (:func:`_filtered_signs`, same ``SIGN_BAND`` structure as the kernels)
+    so degenerate contact classifies identically across compilers and
+    precisions.  Degenerate edges (a == b) never block — two in-band values
+    cannot carry opposite filtered signs, the padding/sentinel guarantee the
+    device layouts rely on.
+
+    Known boundary of the sign rules (shared by every device backend, so
+    backends still agree): a segment that penetrates *collinearly through
+    a reflex vertex* — sliding along an edge line and continuing into the
+    interior where the boundary turns away — fires no rule (the arm it
+    must straddle is collinear with it).  Reaching that configuration
+    needs a reflex (non-convex) obstacle vertex plus a segment collinear
+    with its edge whose continuation is interior; with the engine's
+    segment population (both endpoints free or on the boundary) and
+    convex-polygon scenes it cannot occur.  The midpoint oracle handles
+    it; tests pin the limitation explicitly.
+    """
+    P = np.asarray(P, dtype=np.float64)[:, None, :]
+    Q = np.asarray(Q, dtype=np.float64)[:, None, :]
+    A = np.asarray(A, dtype=np.float64)[None, :, :]
+    B = np.asarray(B, dtype=np.float64)[None, :, :]
+    C = np.asarray(C, dtype=np.float64)[None, :, :]
+
+    def signs(o, a, b):
+        t1 = (a[..., 0] - o[..., 0]) * (b[..., 1] - o[..., 1])
+        t2 = (a[..., 1] - o[..., 1]) * (b[..., 0] - o[..., 0])
+        return _filtered_signs(t1, t2, band)
+
+    pos1, neg1 = signs(A, B, P)
+    pos2, neg2 = signs(A, B, Q)
+    pos3, neg3 = signs(P, Q, A)
+    pos4, neg4 = signs(P, Q, B)
+    pos5, neg5 = signs(P, Q, C)
+    straddle12 = (pos1 & neg2) | (neg1 & pos2)
+    straddle34 = (pos3 & neg4) | (neg3 & pos4)
+    proper = straddle12 & straddle34
+    # endpoint on the open edge, other endpoint strictly interior-side
+    zero1 = ~pos1 & ~neg1
+    zero2 = ~pos2 & ~neg2
+    touch_pen = ((zero1 & pos2) | (zero2 & pos1)) & straddle34
+    # edge's b-vertex strictly inside the segment, arms straddle
+    d = Q - P
+    tb = ((B - P) * d).sum(-1)
+    L2 = (d * d).sum(-1)
+    tau = band * np.finfo(np.float64).eps * L2
+    on_seg = (~pos4 & ~neg4) & (tb > tau) & (tb < L2 - tau)
+    vert_pen = on_seg & ((pos3 & neg5) | (neg3 & pos5))
+    return proper | touch_pen | vert_pen
+
+
+def blocked_strict_batch(scene: Scene, P, Q) -> np.ndarray:
+    """[N] bool — any obstacle edge blocks, per :func:`segments_block_strict`.
+
+    Float64 reference for the device backends; on degenerate (exact-contact)
+    configurations it agrees with :func:`visible_batch` by construction.
+    """
+    if scene.edges.shape[0] == 0:
+        return np.zeros(len(np.atleast_2d(P)), dtype=bool)
+    return segments_block_strict(P, Q, scene.edges[:, 0], scene.edges[:, 1],
+                                 scene.edge_next).any(axis=1)
 
 
 def vispoly_intersects_rects(vispoly: np.ndarray, v: np.ndarray,

@@ -18,14 +18,24 @@ are provided (DESIGN.md §4):
 
 Shared across layouts:
 
-* ``edges_*``: flat obstacle-edge tensors for the query-time visibility
-  predicate (strict proper-crossing semantics; see DESIGN.md §5 on the
-  measure-zero deviation from the exact host predicate).
+* ``edges_a/b/c``: flat obstacle-edge tensors for the query-time visibility
+  predicate (``a``/``b`` endpoints plus the CCW next vertex ``c`` for the
+  through-vertex rule; DESIGN.md §5 convention — touching != blocked,
+  interior penetration = blocked).  Padding slots are provably degenerate
+  (a == b == c), and at least one exists — the grid sentinel points at it.
+* ``grid``: optional :class:`~repro.core.edgegrid.EdgeGrid` that prunes the
+  visibility predicate from O(L·E) to O(L·E_local) (DESIGN.md §10);
+  attached by the packers when it pays (or forced via ``edge_grid=True``),
+  bitwise-identical to the dense predicate either way.
 * ``mapper``: cell -> region row (single slab) or cell -> region id
   (bucketed), so point location stays O(1).
-* one distance/join core (:func:`_labels_to_distances`) used by every entry
-  point — plain distances and argmin (path unwinding) are the same code
-  path with a flag, for both the jnp reference and the Pallas kernels.
+* one distance/join core — :func:`_mask_labels` (per-endpoint visibility +
+  distance fold) feeding :func:`_join_masked` (hub join + co-visibility
+  override) — used by every entry point; plain distances and argmin (path
+  unwinding) are the same code path with a flag, for both the jnp
+  reference and the Pallas kernels.  The sharded router calls the two
+  halves on different devices (``gather_masked_labels`` /
+  ``covis_blocked`` / ``join_masked``) with byte-identical results.
 
 Everything is float32/int32; the host oracle is float64 — tests compare with
 ~1e-5 tolerances.
@@ -41,6 +51,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from .edgegrid import (EdgeGrid, build_edge_grid, ell_bytes, plan_grid,
+                       segvis_grid)
 from .grid import EHLIndex
 
 HUB_PAD = np.int32(2 ** 30)     # sorts after every real hub id
@@ -48,6 +60,11 @@ HUB_PAD = np.int32(2 ** 30)     # sorts after every real hub id
 
 def _round_up(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
+
+
+def padded_edge_count(num_edges: int, lane: int = 128) -> int:
+    """Packed edge-tensor length: lane-aligned with >= 1 degenerate slot."""
+    return _round_up(num_edges + 1, lane)
 
 
 def bucket_width(n_labels: int, lane: int = 128) -> int:
@@ -68,8 +85,10 @@ class PackedIndex:
     via_d: jnp.ndarray      # [R, L] float32 (+inf on pads)
     via_ids: jnp.ndarray    # [R, L] int32 (-1 pads) — for path unwinding
     mapper: jnp.ndarray     # [C] int32 cell -> region row
-    edges_a: jnp.ndarray    # [E, 2] float32 (repeat-padded)
+    edges_a: jnp.ndarray    # [E, 2] float32 (degenerate-padded)
     edges_b: jnp.ndarray    # [E, 2] float32
+    edges_c: jnp.ndarray    # [E, 2] float32 CCW next vertex (§5 vertex rule)
+    grid: EdgeGrid | None   # edge-grid pruning (DESIGN.md §10), or None
     # static metadata
     nx: int
     ny: int
@@ -80,7 +99,8 @@ class PackedIndex:
     # -- pytree protocol ----------------------------------------------------
     def tree_flatten(self):
         children = (self.hub_ids, self.via_xy, self.via_d, self.via_ids,
-                    self.mapper, self.edges_a, self.edges_b)
+                    self.mapper, self.edges_a, self.edges_b, self.edges_c,
+                    self.grid)
         aux = (self.nx, self.ny, self.cell_size, self.width, self.height)
         return children, aux
 
@@ -102,9 +122,10 @@ class PackedIndex:
         return self.edges_a.shape[0]
 
     def device_bytes(self) -> int:
-        return sum(np.prod(a.shape) * a.dtype.itemsize for a in
+        base = sum(np.prod(a.shape) * a.dtype.itemsize for a in
                    (self.hub_ids, self.via_xy, self.via_d, self.via_ids,
-                    self.mapper, self.edges_a, self.edges_b))
+                    self.mapper, self.edges_a, self.edges_b, self.edges_c))
+        return int(base) + (self.grid.device_bytes() if self.grid else 0)
 
     def label_slots(self) -> tuple[int, int]:
         """(used, total) label slots — padding waste is total - used."""
@@ -129,8 +150,10 @@ class BucketedIndex:
     mapper: jnp.ndarray     # [C] int32 cell -> region id
     region_bucket: jnp.ndarray  # [R] int32 region id -> bucket
     region_row: jnp.ndarray     # [R] int32 region id -> row in its slab
-    edges_a: jnp.ndarray    # [E, 2] float32 (repeat-padded)
+    edges_a: jnp.ndarray    # [E, 2] float32 (degenerate-padded)
     edges_b: jnp.ndarray    # [E, 2] float32
+    edges_c: jnp.ndarray    # [E, 2] float32 CCW next vertex (§5 vertex rule)
+    grid: EdgeGrid | None   # edge-grid pruning (DESIGN.md §10), or None
     # static metadata
     nx: int
     ny: int
@@ -143,7 +166,7 @@ class BucketedIndex:
     def tree_flatten(self):
         children = (self.hub_ids, self.via_xy, self.via_d, self.via_ids,
                     self.mapper, self.region_bucket, self.region_row,
-                    self.edges_a, self.edges_b)
+                    self.edges_a, self.edges_b, self.edges_c, self.grid)
         aux = (self.nx, self.ny, self.cell_size, self.width, self.height,
                self.widths)
         return children, aux
@@ -175,9 +198,11 @@ class BucketedIndex:
                     for group in (self.hub_ids, self.via_xy, self.via_d,
                                   self.via_ids)
                     for a in group)
-        return int(slabs) + sum(np.prod(a.shape) * a.dtype.itemsize for a in
-                                (self.mapper, self.region_bucket,
-                                 self.region_row, self.edges_a, self.edges_b))
+        fixed = sum(np.prod(a.shape) * a.dtype.itemsize for a in
+                    (self.mapper, self.region_bucket, self.region_row,
+                     self.edges_a, self.edges_b, self.edges_c))
+        return (int(slabs) + int(fixed)
+                + (self.grid.device_bytes() if self.grid else 0))
 
     def bucket_stats(self) -> list[dict]:
         """Per-bucket occupancy: regions, used/total label slots, waste."""
@@ -234,17 +259,86 @@ def _cell_mapper(index: EHLIndex, live: list) -> np.ndarray:
     return mapper
 
 
-def _pack_edges(index: EHLIndex, lane: int):
-    E = index.scene.edges.shape[0]
-    Ep = _round_up(max(E, 1), lane)
+def _pack_edges(scene_or_index, lane: int, mask: np.ndarray | None = None):
+    """Pack (a, b, c) edge tensors, degenerate-padded with >= 1 sentinel.
+
+    ``mask`` selects an edge subset (the per-shard clip path); order is
+    preserved so duplicate registrations stay deterministic.  Every padding
+    slot is the degenerate triple (a == b == c) — provably non-blocking
+    under the §5 predicate for *every* query segment — and the last slot is
+    always padding, so it doubles as the edge-grid sentinel.
+    """
+    scene = getattr(scene_or_index, "scene", scene_or_index)
+    edges = scene.edges
+    enext = scene.edge_next
+    if mask is not None:
+        edges = edges[mask]
+        enext = enext[mask]
+    E = edges.shape[0]
+    Ep = padded_edge_count(E, lane)
     ea = np.zeros((Ep, 2), dtype=np.float32)
     eb = np.zeros((Ep, 2), dtype=np.float32)
+    ec = np.zeros((Ep, 2), dtype=np.float32)
     if E:
-        ea[:E] = index.scene.edges[:, 0]
-        eb[:E] = index.scene.edges[:, 1]
-        ea[E:] = index.scene.edges[0, 0]   # repeat-pad: degenerate repeats
-        eb[E:] = index.scene.edges[0, 1]   # never change the OR-reduction
-    return ea, eb
+        ea[:E] = edges[:, 0]
+        eb[:E] = edges[:, 1]
+        ec[:E] = enext
+        ea[E:] = eb[E:] = ec[E:] = edges[0, 0]   # degenerate pads
+    assert np.array_equal(ea[E:], eb[E:]) and np.array_equal(eb[E:], ec[E:]) \
+        and Ep > E, "edge padding must be degenerate (a == b == c)"
+    return ea, eb, ec
+
+
+def _maybe_grid(ea: np.ndarray, eb: np.ndarray, num_real: int,
+                scene, edge_grid: bool | None) -> EdgeGrid | None:
+    """Build the edge grid when forced or when pruning pays.
+
+    ``edge_grid=None`` (auto) attaches the grid only when the per-segment
+    gathered tile is smaller than the dense edge list — on small suite maps
+    the dense O(L·E) sweep is already cheaper than the walk's padding, on
+    edge-heavy maps the grid wins by orders of magnitude.  ``True``/
+    ``False`` force.  Deterministic, mirrored by the analytic byte helpers.
+    """
+    if edge_grid is False:
+        return None
+    if edge_grid is None:
+        # decide host-side (plan_grid: no device arrays) before building —
+        # on dense-favored maps the grid would be discarded right away
+        gnx, gny, _, M = plan_grid(ea, eb, num_real, scene.width,
+                                   scene.height)
+        if 3 * max(gnx, gny) * M >= ea.shape[0]:
+            return None
+    return build_edge_grid(ea, eb, num_real, scene.width, scene.height,
+                           sentinel=ea.shape[0] - 1)
+
+
+_GRID_PLAN_CACHE: dict = {}
+
+
+def _grid_bytes(index: EHLIndex, lane: int, edge_grid: bool | None) -> int:
+    """Analytic twin of :func:`_maybe_grid` for the byte estimators.
+
+    Pure host arithmetic (:func:`plan_grid`), memoized per scene — the
+    budget searches in ``core.compression`` and the adaptive planner call
+    the byte estimators every round, the scene never changes for an
+    index's lifetime, and this must never build device arrays."""
+    if edge_grid is False:
+        return 0
+    scene = index.scene
+    E = scene.edges.shape[0]
+    key = (hash(scene.edges.tobytes()), E, lane,
+           float(scene.width), float(scene.height))
+    plan = _GRID_PLAN_CACHE.get(key)
+    if plan is None:
+        ea, eb, _ = _pack_edges(index, lane)
+        gnx, gny, _, M = plan_grid(ea, eb, E, scene.width, scene.height)
+        if len(_GRID_PLAN_CACHE) >= 64:
+            _GRID_PLAN_CACHE.clear()
+        plan = _GRID_PLAN_CACHE[key] = (gnx, gny, M, ea.shape[0])
+    gnx, gny, M, Ep = plan
+    if edge_grid is None and 3 * max(gnx, gny) * M >= Ep:
+        return 0                      # the auto policy stays dense
+    return ell_bytes(gnx, gny, M)
 
 
 def slab_label_slots(index: EHLIndex, lane: int = 128,
@@ -257,7 +351,8 @@ def slab_label_slots(index: EHLIndex, lane: int = 128,
 
 
 def slab_device_bytes(index: EHLIndex, lane: int = 128,
-                      region_pad_multiple: int = 1) -> int:
+                      region_pad_multiple: int = 1,
+                      edge_grid: bool | None = None) -> int:
     """What ``pack_index(...).device_bytes()`` would be, without packing.
 
     Lets callers report the single-slab footprint for comparison against the
@@ -265,13 +360,19 @@ def slab_device_bytes(index: EHLIndex, lane: int = 128,
     """
     _, slots = slab_label_slots(index, lane, region_pad_multiple)
     per_slot = 4 + 8 + 4 + 4          # hub_ids + via_xy + via_d + via_ids
-    Ep = _round_up(max(1, index.scene.edges.shape[0]), lane)
-    return slots * per_slot + index.mapper.size * 4 + 2 * Ep * 2 * 4
+    Ep = padded_edge_count(index.scene.edges.shape[0], lane)
+    return (slots * per_slot + index.mapper.size * 4 + 3 * Ep * 2 * 4
+            + _grid_bytes(index, lane, edge_grid))
 
 
 def pack_index(index: EHLIndex, lane: int = 128,
-               region_pad_multiple: int = 1) -> PackedIndex:
-    """Freeze a (possibly compressed) host index into one global-Lmax slab."""
+               region_pad_multiple: int = 1,
+               edge_grid: bool | None = None) -> PackedIndex:
+    """Freeze a (possibly compressed) host index into one global-Lmax slab.
+
+    ``edge_grid``: ``None`` attaches the §10 edge grid when pruning pays,
+    ``True``/``False`` force it on/off.
+    """
     live, packs = _host_packs(index)
     R = _round_up(len(live), region_pad_multiple)
 
@@ -283,12 +384,15 @@ def pack_index(index: EHLIndex, lane: int = 128,
         _fill_row(arrs, i, p)
 
     mapper = _cell_mapper(index, live)
-    ea, eb = _pack_edges(index, lane)
+    ea, eb, ec = _pack_edges(index, lane)
+    grid = _maybe_grid(ea, eb, index.scene.edges.shape[0], index.scene,
+                       edge_grid)
     return PackedIndex(
         hub_ids=jnp.asarray(arrs[0]), via_xy=jnp.asarray(arrs[1]),
         via_d=jnp.asarray(arrs[2]), via_ids=jnp.asarray(arrs[3]),
         mapper=jnp.asarray(mapper), edges_a=jnp.asarray(ea),
-        edges_b=jnp.asarray(eb), nx=index.nx, ny=index.ny,
+        edges_b=jnp.asarray(eb), edges_c=jnp.asarray(ec), grid=grid,
+        nx=index.nx, ny=index.ny,
         cell_size=float(index.cell_size), width=float(index.scene.width),
         height=float(index.scene.height))
 
@@ -309,20 +413,21 @@ def plan_buckets(index: EHLIndex, lane: int = 128
     return counts, widths, region_bucket
 
 
-def bucketed_device_bytes(index: EHLIndex, lane: int = 128) -> int:
+def bucketed_device_bytes(index: EHLIndex, lane: int = 128,
+                          edge_grid: bool | None = None) -> int:
     """What ``pack_bucketed(...).device_bytes()`` would be, without packing."""
     counts, widths, region_bucket = plan_buckets(index, lane)
     per_slot = 4 + 8 + 4 + 4          # hub_ids + via_xy + via_d + via_ids
     slabs = sum(max(1, int((region_bucket == k).sum())) * w * per_slot
                 for k, w in enumerate(widths))
-    Ep = _round_up(max(1, index.scene.edges.shape[0]), lane)
+    Ep = padded_edge_count(index.scene.edges.shape[0], lane)
     return (slabs + index.mapper.size * 4 + 2 * len(counts) * 4
-            + 2 * Ep * 2 * 4)
+            + 3 * Ep * 2 * 4 + _grid_bytes(index, lane, edge_grid))
 
 
 def pack_bucketed(index: EHLIndex, lane: int = 128,
-                  reuse_edges_from: "BucketedIndex | PackedIndex | None" = None
-                  ) -> BucketedIndex:
+                  reuse_edges_from: "BucketedIndex | PackedIndex | None" = None,
+                  edge_grid: bool | None = None) -> BucketedIndex:
     """Freeze a host index into width-bucketed slabs (DESIGN.md §4).
 
     Each region goes into the smallest power-of-two-multiple-of-``lane``
@@ -330,11 +435,16 @@ def pack_bucketed(index: EHLIndex, lane: int = 128,
     instead of being governed by the single largest merged region.
 
     ``reuse_edges_from``: repack-from-index fast path for the adaptive
-    hot-swap loop — the scene (and thus the padded edge tensors) never
-    changes across recompressions, so the previous artifact's device-resident
-    ``edges_a``/``edges_b`` are aliased instead of re-uploaded.  Region packs
-    untouched since the last pack are already reused via the per-region
-    ``packed`` cache (:meth:`EHLIndex.pack_region`).
+    hot-swap loop — the scene (and thus the padded edge tensors and the
+    edge grid built from them) never changes across recompressions, so the
+    previous artifact's device-resident ``edges_a/b/c`` and ``grid`` are
+    aliased instead of re-uploaded.  Region packs untouched since the last
+    pack are already reused via the per-region ``packed`` cache
+    (:meth:`EHLIndex.pack_region`).
+
+    ``edge_grid``: ``None`` attaches the §10 edge grid when pruning pays,
+    ``True``/``False`` force it on/off (ignored when reusing — the previous
+    artifact's decision carries over with its arrays).
     """
     live, packs = _host_packs(index)
     counts, widths, region_bucket = plan_buckets(index, lane)
@@ -353,9 +463,14 @@ def pack_bucketed(index: EHLIndex, lane: int = 128,
 
     mapper = _cell_mapper(index, live)
     if reuse_edges_from is not None:
-        ea, eb = reuse_edges_from.edges_a, reuse_edges_from.edges_b
+        ea, eb, ec = (reuse_edges_from.edges_a, reuse_edges_from.edges_b,
+                      reuse_edges_from.edges_c)
+        grid = reuse_edges_from.grid
     else:
-        ea, eb = _pack_edges(index, lane)
+        ea, eb, ec = _pack_edges(index, lane)
+        grid = _maybe_grid(ea, eb, index.scene.edges.shape[0], index.scene,
+                           edge_grid)
+        ea, eb, ec = jnp.asarray(ea), jnp.asarray(eb), jnp.asarray(ec)
     return BucketedIndex(
         hub_ids=tuple(jnp.asarray(a[0]) for a in slabs),
         via_xy=tuple(jnp.asarray(a[1]) for a in slabs),
@@ -364,7 +479,7 @@ def pack_bucketed(index: EHLIndex, lane: int = 128,
         mapper=jnp.asarray(mapper),
         region_bucket=jnp.asarray(region_bucket),
         region_row=jnp.asarray(region_row),
-        edges_a=jnp.asarray(ea), edges_b=jnp.asarray(eb),
+        edges_a=ea, edges_b=eb, edges_c=ec, grid=grid,
         nx=index.nx, ny=index.ny, cell_size=float(index.cell_size),
         width=float(index.scene.width), height=float(index.scene.height),
         widths=tuple(widths))
@@ -385,42 +500,59 @@ def locate_regions(idx, pts: jnp.ndarray) -> jnp.ndarray:
     return idx.mapper[iy * idx.nx + ix]
 
 
-def _labels_to_distances(labels_s, labels_t, s, t, edges_a, edges_b,
-                         use_kernels: bool, want_argmin: bool):
-    """Shared Eq. 1-3 core: per-endpoint labels -> distances (+ argmin ids).
+def _segvis(p, q, edges, use_kernels: bool):
+    """Visibility dispatch: grid-pruned when the artifact carries a grid.
 
-    ``labels_*`` are (hub_ids [B,L], via_xy [B,L,2], via_d [B,L],
-    via_ids [B,L]) gathered for each query endpoint.  One code path serves
-    ``query_batch``, ``query_batch_argmin`` and the bucketed dispatch, for
-    both the jnp reference ops and the Pallas kernels: the join emits the
-    row-min form ``rowmin[b,i] = vd_s[b,i] + min_{hub match j} vd_t[b,j]``
-    and the argmin pair is recovered with two cheap O(L) reductions.
+    ``edges`` is the (edges_a, edges_b, edges_c, grid) tuple; the grid path
+    is bitwise-identical to the dense path (DESIGN.md §10 superset
+    argument), so this choice is invisible to every caller.
     """
     from repro.kernels import ops
 
-    hub_s, xy_s, d_s, vid_s = labels_s
-    hub_t, xy_t, d_t, vid_t = labels_t
-    segvis = ops.segvis_kernel if use_kernels else ops.segvis_ref
+    ea, eb, ec, grid = edges
+    if grid is not None:
+        return segvis_grid(p, q, ea, eb, ec, grid, use_kernels=use_kernels)
+    fn = ops.segvis_kernel if use_kernels else ops.segvis_ref
+    return fn(p, q, ea, eb, ec)
+
+
+def _mask_labels(labels, pts, edges, use_kernels: bool):
+    """Per-endpoint half of Eq. 1-3: fold via visibility into distances.
+
+    (hub [B,L], xy [B,L,2], d [B,L], vid [B,L]) -> (hub, vd, vid) where
+    ``vd`` is inf wherever the via vertex is invisible from the query
+    point.  Runs on whichever device holds the endpoint's labels — the
+    sharded router calls it per shard with that shard's clipped edge set,
+    which covers every segment of queries in its owned regions, so results
+    match the single-device full-edge fold exactly.
+    """
+    hub, xy, d, vid = labels
+    B, L = hub.shape
+    vis = _segvis(jnp.repeat(pts, L, axis=0), xy.reshape(-1, 2),
+                  edges, use_kernels).reshape(B, L)
+    vd = jnp.where(vis, jnp.linalg.norm(pts[:, None] - xy, axis=-1) + d,
+                   jnp.float32(jnp.inf))
+    return hub, vd, vid
+
+
+def _join_masked(masked_s, masked_t, s, t, covis, use_kernels: bool,
+                 want_argmin: bool):
+    """Join half of Eq. 1-3 over visibility-masked labels.
+
+    The join emits the row-min form ``rowmin[b,i] = vd_s[b,i] + min_{hub
+    match j} vd_t[b,j]`` and the argmin pair is recovered with two cheap
+    O(L) reductions.  ``covis`` overrides with the direct Euclidean
+    distance (the label set does not witness co-visible pairs).
+    """
+    from repro.kernels import ops
+
+    hub_s, vd_s, vid_s = masked_s
+    hub_t, vd_t, vid_t = masked_t
     rowmin_join = (ops.label_join_rowmin_kernel if use_kernels
                    else ops.label_join_rowmin_ref)
 
-    B, L = hub_s.shape
-    # visibility of each via vertex from its query point  [B, L]
-    vis_s = segvis(jnp.repeat(s, L, axis=0), xy_s.reshape(-1, 2),
-                   edges_a, edges_b).reshape(B, L)
-    vis_t = segvis(jnp.repeat(t, L, axis=0), xy_t.reshape(-1, 2),
-                   edges_a, edges_b).reshape(B, L)
-
-    inf = jnp.float32(jnp.inf)
-    vd_s = jnp.where(vis_s, jnp.linalg.norm(s[:, None] - xy_s, axis=-1) + d_s,
-                     inf)
-    vd_t = jnp.where(vis_t, jnp.linalg.norm(t[:, None] - xy_t, axis=-1) + d_t,
-                     inf)
-
     rowmin = rowmin_join(hub_s, vd_s, hub_t, vd_t)      # [B, L]
     d_label = rowmin.min(axis=-1)
-
-    covis = segvis(s, t, edges_a, edges_b)              # [B]
     d_direct = jnp.linalg.norm(s - t, axis=-1)
     d = jnp.where(covis, d_direct, d_label)
     if not want_argmin:
@@ -429,6 +561,7 @@ def _labels_to_distances(labels_s, labels_t, s, t, edges_a, edges_b,
     # winning (i, j): i minimizes the row join; with i's hub fixed, j is the
     # min-vd_t label sharing that hub (ties resolve to the first index, same
     # as the historical flat [L,L] argmin).
+    inf = jnp.float32(jnp.inf)
     i = jnp.argmin(rowmin, axis=-1)                     # [B]
     hub_i = jnp.take_along_axis(hub_s, i[:, None], 1)   # [B, 1]
     vd_t_match = jnp.where(hub_t == hub_i, vd_t, inf)
@@ -439,9 +572,31 @@ def _labels_to_distances(labels_s, labels_t, s, t, edges_a, edges_b,
     return d, covis, via_s, hub, via_t
 
 
+def _labels_to_distances(labels_s, labels_t, s, t, edges,
+                         use_kernels: bool, want_argmin: bool):
+    """Shared Eq. 1-3 core: per-endpoint labels -> distances (+ argmin ids).
+
+    ``labels_*`` are (hub_ids [B,L], via_xy [B,L,2], via_d [B,L],
+    via_ids [B,L]) gathered for each query endpoint; ``edges`` is the
+    (edges_a, edges_b, edges_c, grid) tuple.  One code path serves
+    ``query_batch``, ``query_batch_argmin``, the bucketed dispatch and
+    (split across devices) the sharded router, for both the jnp reference
+    ops and the Pallas kernels.
+    """
+    masked_s = _mask_labels(labels_s, s, edges, use_kernels)
+    masked_t = _mask_labels(labels_t, t, edges, use_kernels)
+    covis = _segvis(s, t, edges, use_kernels)           # [B]
+    return _join_masked(masked_s, masked_t, s, t, covis, use_kernels,
+                        want_argmin)
+
+
 def _gather_packed(idx: PackedIndex, rows: jnp.ndarray):
     return (idx.hub_ids[rows], idx.via_xy[rows], idx.via_d[rows],
             idx.via_ids[rows])
+
+
+def _edges_of(idx) -> tuple:
+    return (idx.edges_a, idx.edges_b, idx.edges_c, idx.grid)
 
 
 @partial(jax.jit, static_argnames=("use_kernels",))
@@ -459,7 +614,7 @@ def query_batch(idx: PackedIndex, s: jnp.ndarray, t: jnp.ndarray,
     rt = locate_regions(idx, t)
     return _labels_to_distances(
         _gather_packed(idx, rs), _gather_packed(idx, rt), s, t,
-        idx.edges_a, idx.edges_b, use_kernels, want_argmin=False)
+        _edges_of(idx), use_kernels, want_argmin=False)
 
 
 @partial(jax.jit, static_argnames=("use_kernels",))
@@ -472,7 +627,7 @@ def query_batch_argmin(idx: PackedIndex, s: jnp.ndarray, t: jnp.ndarray,
     rt = locate_regions(idx, t)
     return _labels_to_distances(
         _gather_packed(idx, rs), _gather_packed(idx, rt), s, t,
-        idx.edges_a, idx.edges_b, use_kernels, want_argmin=True)
+        _edges_of(idx), use_kernels, want_argmin=True)
 
 
 # ---------------------------------------------------------------------------
@@ -538,7 +693,7 @@ def query_batch_at_bucket(bx: BucketedIndex, s: jnp.ndarray, t: jnp.ndarray,
     rt = locate_regions(bx, t)
     return _labels_to_distances(
         _gather_bucketed(bx, rs, bucket), _gather_bucketed(bx, rt, bucket),
-        s, t, bx.edges_a, bx.edges_b, use_kernels, want_argmin)
+        s, t, _edges_of(bx), use_kernels, want_argmin)
 
 
 # ---------------------------------------------------------------------------
@@ -550,12 +705,9 @@ def gather_labels_at_width(bx: BucketedIndex, regions: jnp.ndarray,
                            width: int):
     """Gather [B] regions' labels as dense [B, width] tensors.
 
-    The device half of sharded routing: each shard gathers its *own*
-    endpoints' label rows at the pair's join width; for a cross-shard query
-    the t-side tensors are then shipped to the s-side device and joined
-    there (:func:`join_gathered`).  ``width`` must be >= the widest bucket
-    any of ``regions`` lives in — the host router guarantees that by
-    dispatching at ``max(endpoint widths)``.
+    ``width`` must be >= the widest bucket any of ``regions`` lives in —
+    the host router guarantees that by dispatching at ``max(endpoint
+    widths)``.
     """
     bucket = max((k for k, w in enumerate(bx.widths) if w <= width),
                  default=0)
@@ -565,24 +717,130 @@ def gather_labels_at_width(bx: BucketedIndex, regions: jnp.ndarray,
 @partial(jax.jit, static_argnames=("use_kernels", "want_argmin"))
 def join_gathered(labels_s, labels_t, s: jnp.ndarray, t: jnp.ndarray,
                   edges_a: jnp.ndarray, edges_b: jnp.ndarray,
+                  edges_c: jnp.ndarray | None = None,
+                  grid: EdgeGrid | None = None,
                   use_kernels: bool = False, want_argmin: bool = False):
     """Eq. 1-3 over pre-gathered label tensors (both sides [B, W]).
 
-    Same distance/join core as every other entry point, minus the on-device
-    region lookup — the labels arrive already gathered (possibly from
-    another shard's device).  With identical label/edge values this is
-    bitwise-identical to ``query_batch_at_bucket`` at width W: the compute
-    graph below the gather is the same code.
+    Single-device convenience form (one edge set answers both sides).  The
+    sharded router uses the split-phase entries below instead, so each
+    side's visibility runs on the device whose clipped edge set covers it.
     """
     s = s.astype(jnp.float32)
     t = t.astype(jnp.float32)
-    return _labels_to_distances(labels_s, labels_t, s, t, edges_a, edges_b,
+    edges = (edges_a, edges_b, edges_b if edges_c is None else edges_c, grid)
+    return _labels_to_distances(labels_s, labels_t, s, t, edges,
                                 use_kernels, want_argmin)
+
+
+@partial(jax.jit, static_argnames=("width", "use_kernels"))
+def gather_masked_labels(bx: BucketedIndex, regions: jnp.ndarray,
+                         pts: jnp.ndarray, width: int,
+                         use_kernels: bool = False):
+    """Gather + visibility-fold one endpoint side on its owning shard.
+
+    The device half of sharded routing (DESIGN.md §9/§10): the owning
+    shard's edge subset is clipped to its owned regions dilated by their
+    label reach, which covers every (query point -> via) segment of
+    queries located in those regions — so the returned (hub, vd, vid)
+    triple is byte-identical to the full-edge single-device fold.  For a
+    cross-shard query the t-side triple then ships to the s-side device
+    ([B, W] tensors, not slabs) for :func:`join_masked`.
+    """
+    bucket = max((k for k, w in enumerate(bx.widths) if w <= width),
+                 default=0)
+    labels = _gather_bucketed(bx, regions, bucket, width)
+    return _mask_labels(labels, pts.astype(jnp.float32), _edges_of(bx),
+                        use_kernels)
+
+
+@partial(jax.jit, static_argnames=("use_kernels",))
+def covis_blocked(s: jnp.ndarray, t: jnp.ndarray, edges_a, edges_b, edges_c,
+                  grid: EdgeGrid | None = None,
+                  use_kernels: bool = False) -> jnp.ndarray:
+    """[B] int32 — 1 where a *local* edge blocks the direct s->t segment.
+
+    The distributed co-visibility test: each shard whose owned bounding box
+    the batch touches answers against its own clipped edges, and the router
+    ORs the verdicts — the union of participating clips covers every edge
+    the segment can cross, so the OR equals the single-device covis bit.
+    """
+    s = s.astype(jnp.float32)
+    t = t.astype(jnp.float32)
+    vis = _segvis(s, t, (edges_a, edges_b, edges_c, grid), use_kernels)
+    return (~vis).astype(jnp.int32)
+
+
+@partial(jax.jit, static_argnames=("use_kernels", "want_argmin"))
+def join_masked(masked_s, masked_t, s: jnp.ndarray, t: jnp.ndarray,
+                covis: jnp.ndarray, use_kernels: bool = False,
+                want_argmin: bool = False):
+    """Eq. 1-3 join over visibility-masked label triples (both sides [B, W]).
+
+    Runs on the s-side device; ``covis`` is the merged co-visibility bit
+    from :func:`covis_blocked`.  With identical masked inputs this is
+    bitwise-identical to the single-device ``query_batch_at_bucket`` tail —
+    it is the same code.
+    """
+    s = s.astype(jnp.float32)
+    t = t.astype(jnp.float32)
+    return _join_masked(masked_s, masked_t, s, t, covis.astype(bool),
+                        use_kernels, want_argmin)
+
+
+def _region_clip_boxes(index: EHLIndex, live: list, packs: list,
+                       cell_region: np.ndarray) -> np.ndarray:
+    """[R, 4] per-region visibility-reach boxes (xmin, ymin, xmax, ymax).
+
+    The box spans the region's own cells *and* every via vertex its labels
+    reach: any (query point -> via) segment of a query located in the
+    region stays inside the box (a segment lies in the bounding box of its
+    endpoints), and so does the region-local part of any s->t segment.
+    Dilated by a small slack so float32 sign tests on nearly-touching
+    edges can never disagree with the clip.
+    """
+    R = len(live)
+    cs = float(index.cell_size)
+    iy, ix = np.divmod(np.arange(index.mapper.size), index.nx)
+    boxes = np.full((R, 4), np.inf)
+    boxes[:, 2:] = -np.inf
+    np.minimum.at(boxes[:, 0], cell_region, ix * cs)
+    np.minimum.at(boxes[:, 1], cell_region, iy * cs)
+    np.maximum.at(boxes[:, 2], cell_region, (ix + 1) * cs)
+    np.maximum.at(boxes[:, 3], cell_region, (iy + 1) * cs)
+    for r, p in enumerate(packs):
+        xy = p["via_xy"]
+        if len(xy):
+            boxes[r, 0] = min(boxes[r, 0], xy[:, 0].min())
+            boxes[r, 1] = min(boxes[r, 1], xy[:, 1].min())
+            boxes[r, 2] = max(boxes[r, 2], xy[:, 0].max())
+            boxes[r, 3] = max(boxes[r, 3], xy[:, 1].max())
+    slack = 1e-3 * max(index.scene.width, index.scene.height)
+    boxes[:, :2] -= slack
+    boxes[:, 2:] += slack
+    return boxes
+
+
+def _shard_edge_mask(index: EHLIndex, clip_boxes: np.ndarray,
+                     members: np.ndarray) -> np.ndarray:
+    """[E] bool — edges whose bbox meets any owned region's clip box."""
+    edges = index.scene.edges
+    if edges.shape[0] == 0:
+        return np.zeros(0, dtype=bool)
+    ex0 = np.minimum(edges[:, 0, 0], edges[:, 1, 0])
+    ex1 = np.maximum(edges[:, 0, 0], edges[:, 1, 0])
+    ey0 = np.minimum(edges[:, 0, 1], edges[:, 1, 1])
+    ey1 = np.maximum(edges[:, 0, 1], edges[:, 1, 1])
+    bx = clip_boxes[members]                            # [Rk, 4]
+    hit = ((ex0[None] <= bx[:, 2:3]) & (ex1[None] >= bx[:, 0:1]) &
+           (ey0[None] <= bx[:, 3:4]) & (ey1[None] >= bx[:, 1:2]))
+    return hit.any(axis=0)
 
 
 def pack_bucketed_split(index: EHLIndex, region_shard: np.ndarray,
                         num_shards: int | None = None, lane: int = 128,
-                        reuse_edges_from=None):
+                        reuse_edges_from=None, reuse_edge_masks=None,
+                        edge_grid: bool | None = None):
     """Freeze a host index into per-shard width-bucketed slabs.
 
     The shard-aware sibling of :func:`pack_bucketed`: ``region_shard`` maps
@@ -593,21 +851,28 @@ def pack_bucketed_split(index: EHLIndex, region_shard: np.ndarray,
     multiple of ``lane`` — so sharded join widths match the unsharded
     dispatch widths exactly).
 
+    **Edges are no longer replicated**: each shard carries only the edges
+    whose bounding box meets one of its owned regions' clip boxes (region
+    cells + every via vertex its labels reach, slack-dilated) — sufficient
+    for both the label-visibility fold of queries it owns and its share of
+    the distributed co-visibility test (DESIGN.md §9/§10).  Each subset
+    gets its own edge grid per the ``edge_grid`` policy.
+
     Every shard's mapper covers the full grid; cells owned by other shards
     resolve to local row 0 — harmless, because the host-side routing table
     returned alongside is what decides which shard a query is sent to.
 
-    ``reuse_edges_from``: a previous artifact (single ``BucketedIndex`` /
-    ``PackedIndex``) or a per-shard sequence of them — the scene never
-    changes across recompressions, so the padded edge tensors are aliased
-    instead of re-uploaded (the multi-shard hot-swap fast path, mirroring
-    ``pack_bucketed``).
+    ``reuse_edges_from`` (+ ``reuse_edge_masks``): previous-generation
+    per-shard artifacts and their edge masks — a shard's device-resident
+    edge tensors/grid are aliased iff its clip mask is unchanged (the
+    recompression may have changed label reach, so masks are compared, not
+    assumed).
 
     Returns ``(shards, route)``: the per-shard ``BucketedIndex`` list plus
-    the host-side routing table, numpy arrays over grid cells —
-    ``cell_shard``/``cell_local`` (destination shard + local region id),
-    ``cell_bucket``/``cell_row`` (slab coordinates inside that shard) and
-    ``cell_width`` (the cell's bucket width, the join-width input).
+    the host-side routing table — cell arrays (``cell_shard``,
+    ``cell_local``, ``cell_bucket``, ``cell_row``, ``cell_width``) and the
+    per-shard ``edge_mask`` list and owned bounding ``shard_rects`` the
+    router's distributed covis test uses.
     """
     live, packs = _host_packs(index)
     R = len(live)
@@ -620,7 +885,8 @@ def pack_bucketed_split(index: EHLIndex, region_shard: np.ndarray,
     counts = index.packed_label_counts()
     if reuse_edges_from is None or hasattr(reuse_edges_from, "edges_a"):
         reuse_edges_from = [reuse_edges_from] * S
-    ea0, eb0 = None, None       # packed once, aliased across shards
+    if reuse_edge_masks is None:
+        reuse_edge_masks = [None] * S
 
     # global region -> (local id, local bucket, local row) within its shard
     region_local = np.zeros(R, dtype=np.int32)
@@ -629,8 +895,9 @@ def pack_bucketed_split(index: EHLIndex, region_shard: np.ndarray,
     region_width = np.array([bucket_width(max(1, int(c)), lane)
                              for c in counts], dtype=np.int32)
     cell_region = _cell_mapper(index, live)
+    clip_boxes = _region_clip_boxes(index, live, packs, cell_region)
 
-    shards = []
+    shards, edge_masks, shard_rects = [], [], np.zeros((S, 4))
     for k in range(S):
         members = np.nonzero(region_shard == k)[0]
         if members.size == 0:
@@ -657,14 +924,26 @@ def pack_bucketed_split(index: EHLIndex, region_shard: np.ndarray,
                 _fill_row(arrs, row, packs[gi])
             slabs.append(arrs)
 
+        mask = _shard_edge_mask(index, clip_boxes, members)
+        edge_masks.append(mask)
+        # owned bounding rect: which batches this shard's covis test covers
+        cells_k = np.nonzero(region_shard[cell_region] == k)[0]
+        iy, ix = np.divmod(cells_k, index.nx)
+        cs = float(index.cell_size)
+        shard_rects[k] = (ix.min() * cs, iy.min() * cs,
+                          (ix.max() + 1) * cs, (iy.max() + 1) * cs)
+
         reuse = reuse_edges_from[k]
-        if reuse is not None:
-            ea, eb = reuse.edges_a, reuse.edges_b
+        prev_mask = reuse_edge_masks[k]
+        if reuse is not None and prev_mask is not None \
+                and np.array_equal(prev_mask, mask):
+            ea, eb, ec = reuse.edges_a, reuse.edges_b, reuse.edges_c
+            grid = reuse.grid
         else:
-            if ea0 is None:
-                ea0, eb0 = _pack_edges(index, lane)
-                ea0, eb0 = jnp.asarray(ea0), jnp.asarray(eb0)
-            ea, eb = ea0, eb0
+            ea, eb, ec = _pack_edges(index, lane, mask=mask)
+            grid = _maybe_grid(ea, eb, int(mask.sum()), index.scene,
+                               edge_grid)
+            ea, eb, ec = jnp.asarray(ea), jnp.asarray(eb), jnp.asarray(ec)
 
         # full-grid mapper: owned cells -> local id, foreign cells -> 0
         mapper_k = np.where(region_shard[cell_region] == k,
@@ -677,7 +956,7 @@ def pack_bucketed_split(index: EHLIndex, region_shard: np.ndarray,
             mapper=jnp.asarray(mapper_k),
             region_bucket=jnp.asarray(lbucket),
             region_row=jnp.asarray(lrow),
-            edges_a=ea, edges_b=eb,
+            edges_a=ea, edges_b=eb, edges_c=ec, grid=grid,
             nx=index.nx, ny=index.ny, cell_size=float(index.cell_size),
             width=float(index.scene.width), height=float(index.scene.height),
             widths=tuple(widths_k)))
@@ -690,7 +969,9 @@ def pack_bucketed_split(index: EHLIndex, region_shard: np.ndarray,
         cell_local=region_local[cell_region],
         cell_bucket=region_lbucket[cell_region],
         cell_row=region_lrow[cell_region],
-        cell_width=region_width[cell_region])
+        cell_width=region_width[cell_region],
+        edge_mask=edge_masks,
+        shard_rects=shard_rects)
     return shards, route
 
 

@@ -14,6 +14,7 @@ from . import ref as _ref
 from .label_join import label_join as _label_join_pallas
 from .label_join import label_join_rowmin as _label_join_rowmin_pallas
 from .segvis import segvis as _segvis_pallas
+from .segvis import segvis_tiles as _segvis_tiles_pallas
 
 
 def _interpret() -> bool:
@@ -22,14 +23,20 @@ def _interpret() -> bool:
 
 # -- references (also the non-TPU production path) ---------------------------
 segvis_ref = _ref.segvis_ref
+segvis_tiles_ref = _ref.segvis_tiles_ref
 label_join_ref = _ref.label_join_ref
 label_join_rowmin_ref = _ref.label_join_rowmin_ref
 label_join_hubdense_ref = _ref.label_join_hubdense_ref
 
 
-def segvis_kernel(p, q, ea, eb, **kw):
+def segvis_kernel(p, q, ea, eb, ec=None, **kw):
     kw.setdefault("interpret", _interpret())
-    return _segvis_pallas(p, q, ea, eb, **kw)
+    return _segvis_pallas(p, q, ea, eb, ec, **kw)
+
+
+def segvis_tiles_kernel(p, q, ax, ay, bx, by, cx, cy, **kw):
+    kw.setdefault("interpret", _interpret())
+    return _segvis_tiles_pallas(p, q, ax, ay, bx, by, cx, cy, **kw)
 
 
 def label_join_kernel(hub_s, vd_s, hub_t, vd_t, **kw):

@@ -2,9 +2,9 @@
 
 The serving half of ``repro.sharding`` (DESIGN.md §9): a
 :class:`~repro.sharding.planner.ShardedIndex` keeps each shard's bucket
-slabs on its own mesh device; the router turns an incoming query batch into
-per-(shard-pair, width) sub-batches and merges the answers back in input
-order.
+slabs — and its *clipped* edge subset + edge grid (§10) — on its own mesh
+device; the router turns an incoming query batch into per-(shard-pair,
+width) sub-batches and merges the answers back in input order.
 
 Routing path per query (all host-side numpy, O(1) per endpoint):
 
@@ -13,19 +13,24 @@ Routing path per query (all host-side numpy, O(1) per endpoint):
 2. the routing table maps each cell to ``(shard, bucket width)``;
 3. the composite key ``(shard_s, shard_t, join width)`` groups the batch.
 
-Dispatch per group:
+Dispatch per group — edges are clipped per shard, so each visibility term
+runs where its covering edge subset lives:
 
-* **same-shard** — both endpoints' label rows are gathered on the owning
-  device and joined there; the common case a locality-aware placement
-  maximizes.
-* **cross-shard** — each side gathers on its own device, the t-side label
-  tensors are shipped to the s-side device (``jax.device_put``, a
-  [B, W]-sized transfer — the slabs themselves never move), and the join
-  runs on the s-side device.
+* each endpoint side gathers its label rows *and folds in via visibility*
+  on its owning device (``gather_masked_labels`` — the owner's clip covers
+  every query-point -> via segment of regions it owns); for a cross-shard
+  query the t-side ``(hub, vd, vid)`` triple ships to the s-side device
+  (``jax.device_put``, [B, W]-sized — the slabs never move);
+* the direct s->t co-visibility segment can cross *any* shard's territory,
+  so every shard whose owned bounding box meets the batch's bounding box
+  answers against its local edges and the [B] verdicts are OR-merged on
+  the s-side device (the participating clips jointly cover every edge the
+  segment can cross);
+* the join (``join_masked``) runs on the s-side device.
 
-Both paths end in :func:`repro.core.packed.join_gathered` — the same
-distance/join core as the single-device engine, so answers are
-bitwise-identical to the unsharded ``BucketedIndex`` engine.
+All three pieces are the same distance/join core the single-device engine
+compiles, so answers are bitwise-identical to the unsharded
+``BucketedIndex`` engine.
 """
 
 from __future__ import annotations
@@ -35,7 +40,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.packed import gather_labels_at_width, join_gathered
+from repro.core.packed import covis_blocked, gather_masked_labels, join_masked
 from repro.launch.mesh import shard_devices
 
 
@@ -60,6 +65,10 @@ class ShardRouter:
         # from wider shards; clipping keeps the (discarded) gather in range
         self._rmax = np.array([max(0, bx.num_regions - 1)
                                for bx in self.shards], dtype=np.int32)
+        # covis participation: slack-dilated owned rects (host side)
+        self._rects = np.asarray(sharded.shard_rects, np.float64)
+        self._covis_slack = 1e-3 * float(
+            max(self.sharded.shards[0].width, self.sharded.shards[0].height))
 
     # ------------------------------------------------------------- routing
     def _cells(self, pts: np.ndarray) -> np.ndarray:
@@ -100,14 +109,60 @@ class ShardRouter:
         # detour through the default device would double the traffic)
         return jax.device_put(ids, self.devices[shard])
 
+    def covis_shards(self, s: np.ndarray, t: np.ndarray) -> list:
+        """Shards whose owned rect meets the batch's bounding box.
+
+        Any edge the direct s->t segments can cross sits in a cell one of
+        these shards owns, hence inside that shard's clipped edge subset.
+
+        Zero-pair rows — both endpoints exactly the origin — are the tail
+        padding serving batches carry; they are excluded from the bbox so
+        padded batches don't drag every shard below/left of the batch into
+        the covis test.  Safe even for a *real* (0,0)->(0,0) query: a
+        degenerate segment can never fire a §5 rule, so its covis bit is
+        correct under any participant set.
+        """
+        real = np.any(s != 0.0, axis=1) | np.any(t != 0.0, axis=1)
+        if not real.any():
+            return []
+        pts = np.concatenate([s[real], t[real]], axis=0)
+        lo = pts.min(axis=0) - self._covis_slack
+        hi = pts.max(axis=0) + self._covis_slack
+        r = self._rects
+        hit = ((r[:, 0] <= hi[0]) & (r[:, 2] >= lo[0]) &
+               (r[:, 1] <= hi[1]) & (r[:, 3] >= lo[1]))
+        return [int(k) for k in np.nonzero(hit)[0]]
+
+    def _covis(self, s_at, t_at, parts: list, home: int):
+        """Merged co-visibility bits on the home device.
+
+        The per-shard verdicts are all dispatched before the OR loop
+        blocks on any of them, so participating devices compute in
+        parallel.  ``s_at``/``t_at`` are the dispatch-level per-device
+        batch caches.
+        """
+        dev = self.devices[home]
+        verdicts = []
+        for k in parts:
+            bx = self.shards[k]
+            verdicts.append(covis_blocked(
+                s_at(k), t_at(k),
+                bx.edges_a, bx.edges_b, bx.edges_c, bx.grid,
+                use_kernels=self.use_kernels))
+        blocked = None
+        for bk in verdicts:
+            bk = jax.device_put(bk, dev)
+            blocked = bk if blocked is None else blocked | bk
+        return blocked == 0
+
     def dispatch(self, s, t, key: int, want_argmin: bool = False):
         """Answer one routed sub-batch on its destination shard's device.
 
         Every query in ``s``/``t`` must carry routing key ``key`` (padding
         rows are exempt — their answers are garbage the caller discards,
         exactly like per-bucket dispatch under-width padding).  Returns
-        device arrays; ``(i, j)`` — the shards that participated — ride
-        along for the caller's stats.
+        device arrays; ``(i, j, covis participants)`` ride along for the
+        caller's stats.
         """
         i, j, W = self.decode_key(key)
         s = np.asarray(s, np.float32)
@@ -115,38 +170,58 @@ class ShardRouter:
         cs, ct = self._cells(s), self._cells(t)
         dev = self.devices[i]
 
-        labels_s = gather_labels_at_width(
-            self.shards[i], self._locals(cs, i), W)
-        labels_t = gather_labels_at_width(
-            self.shards[j], self._locals(ct, j), W)
+        # one host->device transfer of each batch side per involved device,
+        # shared by the gathers, the covis participants, and the join
+        s_on, t_on = {}, {}
+
+        def s_at(k):
+            if k not in s_on:
+                s_on[k] = jax.device_put(s, self.devices[k])
+            return s_on[k]
+
+        def t_at(k):
+            if k not in t_on:
+                t_on[k] = jax.device_put(t, self.devices[k])
+            return t_on[k]
+
+        masked_s = gather_masked_labels(
+            self.shards[i], self._locals(cs, i), s_at(i), W,
+            use_kernels=self.use_kernels)
+        masked_t = gather_masked_labels(
+            self.shards[j], self._locals(ct, j), t_at(j), W,
+            use_kernels=self.use_kernels)
         if i != j:
-            # ship the gathered [B, W] rows, not the slabs
-            labels_t = jax.device_put(labels_t, dev)
-        res = join_gathered(
-            labels_s, labels_t,
-            jax.device_put(s, dev), jax.device_put(t, dev),
-            self.shards[i].edges_a, self.shards[i].edges_b,
+            # ship the masked [B, W] label triple, not the slabs
+            masked_t = jax.device_put(masked_t, dev)
+        parts = self.covis_shards(s, t) or [i]
+        covis = self._covis(s_at, t_at, parts, i)
+        res = join_masked(
+            masked_s, masked_t, s_at(i), t_at(i), covis,
             use_kernels=self.use_kernels, want_argmin=want_argmin)
-        return res, (i, j)
+        return res, (i, j, parts)
 
     # ------------------------------------------------------------- serving
     def warmup(self, batch_size: int, want_argmin: bool = False) -> None:
-        """Trace every (device, width) gather/join entry at serving shape."""
+        """Trace every (device, width) gather/join/covis entry at shape."""
         z = np.zeros((batch_size, 2), np.float32)
         zr = np.zeros((batch_size,), np.int32)
         for k, bx in enumerate(self.shards):
             dev = self.devices[k]
             zd = jax.device_put(z, dev)
             zrd = jax.device_put(zr, dev)
+            cz = jax.block_until_ready(covis_blocked(
+                zd, zd, bx.edges_a, bx.edges_b, bx.edges_c, bx.grid,
+                use_kernels=self.use_kernels)) == 0
             for W in self.width_classes:
                 W = int(W)
                 if W < bx.widths[0]:
                     continue        # no local bucket fits under this width
-                labels = gather_labels_at_width(bx, zrd, W)
-                jax.block_until_ready(join_gathered(
-                    labels, labels, zd, zd, bx.edges_a, bx.edges_b,
+                masked = gather_masked_labels(bx, zrd, zd, W,
+                                              use_kernels=self.use_kernels)
+                jax.block_until_ready(join_masked(
+                    masked, masked, zd, zd, cz,
                     use_kernels=self.use_kernels, want_argmin=False))
                 if want_argmin:
-                    jax.block_until_ready(join_gathered(
-                        labels, labels, zd, zd, bx.edges_a, bx.edges_b,
+                    jax.block_until_ready(join_masked(
+                        masked, masked, zd, zd, cz,
                         use_kernels=self.use_kernels, want_argmin=True))

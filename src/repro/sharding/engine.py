@@ -43,6 +43,8 @@ class ShardStats:
     slots: int = 0              # query slots dispatched here (incl. padding)
     seconds: float = 0.0
     gathers_out: int = 0        # label rows gathered here for another shard
+    covis_assists: int = 0      # covis verdicts computed here for another
+    #   shard's join (distributed s->t visibility over clipped edges, §10)
 
     @property
     def occupancy(self) -> float:
@@ -112,8 +114,8 @@ class ShardedQueryEngine(QueryEngine):
 
     def _run(self, s, t, key: int, want_argmin: bool):
         t0 = time.perf_counter()
-        res, (i, j) = self.router.dispatch(s, t, key,
-                                           want_argmin=want_argmin)
+        res, (i, j, covis_parts) = self.router.dispatch(
+            s, t, key, want_argmin=want_argmin)
         jax.block_until_ready(res)
         st = self._stats[i]
         st.seconds += time.perf_counter() - t0
@@ -121,6 +123,9 @@ class ShardedQueryEngine(QueryEngine):
         st.slots += len(s)
         if j != i:
             self._stats[j].gathers_out += len(s)
+        for k in covis_parts:
+            if k != i:
+                self._stats[k].covis_assists += len(s)
         return res
 
     def batch(self, s, t, bucket: int = 0) -> np.ndarray:
@@ -152,6 +157,7 @@ class ShardedQueryEngine(QueryEngine):
             st.slots = 0
             st.seconds = 0.0
             st.gathers_out = 0
+            st.covis_assists = 0
 
     def imbalance(self) -> float:
         return shard_imbalance(self._stats)

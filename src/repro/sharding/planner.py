@@ -27,7 +27,8 @@ import dataclasses
 import numpy as np
 
 from repro.core.grid import EHLIndex
-from repro.core.packed import _round_up, bucket_width, pack_bucketed_split
+from repro.core.packed import (_grid_bytes, bucket_width,
+                               pack_bucketed_split, padded_edge_count)
 
 PER_SLOT = 4 + 8 + 4 + 4        # hub_ids + via_xy + via_d + via_ids bytes
 
@@ -87,6 +88,8 @@ class ShardedIndex:
     cell_bucket: np.ndarray     # [C] cell -> local bucket index
     cell_row: np.ndarray        # [C] cell -> row within that bucket's slab
     cell_width: np.ndarray      # [C] cell -> bucket width (join-width input)
+    edge_masks: list            # per shard: [E] bool clipped-edge subset
+    shard_rects: np.ndarray     # [S, 4] owned-cell bounding boxes (covis)
     nx: int
     ny: int
     cell_size: float
@@ -122,20 +125,38 @@ class ShardedIndex:
                 out.append(dict(shard=k, **row))
         return out
 
+    def edge_bytes(self) -> list:
+        """Per-shard clipped edge-tensor (+ grid) bytes — the replication
+        the clip eliminated is ``num_shards * full_edge_bytes - sum(this)``.
+        """
+        out = []
+        for bx in self.shards:
+            b = int(sum(np.prod(a.shape) * a.dtype.itemsize
+                        for a in (bx.edges_a, bx.edges_b, bx.edges_c)))
+            out.append(b + (bx.grid.device_bytes() if bx.grid else 0))
+        return out
+
 
 def sharded_overhead_bytes(index: EHLIndex, num_shards: int,
                            lane: int = 128) -> int:
-    """Extra device bytes sharding adds vs the single-device artifact.
+    """Upper bound on extra device bytes sharding adds vs single-device.
 
-    Each shard replicates the full-grid mapper and the padded edge tensors
-    (the visibility predicate needs every obstacle edge on every device).
-    The budget-driven compression targets ``budget - overhead`` so the
-    *summed* sharded artifact lands under the caller's total budget.
+    Each shard replicates the full-grid mapper; edge tensors are *clipped*
+    per shard (owned-region clip boxes, ``pack_bucketed_split``), so the
+    worst case — every clip keeping every edge, plus the edge grid that
+    clip would carry (`_grid_bytes` mirrors the packers' attach policy) —
+    is the bound used here.  The budget-driven compression targets
+    ``budget - overhead``, and a conservative overhead only ever lands the
+    artifact further under budget; ``ShardedIndex.edge_bytes`` reports the
+    realized clip savings.
     """
     if num_shards <= 1:
         return 0
-    Ep = _round_up(max(1, index.scene.edges.shape[0]), lane)
-    per_shard_fixed = index.mapper.size * 4 + 2 * Ep * 2 * 4
+    Ep = padded_edge_count(index.scene.edges.shape[0], lane)
+    # edge_grid=True: a clipped subset may attach a grid even when the full
+    # edge set's auto policy stays dense, so bound with the forced grid
+    per_shard_fixed = (index.mapper.size * 4 + 3 * Ep * 2 * 4
+                       + _grid_bytes(index, lane, True))
     return (num_shards - 1) * per_shard_fixed
 
 
@@ -213,20 +234,25 @@ class ShardPlanner:
 
     # ----------------------------------------------------------------- build
     def build(self, index: EHLIndex, plan: ShardPlan | None = None,
-              reuse_edges_from=None) -> ShardedIndex:
+              reuse_edges_from=None,
+              edge_grid: bool | None = None) -> ShardedIndex:
         """Pack the planned placement into per-shard device artifacts.
 
-        ``reuse_edges_from``: previous-generation artifact(s) whose padded
-        edge tensors are aliased (the hot-swap repack fast path) — a single
-        packed index, a per-shard sequence, or a previous ``ShardedIndex``.
+        ``reuse_edges_from``: previous-generation artifact(s) whose clipped
+        edge tensors are aliased where the clip is unchanged (the hot-swap
+        repack fast path) — a per-shard sequence or a previous
+        ``ShardedIndex`` (whose stored edge masks gate the reuse).
         """
         if plan is None:
             plan = self.plan(index)
+        reuse_masks = None
         if isinstance(reuse_edges_from, ShardedIndex):
+            reuse_masks = list(reuse_edges_from.edge_masks)
             reuse_edges_from = list(reuse_edges_from.shards)
         shards, route = pack_bucketed_split(
             index, plan.assignment, plan.num_shards, lane=self.lane,
-            reuse_edges_from=reuse_edges_from)
+            reuse_edges_from=reuse_edges_from, reuse_edge_masks=reuse_masks,
+            edge_grid=edge_grid)
         classes = sorted({w for bx in shards for w in bx.widths})
         return ShardedIndex(
             shards=tuple(shards), plan=plan,
@@ -237,5 +263,7 @@ class ShardPlanner:
             cell_bucket=route["cell_bucket"],
             cell_row=route["cell_row"],
             cell_width=route["cell_width"],
+            edge_masks=route["edge_mask"],
+            shard_rects=route["shard_rects"],
             nx=index.nx, ny=index.ny, cell_size=float(index.cell_size),
             width_classes=tuple(classes))

@@ -1,0 +1,234 @@
+"""DESIGN.md §5 blocking convention: every backend, one answer.
+
+Regression battery for the degenerate-geometry classes that historically
+flipped between the host reference and the device predicate (collinear
+overlap, segment anchored on an edge endpoint, through-vertex transversal,
+all cross products in the zero band) — plus the compiler-robustness
+regression: under jit, XLA contracts the cross-product ``t1 - t2`` into an
+fma, and the old exact-zero sign tests turned vertex-anchored segments into
+phantom proper crossings.  The banded predicate must classify identically
+eager, jitted, in the Pallas kernel, and through the edge-grid path.
+"""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core.geometry import (Scene, blocked_strict_batch,
+                                 segments_block_strict, visible_batch)
+from repro.core.edgegrid import build_edge_grid, segvis_grid
+from repro.core.packed import _pack_edges, padded_edge_count
+from repro.kernels import ops
+from repro.kernels.segvis import segvis
+
+SQ = Scene.build([np.array([[4.0, 4.0], [6.0, 4.0], [6.0, 6.0], [4.0, 6.0]])],
+                 10.0, 10.0)
+
+# (p, q, blocked) — hand-constructed degenerate contacts against SQ.
+# Convention: touching != blocked, interior penetration = blocked.
+DEGENERATE_CASES = [
+    # collinear slide along the bottom edge (overlap, containment, partial)
+    ([3.0, 4.0], [7.0, 4.0], False),
+    ([4.0, 4.0], [6.0, 4.0], False),     # vertex-to-vertex along the edge
+    ([5.0, 4.0], [7.0, 4.0], False),     # starts on the open edge, slides out
+    # segment ending exactly on a corner (graze from outside)
+    ([1.0, 1.0], [4.0, 4.0], False),
+    ([7.0, 5.0], [6.0, 6.0], False),
+    # segment ending exactly on an open edge, approaching from outside
+    ([5.0, 1.0], [5.0, 4.0], False),
+    # segment ending on the boundary after crossing the interior
+    ([5.0, 1.0], [5.0, 6.0], True),
+    # through-vertex transversal entering the corner wedge: through (4,6),
+    # no proper edge crossing anywhere (both walls met exactly at the vertex)
+    ([3.0, 8.0], [4.5, 5.0], True),
+    ([3.9, 3.9], [6.1, 6.1], True),      # corner-to-corner diagonal
+    # tangent line through a corner, staying outside the wedge
+    ([3.0, 5.0], [5.0, 3.0], False),     # touches (4,4), both arms one side
+    ([2.0, 6.0], [6.0, 2.0], False),     # longer tangent through (4,4)
+    # near-tangent genuine crossing: clips the corner by 5e-5 — must stay
+    # OUTSIDE the zero band (the band absorbs ulps, not real clearances)
+    ([3.0, 5.0], [5.0, 3.0001], True),
+    # proper crossing (sanity)
+    ([1.0, 5.0], [9.0, 5.0], True),
+]
+
+
+def _edge_arrays(scene, dtype):
+    return (scene.edges[:, 0].astype(dtype), scene.edges[:, 1].astype(dtype),
+            scene.edge_next.astype(dtype))
+
+
+def _all_backends(scene, P, Q):
+    """Visibility verdicts of every §5 backend on float32-cast inputs."""
+    A, B, C = _edge_arrays(scene, np.float32)
+    P32 = P.astype(np.float32)
+    Q32 = Q.astype(np.float32)
+    args = tuple(map(jnp.asarray, (P32, Q32, A, B, C)))
+    out = {
+        "host-f64": ~segments_block_strict(P32, Q32, A, B, C).any(axis=1),
+        "ref-eager": np.asarray(ops.segvis_ref(*args)),
+        "ref-jit": np.asarray(jax.jit(ops.segvis_ref)(*args)),
+        "kernel": np.asarray(segvis(*args, interpret=True)),
+    }
+    ea, eb, ec = _pack_edges(scene, lane=128)
+    grid = build_edge_grid(ea, eb, scene.edges.shape[0], scene.width,
+                           scene.height, sentinel=ea.shape[0] - 1)
+    out["grid"] = np.asarray(segvis_grid(
+        args[0], args[1], jnp.asarray(ea), jnp.asarray(eb), jnp.asarray(ec),
+        grid))
+    out["grid-jit"] = np.asarray(jax.jit(
+        lambda p, q: segvis_grid(p, q, jnp.asarray(ea), jnp.asarray(eb),
+                                 jnp.asarray(ec), grid))(args[0], args[1]))
+    return out
+
+
+def test_degenerate_cases_agree_across_backends():
+    P = np.array([c[0] for c in DEGENERATE_CASES], dtype=np.float64)
+    Q = np.array([c[1] for c in DEGENERATE_CASES], dtype=np.float64)
+    want_vis = ~np.array([c[2] for c in DEGENERATE_CASES])
+    backends = _all_backends(SQ, P, Q)
+    for name, got in backends.items():
+        assert (got == want_vis).all(), (
+            f"{name} disagrees at cases "
+            f"{np.nonzero(got != want_vis)[0].tolist()}")
+    # the midpoint-containment oracle realizes the same convention
+    oracle = visible_batch(SQ, P, Q)
+    assert (oracle == want_vis).all(), (
+        f"oracle disagrees at {np.nonzero(oracle != want_vis)[0].tolist()}")
+
+
+def test_strict_predicate_matches_oracle_on_exact_cases():
+    """blocked_strict_batch is the sign-rule twin of the midpoint oracle."""
+    P = np.array([c[0] for c in DEGENERATE_CASES], dtype=np.float64)
+    Q = np.array([c[1] for c in DEGENERATE_CASES], dtype=np.float64)
+    strict = ~blocked_strict_batch(SQ, P, Q)
+    oracle = visible_batch(SQ, P, Q)
+    assert (strict == oracle).all()
+
+
+def test_containment_is_outside_the_predicate_contract():
+    """A fully-interior segment crosses no edge — the sign rules pass it.
+
+    The §5 predicate's precondition is that at least one endpoint lies in
+    free space, which every engine segment satisfies (query points are
+    free, vias are boundary vertices).  The midpoint oracle, which has no
+    such precondition, blocks it.
+    """
+    P = np.array([[4.5, 5.0]])
+    Q = np.array([[5.5, 5.0]])
+    assert not visible_batch(SQ, P, Q)[0]
+    assert not blocked_strict_batch(SQ, P, Q)[0]   # no crossing seen
+
+
+def test_vertex_anchored_segments_stable_under_jit(scene_s):
+    """The fma regression: segments ending exactly on polygon vertices.
+
+    Via vertices ARE polygon corners, so every (query point -> via)
+    visibility segment in the packed engine hits this class.  Before the
+    banded signs, jit-compiled crosses carried few-ulp fma residuals where
+    exact zeros were expected, flipping hundreds of vertex-anchored
+    segments to "blocked".
+    """
+    rng = np.random.default_rng(7)
+    V = scene_s.vertices.astype(np.float32)
+    n = len(V)
+    P = rng.uniform(0, [scene_s.width, scene_s.height],
+                    (n, 2)).astype(np.float32)
+    A, B, C = map(jnp.asarray, _edge_arrays(scene_s, np.float32))
+    p, q = jnp.asarray(P), jnp.asarray(V)
+    eager = np.asarray(ops.segvis_ref(p, q, A, B, C))
+    jitted = np.asarray(jax.jit(ops.segvis_ref)(p, q, A, B, C))
+    assert (eager == jitted).all(), (
+        f"{(eager != jitted).sum()} vertex-anchored segments flip under jit")
+    # and the f64 host twin agrees on the f32-cast coordinates
+    host = ~segments_block_strict(P, np.asarray(V), np.asarray(A),
+                                  np.asarray(B), np.asarray(C)).any(axis=1)
+    assert (eager == host).all()
+
+
+def test_vertex_to_vertex_segments_stable_under_jit(scene_s):
+    """Path legs between convex corners — both endpoints degenerate."""
+    V = scene_s.convex_vertices.astype(np.float32)
+    rng = np.random.default_rng(11)
+    i = rng.integers(0, len(V), 64)
+    j = rng.integers(0, len(V), 64)
+    A, B, C = map(jnp.asarray, _edge_arrays(scene_s, np.float32))
+    p, q = jnp.asarray(V[i]), jnp.asarray(V[j])
+    eager = np.asarray(ops.segvis_ref(p, q, A, B, C))
+    jitted = np.asarray(jax.jit(ops.segvis_ref)(p, q, A, B, C))
+    kernel = np.asarray(segvis(p, q, A, B, C, interpret=True))
+    assert (eager == jitted).all()
+    assert (eager == kernel).all()
+
+
+# ---------------------------------------------------------------------------
+# padding guarantee (the provably non-blocking sentinel)
+# ---------------------------------------------------------------------------
+
+def test_pack_edges_padding_is_degenerate():
+    ea, eb, ec = _pack_edges(SQ, lane=128)
+    E = SQ.edges.shape[0]
+    assert ea.shape[0] == padded_edge_count(E, 128) > E
+    assert (ea[E:] == eb[E:]).all() and (eb[E:] == ec[E:]).all()
+
+
+def test_all_padding_tile_is_visible():
+    """A batch against pure padding must come back fully visible.
+
+    This is the load-bearing guarantee for both lane padding and the edge
+    grid's sentinel slots: a degenerate (a == b == c) edge can never fire
+    any §5 rule, under any backend, for any query segment — including
+    segments whose endpoints coincide with the sentinel coordinates.
+    """
+    ea, eb, ec = _pack_edges(SQ, lane=128)
+    E = SQ.edges.shape[0]
+    pad_a = jnp.asarray(np.repeat(ea[E:E + 1], 128, axis=0))
+    pad_b = jnp.asarray(np.repeat(eb[E:E + 1], 128, axis=0))
+    pad_c = jnp.asarray(np.repeat(ec[E:E + 1], 128, axis=0))
+    rng = np.random.default_rng(3)
+    p = rng.uniform(0, 10, (32, 2)).astype(np.float32)
+    q = rng.uniform(0, 10, (32, 2)).astype(np.float32)
+    # include segments touching / anchored on the sentinel point itself
+    p[0] = np.asarray(pad_a[0])
+    q[1] = np.asarray(pad_a[0])
+    p[2] = q[2] = np.asarray(pad_a[0])          # degenerate segment on it
+    p, q = jnp.asarray(p), jnp.asarray(q)
+    for fn in (ops.segvis_ref, jax.jit(ops.segvis_ref)):
+        assert np.asarray(fn(p, q, pad_a, pad_b, pad_c)).all()
+    assert np.asarray(segvis(p, q, pad_a, pad_b, pad_c,
+                             interpret=True)).all()
+    # tiles form: every slot a sentinel
+    S = 16
+    tiles = [jnp.broadcast_to(v, (32, S)) for v in
+             (pad_a[0, 0], pad_a[0, 1], pad_b[0, 0], pad_b[0, 1],
+              pad_c[0, 0], pad_c[0, 1])]
+    assert np.asarray(ops.segvis_tiles_ref(p, q, *tiles)).all()
+    assert np.asarray(ops.segvis_tiles_kernel(p, q, *tiles)).all()
+
+
+def test_reflex_collinear_penetration_is_outside_the_sign_rules():
+    """Known §5 boundary, pinned: collinear entry through a reflex vertex.
+
+    A segment sliding along a boundary edge and continuing collinearly
+    into the interior where the boundary turns away (requires a reflex
+    obstacle vertex) fires no sign rule — the arm it must straddle is
+    collinear with it.  Every device backend shares the behavior, so
+    backends still agree with each other; the midpoint oracle blocks it.
+    Unreachable for engine segments (endpoints free/boundary) on the
+    convex-polygon suite maps — if this test ever *fails* because the
+    backends start blocking it, the §5 docs and this pin must move
+    together.
+    """
+    u_shape = Scene.build([np.array([[0.0, 0.0], [6.0, 0.0], [6.0, 6.0],
+                                     [4.0, 6.0], [4.0, 3.0], [2.0, 3.0],
+                                     [2.0, 6.0], [0.0, 6.0]])], 10.0, 10.0)
+    P = np.array([[3.0, 3.0]])       # on the notch floor
+    Q = np.array([[1.0, 3.0]])       # strictly inside the solid
+    assert not visible_batch(u_shape, P, Q)[0]            # oracle: blocked
+    assert not blocked_strict_batch(u_shape, P, Q)[0]     # sign rules: miss
+    A, B, C = _edge_arrays(u_shape, np.float32)
+    ref = np.asarray(ops.segvis_ref(*map(jnp.asarray,
+                                         (P.astype(np.float32),
+                                          Q.astype(np.float32), A, B, C))))
+    assert ref[0]                    # device agrees with the f64 sign rules

@@ -329,3 +329,72 @@ def test_sharded_acceptance_on_forced_4_device_mesh():
                          text=True, env=env, timeout=420)
     assert out.returncode == 0, out.stderr[-3000:]
     assert "SHARDED_ACCEPTANCE_OK" in out.stdout
+
+
+# ------------------------------------------------------- edge clipping (§10)
+
+def _chambered_scene():
+    """Four near-closed chambers around a center junction (>= 128 edges).
+
+    Visibility — and therefore label via reach — is chamber-local except
+    through the doors, so per-shard clipped edge subsets genuinely shrink:
+    the regime the §10 shard edge clipping targets.  Open suite maps see
+    map-wide, where clips legitimately keep everything.
+    """
+    from repro.core.geometry import Scene
+
+    def rect(x0, y0, x1, y1):
+        return np.array([[x0, y0], [x1, y0], [x1, y1], [x0, y1]], float)
+
+    W = 120.0
+    polys = [rect(58, 0, 62, 55), rect(58, 65, 62, 120),
+             rect(0, 58, 55, 62), rect(65, 58, 120, 62)]
+    rng = np.random.default_rng(0)
+    for cx, cy in ((0, 0), (62, 0), (0, 62), (62, 62)):
+        for i in range(12):
+            x0 = cx + 4 + (i % 4) * 13 + rng.uniform(0, 3)
+            y0 = cy + 4 + (i // 4) * 15 + rng.uniform(0, 3)
+            w, h = rng.uniform(4, 7, 2)
+            polys.append(rect(x0, y0, x0 + w, y0 + h))
+    return Scene.build(polys, W, W)
+
+
+def test_shard_edge_clipping_drops_bytes_and_stays_bitwise():
+    """Per-shard edge subsets beat full replication on occluded maps.
+
+    Asserts the §10 clip (a) keeps strictly fewer edges than replication
+    on most shards, (b) drops summed edge bytes below the replicated
+    baseline, and (c) never changes an answer — the clipped sharded engine
+    is bitwise-identical to the single-device full-edge engine, which is
+    the proof the clip boxes really cover every owned visibility segment.
+    """
+    from repro.core.visgraph import build_visgraph
+    from repro.core.hublabel import build_hub_labels
+
+    scene = _chambered_scene()
+    E = scene.edges.shape[0]
+    assert E >= 128          # above one lane, so clipping can change bytes
+    graph = build_visgraph(scene)
+    idx = build_ehl(scene, 4.0, graph=graph, hl=build_hub_labels(graph))
+    bx = pack_bucketed(idx)
+    full_edge_bytes = int(sum(np.prod(a.shape) * 4 for a in
+                              (bx.edges_a, bx.edges_b, bx.edges_c))) + \
+        (bx.grid.device_bytes() if bx.grid else 0)
+
+    S = 12
+    sharded = ShardPlanner(S).build(idx)
+    kept = [int(m.sum()) for m in sharded.edge_masks]
+    assert all(len(m) == E for m in sharded.edge_masks)
+    assert sum(k < E for k in kept) >= S // 3, (
+        f"clipping kept everything almost everywhere: {kept}")
+    assert sum(sharded.edge_bytes()) < S * full_edge_bytes, (
+        "summed clipped edge bytes did not beat full replication")
+
+    qs = uniform_queries(scene, graph, 120, seed=3, require_path=False)
+    s = qs.s.astype(np.float32)
+    t = qs.t.astype(np.float32)
+    ref = np.asarray(query_batch_bucketed(bx, s, t))
+    out = ShardedQueryEngine(sharded).query(s, t)
+    assert np.array_equal(np.isfinite(ref), np.isfinite(out))
+    np.testing.assert_array_equal(np.where(np.isfinite(ref), ref, 0),
+                                  np.where(np.isfinite(out), out, 0))
