@@ -26,7 +26,7 @@ def main(argv=None) -> None:
                          "query sets; ~1h on one CPU core)")
     ap.add_argument("--only", default="",
                     help="comma list: table5,table6,fig5,kernels,ehlperf,"
-                         "adaptive,sharded,segvis_grid,roofline")
+                         "adaptive,sharded,serving,segvis_grid,roofline")
     args = ap.parse_args(argv)
     only = set(args.only.split(",")) if args.only else None
 
@@ -65,6 +65,9 @@ def main(argv=None) -> None:
     if want("sharded"):
         from . import bench_sharded
         bench_sharded.run(quick=args.quick or not args.full)
+    if want("serving"):
+        from . import bench_serving
+        bench_serving.run(quick=args.quick or not args.full)
     if want("segvis_grid"):
         from . import bench_segvis_grid
         bench_segvis_grid.run(quick=args.quick)

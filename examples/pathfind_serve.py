@@ -78,6 +78,12 @@ def main():
     ap.add_argument("--shard-tol", type=float, default=1.15,
                     help="[shards] per-device byte cap as a multiple of "
                          "total/num_shards")
+    ap.add_argument("--serve-async", action="store_true",
+                    help="also serve through the continuous-batching loop "
+                         "(coalescing queue + double-buffered dispatch) and "
+                         "check the answers bitwise against the synchronous "
+                         "path, requiring >= 1 full-batch flush and >= 1 "
+                         "deadline flush (CI smoke gate; exits nonzero)")
     ap.add_argument("--adaptive", action="store_true",
                     help="adaptive serving demo: live workload capture -> "
                          "budgeted recompression -> zero-downtime hot-swap "
@@ -160,6 +166,13 @@ def main():
               f"batches={b.batches:3d} occupancy={b.occupancy:.1%} "
               f"{b.us_per_query:.1f} us/query")
 
+    if args.serve_async:
+        failures = check_async(srv, qs.s.astype(np.float32),
+                               qs.t.astype(np.float32), backend)
+        if failures:
+            print("ASYNC SMOKE FAILED:\n  " + "\n  ".join(failures))
+            sys.exit(1)
+
     if args.paths > 0:
         n = min(args.paths, len(qs.s))
         dp, paths = srv.query_paths(qs.s[:n].astype(np.float32),
@@ -170,6 +183,61 @@ def main():
                   default=0.0)
         print(f"extracted {n} paths via batched argmin ({backend}); "
               f"max |len(path) - d| = {err:.2e}")
+
+
+def check_async(srv, s, t, label: str) -> list:
+    """Continuous-batching smoke: serve through the coalescing loop and
+    compare bitwise against the synchronous path.
+
+    Two traffic shapes force both flush reasons deterministically:
+
+    * *burst* — one ``submit()`` of > batch_size queries that all share the
+      hottest dispatch key, so a full group exists the moment the serve
+      loop looks (>= 1 full flush guaranteed);
+    * *trickle* — a sub-batch-size submit with no ``flush()``, so only the
+      ``max_wait_ms`` deadline can ship it (>= 1 deadline flush).
+
+    Returns a list of failure strings (empty = pass).
+    """
+    bs = srv.batch_size
+    with srv.engine.pin() as eng:
+        keys = eng.buckets_of(s, t)
+    vals, counts = np.unique(keys, return_counts=True)
+    hot = np.nonzero(keys == int(vals[np.argmax(counts)]))[0]
+    reps = -(-(bs + 1) // len(hot))     # ceil: tile past one full batch
+    sb = np.tile(s[hot], (reps, 1))[:bs + len(hot)]
+    tb = np.tile(t[hot], (reps, 1))[:bs + len(hot)]
+    ref_burst = srv.query(sb, tb)
+    ref_trickle = srv.query(s[:8], t[:8])
+
+    srv.start_async(max_wait_ms=2.0)
+    got_burst = srv.submit(sb, tb).result(timeout=120)
+    got_trickle = srv.submit(s[:8], t[:8]).result(timeout=120)
+    srv.stop_async()
+
+    st = srv.stats
+    failures = []
+    if not np.array_equal(ref_burst, got_burst):
+        failures.append(f"{label}: burst answers differ from sync path")
+    if not np.array_equal(ref_trickle, got_trickle):
+        failures.append(f"{label}: trickle answers differ from sync path")
+    if st.full_flushes < 1:
+        failures.append(f"{label}: no full-batch flush observed "
+                        f"({st.full_flushes})")
+    if st.deadline_flushes < 1:
+        failures.append(f"{label}: no deadline flush observed "
+                        f"({st.deadline_flushes})")
+    bad_occ = {k: b.occupancy for k, b in st.per_bucket.items()
+               if b.occupancy > 1.0}
+    if bad_occ:
+        failures.append(f"{label}: per-bucket occupancy above 1.0: "
+                        f"{bad_occ}")
+    print(f"async serve [{label}]: submitted={st.submitted} "
+          f"flushes full={st.full_flushes} deadline={st.deadline_flushes} "
+          f"forced={st.forced_flushes} pipeline_peak={st.pipeline_peak} "
+          f"queue_peak={st.queue_depth_peak} "
+          f"identical={'yes' if not failures else 'NO'}")
+    return failures
 
 
 def run_sharded(args, backend: str) -> None:
@@ -237,6 +305,8 @@ def run_sharded(args, backend: str) -> None:
     if max(per) > cap:
         failures.append(f"max shard {max(per)}B over per-device cap "
                         f"{cap:.0f}B")
+    if args.serve_async:
+        failures += check_async(srv2, s, t, "sharded")
     if failures:
         print("SHARDED SMOKE FAILED:\n  " + "\n  ".join(failures))
         sys.exit(1)

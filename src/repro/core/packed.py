@@ -58,6 +58,26 @@ from .grid import EHLIndex
 HUB_PAD = np.int32(2 ** 30)     # sorts after every real hub id
 
 
+class TraceCounter:
+    """Counts jit *traces* of the serving entry points below.
+
+    A trace is 1:1 with a fresh XLA compilation for that (static args,
+    shapes, dtypes) cache entry, so serving code can assert "warmup left
+    nothing cold": snapshot ``TRACES.count``, serve, and require the count
+    unchanged.  Bumps happen inside the traced bodies — they run at trace
+    time only, never per call.
+    """
+
+    def __init__(self):
+        self.count = 0
+
+    def bump(self) -> None:
+        self.count += 1
+
+
+TRACES = TraceCounter()
+
+
 def _round_up(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
 
@@ -608,6 +628,7 @@ def query_batch(idx: PackedIndex, s: jnp.ndarray, t: jnp.ndarray,
     (``repro.kernels.ops``); False uses their jnp references — identical
     semantics, asserted by tests.
     """
+    TRACES.bump()
     s = s.astype(jnp.float32)
     t = t.astype(jnp.float32)
     rs = locate_regions(idx, s)
@@ -621,6 +642,7 @@ def query_batch(idx: PackedIndex, s: jnp.ndarray, t: jnp.ndarray,
 def query_batch_argmin(idx: PackedIndex, s: jnp.ndarray, t: jnp.ndarray,
                        use_kernels: bool = False):
     """Distances + winning (via_s, hub, via_t) label ids (path unwinding)."""
+    TRACES.bump()
     s = s.astype(jnp.float32)
     t = t.astype(jnp.float32)
     rs = locate_regions(idx, s)
@@ -687,6 +709,7 @@ def query_batch_at_bucket(bx: BucketedIndex, s: jnp.ndarray, t: jnp.ndarray,
     then bitwise-identical to the full-width ``query_batch`` because the
     extra slots it would have carried are all inf/HUB_PAD padding.
     """
+    TRACES.bump()
     s = s.astype(jnp.float32)
     t = t.astype(jnp.float32)
     rs = locate_regions(bx, s)
@@ -709,6 +732,7 @@ def gather_labels_at_width(bx: BucketedIndex, regions: jnp.ndarray,
     the host router guarantees that by dispatching at ``max(endpoint
     widths)``.
     """
+    TRACES.bump()
     bucket = max((k for k, w in enumerate(bx.widths) if w <= width),
                  default=0)
     return _gather_bucketed(bx, regions, bucket, width)
@@ -726,6 +750,7 @@ def join_gathered(labels_s, labels_t, s: jnp.ndarray, t: jnp.ndarray,
     sharded router uses the split-phase entries below instead, so each
     side's visibility runs on the device whose clipped edge set covers it.
     """
+    TRACES.bump()
     s = s.astype(jnp.float32)
     t = t.astype(jnp.float32)
     edges = (edges_a, edges_b, edges_b if edges_c is None else edges_c, grid)
@@ -747,6 +772,7 @@ def gather_masked_labels(bx: BucketedIndex, regions: jnp.ndarray,
     cross-shard query the t-side triple then ships to the s-side device
     ([B, W] tensors, not slabs) for :func:`join_masked`.
     """
+    TRACES.bump()
     bucket = max((k for k, w in enumerate(bx.widths) if w <= width),
                  default=0)
     labels = _gather_bucketed(bx, regions, bucket, width)
@@ -765,6 +791,7 @@ def covis_blocked(s: jnp.ndarray, t: jnp.ndarray, edges_a, edges_b, edges_c,
     ORs the verdicts — the union of participating clips covers every edge
     the segment can cross, so the OR equals the single-device covis bit.
     """
+    TRACES.bump()
     s = s.astype(jnp.float32)
     t = t.astype(jnp.float32)
     vis = _segvis(s, t, (edges_a, edges_b, edges_c, grid), use_kernels)
@@ -782,6 +809,7 @@ def join_masked(masked_s, masked_t, s: jnp.ndarray, t: jnp.ndarray,
     bitwise-identical to the single-device ``query_batch_at_bucket`` tail —
     it is the same code.
     """
+    TRACES.bump()
     s = s.astype(jnp.float32)
     t = t.astype(jnp.float32)
     return _join_masked(masked_s, masked_t, s, t, covis.astype(bool),

@@ -1,3 +1,4 @@
+from .batcher import CoalescingBatcher, QueueFull, Ticket  # noqa: F401
 from .engine import (BucketStats, LMServer, PathServer,  # noqa: F401
                      ServeStats, expected_join_cost)
 from .query_engine import (DeviceEngine, HostEngine, JnpEngine,  # noqa: F401

@@ -38,10 +38,19 @@ class BucketStats:
     queries: int = 0
     seconds: float = 0.0
     slots: int = 0          # batch slots dispatched (incl. tail padding)
+    # continuous batching (serving.batcher): per-key admission + flush mix
+    admitted: int = 0           # queries admitted to this key's queue
+    full_flushes: int = 0       # groups shipped because the batch filled
+    deadline_flushes: int = 0   # groups shipped by the latency deadline
 
     @property
     def occupancy(self) -> float:
-        """Real queries / dispatched slots (1.0 = no tail padding waste)."""
+        """Real queries / dispatched slots (1.0 = no tail padding waste).
+
+        Slots are counted exactly once, at dispatch — a group re-routed
+        after a hot-swap superseded its routing keys never touches this
+        row (see ``CoalescingBatcher._launch``), so occupancy stays <= 1.
+        """
         return self.queries / max(1, self.slots)
 
     @property
@@ -64,6 +73,18 @@ class ServeStats:
     # sharded serving (repro.sharding): per-shard ShardStats rows, refreshed
     # from the engine after every request (empty for unsharded engines)
     per_shard: list = dataclasses.field(default_factory=list)
+    # continuous batching (serving.batcher): admission / queue / flush
+    # observability for the async coalescing loop
+    submitted: int = 0          # queries admitted through submit()
+    shed: int = 0               # queries rejected by the backpressure gate
+    admission_waits: int = 0    # submit() calls that blocked on the gate
+    full_flushes: int = 0       # groups dispatched because they filled
+    deadline_flushes: int = 0   # groups dispatched by max_wait_ms expiry
+    forced_flushes: int = 0     # groups dispatched by flush()/close()
+    requeued_batches: int = 0   # groups re-routed after a generation swap
+    queue_depth: int = 0        # live gauge: queries waiting to dispatch
+    queue_depth_peak: int = 0
+    pipeline_peak: int = 0      # max groups concurrently in flight
 
     @property
     def us_per_query(self) -> float:
@@ -114,11 +135,64 @@ class PathServer:
         # adaptive serving: every answered query's endpoints feed the live
         # workload histogram (repro.indexing.WorkloadRecorder)
         self._recorder = recorder
+        # continuous batching: created by start_async()/first submit()
+        self._batcher = None
 
     def warmup(self, paths: bool = False):
-        """Trace the jit entries (``paths=True`` also warms the argmin
-        entries used by ``query_paths``)."""
+        """Warm every jit entry live traffic can hit: every bucket width
+        present in the engine (every (shard, width) pair under sharding) is
+        traced at the serving batch shape, and ``paths=True`` additionally
+        traces the argmin entries behind ``query_paths`` — so the first
+        live request at a cold width never pays an XLA compile inside the
+        serving loop (regression-tested by a trace counter,
+        ``core.packed.TRACES``)."""
         self.engine.warmup(self.batch_size, want_argmin=paths)
+
+    # -------------------------------------------------- continuous batching
+    def start_async(self, max_wait_ms: float = 2.0, max_queue: int = 8192,
+                    policy: str = "block", depth: int = 2):
+        """Start the continuous-batching serve loop (serving.batcher).
+
+        Returns the :class:`~repro.serving.batcher.CoalescingBatcher`;
+        ``submit``/``flush``/``drain``/``stop_async`` below delegate to it.
+        """
+        from repro.serving.batcher import CoalescingBatcher
+        if self._batcher is not None:
+            raise RuntimeError("async serve loop already running; "
+                               "stop_async() first")
+        if self._sharding is not None:
+            raise ValueError("batch_sharding is a synchronous-dispatch "
+                             "feature; the async loop stages transfers "
+                             "through QueryEngine.stage instead")
+        self._batcher = CoalescingBatcher(self, max_wait_ms=max_wait_ms,
+                                          max_queue=max_queue,
+                                          policy=policy, depth=depth)
+        return self._batcher
+
+    def submit(self, s, t, want_argmin: bool = False):
+        """Enqueue N requests on the coalescing queue; returns a
+        :class:`~repro.serving.batcher.Ticket` future (results in submit
+        order).  Starts the serve loop with defaults if needed."""
+        if self._batcher is None:
+            self.start_async()
+        return self._batcher.submit(s, t, want_argmin=want_argmin)
+
+    def flush(self) -> None:
+        """Force every queued group to dispatch now (deadline override)."""
+        if self._batcher is not None:
+            self._batcher.flush()
+
+    def drain(self, timeout: float | None = None) -> bool:
+        """Flush + wait until the queue and in-flight pipeline are empty."""
+        if self._batcher is None:
+            return True
+        return self._batcher.drain(timeout=timeout)
+
+    def stop_async(self) -> None:
+        """Drain and stop the serve loop (submit() may start a new one)."""
+        if self._batcher is not None:
+            self._batcher.close(drain=True)
+            self._batcher = None
 
     def _bucket_stats(self, bucket: int, eng) -> BucketStats:
         if bucket not in self.stats.per_bucket:

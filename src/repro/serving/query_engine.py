@@ -73,6 +73,29 @@ class QueryEngine(abc.ABC):
     def batch_argmin(self, s, t, bucket: int = 0):
         raise NotImplementedError(f"{self.name} has no argmin path")
 
+    # -------------------------------------------- split-phase (async) path
+    def stage(self, s, t, bucket: int = 0):
+        """Begin host->device staging for one padded batch; returns an
+        opaque handle for :meth:`dispatch_staged`.
+
+        The continuous batcher (``serving.batcher``) stages batch N+1 while
+        batch N computes, so transfers (and, under sharding, cross-shard
+        label gathers) overlap device compute.  Default: pass-through."""
+        return (s, t)
+
+    def dispatch_staged(self, staged, bucket: int = 0,
+                        want_argmin: bool = False) -> tuple:
+        """Dispatch a staged batch WITHOUT synchronizing.
+
+        Returns a tuple of result arrays (1 without argmin, 5 with) that
+        may still be computing on device — the caller owns
+        ``block_until_ready``, which is what lets the batcher overlap the
+        next group's staging with this group's compute."""
+        s, t = staged
+        if want_argmin:
+            return tuple(self.batch_argmin(s, t, bucket=bucket))
+        return (self.batch(s, t, bucket=bucket),)
+
     def warmup(self, batch_size: int, want_argmin: bool = False) -> None:
         pass
 
@@ -110,6 +133,11 @@ class DeviceEngine(QueryEngine):
             raise TypeError(f"unsupported index artifact: {type(index)!r}")
         self.index = index
         self.bucketed = isinstance(index, BucketedIndex)
+        if self.bucketed:
+            # host-side routing table mirrors (see buckets_of): admission-
+            # path routing must not pay a per-call eager-jnp dispatch chain
+            self._np_mapper = np.asarray(index.mapper)
+            self._np_bucket = np.asarray(index.region_bucket)
 
     @property
     def num_buckets(self) -> int:
@@ -119,10 +147,22 @@ class DeviceEngine(QueryEngine):
         return (self.index.widths[bucket] if self.bucketed
                 else self.index.label_width)
 
+    def _route(self, pts) -> np.ndarray:
+        """Host-numpy mirror of ``locate_regions`` -> bucket (same float32
+        floor-divide, so cell ids agree with the device gathers bit-for-bit
+        — the ShardRouter routes with the identical construction).  Runs on
+        the submit path of the continuous batcher, where the eager per-op
+        dispatch of ``dispatch_buckets`` would dominate admission cost."""
+        p = np.asarray(pts, np.float32)
+        cs = np.float32(self.index.cell_size)
+        ix = np.clip((p[:, 0] / cs).astype(np.int32), 0, self.index.nx - 1)
+        iy = np.clip((p[:, 1] / cs).astype(np.int32), 0, self.index.ny - 1)
+        return self._np_bucket[self._np_mapper[iy * self.index.nx + ix]]
+
     def buckets_of(self, s, t) -> np.ndarray:
         if not self.bucketed:
             return np.zeros(len(s), dtype=np.int32)
-        return dispatch_buckets(self.index, s, t)
+        return np.maximum(self._route(s), self._route(t)).astype(np.int32)
 
     def _run(self, s, t, bucket: int, want_argmin: bool):
         s = jnp.asarray(s, jnp.float32)
@@ -139,6 +179,11 @@ class DeviceEngine(QueryEngine):
 
     def batch_argmin(self, s, t, bucket: int = 0):
         return self._run(s, t, bucket, want_argmin=True)
+
+    def stage(self, s, t, bucket: int = 0):
+        """Start the host->device copies for a batch (jax transfers are
+        async; on accelerators the DMA overlaps the in-flight batch)."""
+        return (jnp.asarray(s, jnp.float32), jnp.asarray(t, jnp.float32))
 
     def warmup(self, batch_size: int, want_argmin: bool = False) -> None:
         """Trace every per-bucket jit entry once with the serving shape.

@@ -35,6 +35,8 @@ compiles, so answers are bitwise-identical to the unsharded
 
 from __future__ import annotations
 
+import dataclasses
+
 import numpy as np
 
 import jax
@@ -42,6 +44,26 @@ import jax.numpy as jnp
 
 from repro.core.packed import covis_blocked, gather_masked_labels, join_masked
 from repro.launch.mesh import shard_devices
+
+
+@dataclasses.dataclass
+class StagedGroup:
+    """One routed sub-batch with every pre-join transfer already dispatched.
+
+    Produced by :meth:`ShardRouter.stage`, consumed by
+    :meth:`ShardRouter.join_staged`.  Splitting the phases is what lets the
+    continuous batcher overlap group N+1's host->device copies, cross-shard
+    label gathers and co-visibility verdicts with group N's join — the
+    serialize-every-group behavior of the old monolithic ``dispatch``."""
+    key: int
+    i: int                  # s-side (join/home) shard
+    j: int                  # t-side shard
+    parts: list             # covis participant shards
+    masked_s: tuple         # visibility-folded (hub, vd, vid), home device
+    masked_t: tuple         # same for the t side, shipped to home device
+    covis: object           # merged co-visibility bits, home device
+    s_dev: object           # [B, 2] batch on the home device
+    t_dev: object
 
 
 class ShardRouter:
@@ -155,14 +177,14 @@ class ShardRouter:
             blocked = bk if blocked is None else blocked | bk
         return blocked == 0
 
-    def dispatch(self, s, t, key: int, want_argmin: bool = False):
-        """Answer one routed sub-batch on its destination shard's device.
+    def stage(self, s, t, key: int) -> StagedGroup:
+        """Dispatch every pre-join transfer for one routed sub-batch.
 
-        Every query in ``s``/``t`` must carry routing key ``key`` (padding
-        rows are exempt — their answers are garbage the caller discards,
-        exactly like per-bucket dispatch under-width padding).  Returns
-        device arrays; ``(i, j, covis participants)`` ride along for the
-        caller's stats.
+        Ships the batch to each involved device, gathers + visibility-folds
+        both endpoint sides on their owning shards, moves the t-side triple
+        to the home device for cross-shard keys, and launches the covis
+        verdicts — all asynchronously.  Nothing here blocks, so a staged
+        group can overlap an in-flight group's join.
         """
         i, j, W = self.decode_key(key)
         s = np.asarray(s, np.float32)
@@ -195,10 +217,32 @@ class ShardRouter:
             masked_t = jax.device_put(masked_t, dev)
         parts = self.covis_shards(s, t) or [i]
         covis = self._covis(s_at, t_at, parts, i)
-        res = join_masked(
-            masked_s, masked_t, s_at(i), t_at(i), covis,
+        return StagedGroup(key=int(key), i=i, j=j, parts=parts,
+                           masked_s=masked_s, masked_t=masked_t,
+                           covis=covis, s_dev=s_at(i), t_dev=t_at(i))
+
+    def join_staged(self, st: StagedGroup, want_argmin: bool = False):
+        """Run the Eq. 1-3 join for a staged group on its home device.
+
+        Returns un-synchronized device arrays — the caller owns
+        ``block_until_ready``."""
+        return join_masked(
+            st.masked_s, st.masked_t, st.s_dev, st.t_dev, st.covis,
             use_kernels=self.use_kernels, want_argmin=want_argmin)
-        return res, (i, j, parts)
+
+    def dispatch(self, s, t, key: int, want_argmin: bool = False):
+        """Answer one routed sub-batch on its destination shard's device.
+
+        Every query in ``s``/``t`` must carry routing key ``key`` (padding
+        rows are exempt — their answers are garbage the caller discards,
+        exactly like per-bucket dispatch under-width padding).  Returns
+        device arrays; ``(i, j, covis participants)`` ride along for the
+        caller's stats.  ``stage`` + ``join_staged`` is the same path cut
+        for pipelining.
+        """
+        st = self.stage(s, t, key)
+        return self.join_staged(st, want_argmin=want_argmin), \
+            (st.i, st.j, st.parts)
 
     # ------------------------------------------------------------- serving
     def warmup(self, batch_size: int, want_argmin: bool = False) -> None:

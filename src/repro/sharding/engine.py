@@ -112,20 +112,25 @@ class ShardedQueryEngine(QueryEngine):
         """Join width of a routing key — the W^2 a query at this key pays."""
         return self.router.key_width(bucket)
 
+    def _note_dispatch(self, staged, n: int) -> None:
+        """Traffic counters for one dispatched group (no blocking)."""
+        st = self._stats[staged.i]
+        st.batches += 1
+        st.slots += n
+        if staged.j != staged.i:
+            self._stats[staged.j].gathers_out += n
+        for k in staged.parts:
+            if k != staged.i:
+                self._stats[k].covis_assists += n
+
     def _run(self, s, t, key: int, want_argmin: bool):
         t0 = time.perf_counter()
-        res, (i, j, covis_parts) = self.router.dispatch(
-            s, t, key, want_argmin=want_argmin)
+        staged = self.router.stage(np.asarray(s, np.float32),
+                                   np.asarray(t, np.float32), int(key))
+        res = self.router.join_staged(staged, want_argmin=want_argmin)
         jax.block_until_ready(res)
-        st = self._stats[i]
-        st.seconds += time.perf_counter() - t0
-        st.batches += 1
-        st.slots += len(s)
-        if j != i:
-            self._stats[j].gathers_out += len(s)
-        for k in covis_parts:
-            if k != i:
-                self._stats[k].covis_assists += len(s)
+        self._stats[staged.i].seconds += time.perf_counter() - t0
+        self._note_dispatch(staged, len(s))
         return res
 
     def batch(self, s, t, bucket: int = 0) -> np.ndarray:
@@ -133,6 +138,27 @@ class ShardedQueryEngine(QueryEngine):
 
     def batch_argmin(self, s, t, bucket: int = 0):
         return self._run(s, t, bucket, want_argmin=True)
+
+    # ------------------------------------------------ split-phase (async)
+    def stage(self, s, t, bucket: int = 0):
+        """Pre-join transfers for one routed group (cross-shard gathers,
+        covis dispatch) — overlaps the in-flight group's join under the
+        continuous batcher."""
+        return self.router.stage(np.asarray(s, np.float32),
+                                 np.asarray(t, np.float32), int(bucket))
+
+    def dispatch_staged(self, staged, bucket: int = 0,
+                        want_argmin: bool = False) -> tuple:
+        """Non-blocking join over a staged group; the batcher owns
+        synchronization (per-shard seconds land via note_batch_seconds)."""
+        res = self.router.join_staged(staged, want_argmin=want_argmin)
+        self._note_dispatch(staged, int(staged.s_dev.shape[0]))
+        return tuple(res) if want_argmin else (res,)
+
+    def note_batch_seconds(self, bucket: int, seconds: float) -> None:
+        """Async-path latency attribution to the key's home shard."""
+        i, _, _ = self.router.decode_key(int(bucket))
+        self._stats[i].seconds += seconds
 
     def warmup(self, batch_size: int, want_argmin: bool = False) -> None:
         self.router.warmup(batch_size, want_argmin=want_argmin)

@@ -92,6 +92,56 @@ def test_swappable_engine_generations_and_drain():
     assert sw.drops == 2 and sw.generation == 2
 
 
+def test_serve_stats_two_generation_reset():
+    """First request on a new generation restarts per-bucket stats (bucket
+    ids are meaningless across artifacts) and counts the swap."""
+    a, b = _ConstEngine(1.0), _ConstEngine(2.0)
+    sw = SwappableEngine(a)
+    srv = PathServer(sw, batch_size=4)
+    z = np.zeros((6, 2), np.float32)
+    assert (srv.query(z, z) == 1.0).all()
+    assert srv.stats.generation == 0 and srv.stats.swaps == 0
+    pb0 = srv.stats.per_bucket[0]
+    assert pb0.queries == 6
+
+    sw.swap(b)
+    assert srv.stats.swaps == 0          # observed at next dispatch, not eagerly
+    assert (srv.query(z, z) == 2.0).all()
+    assert srv.stats.generation == 1 and srv.stats.swaps == 1
+    assert srv.stats.per_bucket[0] is not pb0    # reset, not accumulated
+    assert srv.stats.per_bucket[0].queries == 6
+    for bstats in srv.stats.per_bucket.values():
+        assert bstats.occupancy <= 1.0
+
+
+def test_serve_stats_stale_batches_mid_request_swap():
+    """A swap published while a request is in flight: every batch of that
+    request finishes on the pinned (now superseded) artifact and is counted
+    stale; the generation advances only on the next request."""
+    a, b = _ConstEngine(1.0), _ConstEngine(2.0)
+    sw = SwappableEngine(a)
+    fired = []
+    orig = a.batch
+
+    def batch_then_swap(s, t, bucket=0):
+        out = orig(s, t, bucket)
+        if not fired:
+            fired.append(True)
+            sw.swap(b)               # mid-request publish
+        return out
+
+    a.batch = batch_then_swap
+    srv = PathServer(sw, batch_size=4)
+    z = np.zeros((6, 2), np.float32)
+    out = srv.query(z, z)
+    assert (out == 1.0).all()        # the whole request served on its pin
+    assert srv.stats.stale_batches == 2          # both batches superseded
+    assert srv.stats.generation == 0             # generation it served on
+    assert (srv.query(z, z) == 2.0).all()        # next request: new artifact
+    assert srv.stats.swaps == 1 and srv.stats.generation == 1
+    assert srv.stats.stale_batches == 2          # no new staleness
+
+
 # ---------------------------------------------------------------- planner
 
 def test_planner_decisions(scene_s, graph_s, hl_s):

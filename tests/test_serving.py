@@ -39,6 +39,40 @@ def test_path_server_ragged_tail_batch(server_setup, queries_s):
     assert srv.stats.queries == n
     assert srv.stats.batches == 2
     assert srv.stats.us_per_query > 0
+    # slots are counted once per dispatch, so padding never double-counts
+    for bstats in srv.stats.per_bucket.values():
+        assert bstats.occupancy <= 1.0
+        assert bstats.queries <= bstats.slots
+
+
+def test_warmup_covers_every_jit_entry(scene_s, graph_s, hl_s, queries_s):
+    """``warmup(paths=True)`` must leave no serving entry cold: after it,
+    live traffic (every bucket, ragged tails, the argmin/path variant) may
+    not trigger a single new XLA trace (``core.packed.TRACES``)."""
+    from repro.core import packed
+    from repro.core.packed import pack_bucketed
+    from repro.serving.query_engine import JnpEngine
+
+    idx = build_ehl(scene_s, 2.0, graph=graph_s, hl=hl_s)
+    compress_to_fraction(idx, 0.3)
+    bx = pack_bucketed(idx)
+    srv = PathServer(JnpEngine(bx), batch_size=16)
+    srv.warmup(paths=True)
+    c0 = packed.TRACES.count
+    s = queries_s.s.astype(np.float32)
+    t = queries_s.t.astype(np.float32)
+    srv.query(s, t)                              # every bucket present
+    srv.query(s[:7], t[:7])                      # ragged tail (padded)
+    srv.query_paths(s[:5], t[:5], host_index=idx)  # argmin entries
+    assert packed.TRACES.count == c0, \
+        "serving traffic hit a jit entry warmup did not trace"
+    for bstats in srv.stats.per_bucket.values():
+        assert bstats.occupancy <= 1.0
+    # and the counter is live, not vacuously constant: an unseen batch
+    # shape must retrace
+    srv2 = PathServer(JnpEngine(bx), batch_size=8)
+    srv2.query(s[:3], t[:3])
+    assert packed.TRACES.count > c0
 
 
 def test_lm_server_greedy_decode():

@@ -159,6 +159,32 @@ def test_cross_shard_queries_exist_and_match(sharded_setup, scene_s,
     assert sum(st.gathers_out for st in eng.shard_stats()) > 0
 
 
+def test_sharded_async_submit_matches_sync(sharded_setup, scene_s, graph_s):
+    """The continuous-batching loop over the sharded engine (split-phase
+    stage/join with cross-shard gathers overlapping the in-flight join)
+    answers bitwise-identically to the synchronous sharded path."""
+    _, _, sharded = sharded_setup
+    srv = PathServer(ShardedQueryEngine(sharded), batch_size=32)
+    srv.warmup()
+    qs = uniform_queries(scene_s, graph_s, 150, seed=23, require_path=False)
+    s = qs.s.astype(np.float32)
+    t = qs.t.astype(np.float32)
+    keys = srv.engine.buckets_of(s, t)
+    assert any(srv.engine.router.decode_key(int(k))[0]
+               != srv.engine.router.decode_key(int(k))[1]
+               for k in keys), "no cross-shard traffic to pipeline"
+    ref = srv.query(s, t)
+    tickets = [srv.submit(s[i], t[i]) for i in range(len(s))]
+    srv.flush()
+    assert srv.drain(timeout=120)
+    got = np.concatenate([tk.result(timeout=1) for tk in tickets])
+    srv.stop_async()
+    np.testing.assert_array_equal(ref, got)
+    for bstats in srv.stats.per_bucket.values():
+        assert bstats.occupancy <= 1.0
+    assert len(srv.stats.per_shard) == N_SHARDS
+
+
 # ------------------------------------------------------------ swap behavior
 
 def test_pinned_generation_consistent_during_sharded_swap(scene_s, graph_s,
