@@ -1,0 +1,205 @@
+"""Quantized-slab bench — what the DESIGN.md §11 formats buy and cost.
+
+One compressed index, packed under each slab layout (f32 / bf16 / f16),
+measured four ways:
+
+* **device bytes** — realized artifact footprint + the analytic estimator
+  (``bucketed_device_bytes``) which must agree exactly (the planner and the
+  budget loop steer by the estimator, so drift there mis-sizes artifacts);
+* **exactness** — distance error vs the f32 engine must sit inside the
+  documented ``2 * qerr`` bound, and the argmin winners (covis verdicts +
+  via/hub ids, i.e. the extracted paths) must be **bitwise identical** —
+  the residual-rescue guarantee, gated in ``--smoke`` CI mode;
+* **join latency** — us/query through the bucketed serving engine (the
+  quantized gather adds an in-register decode before the same f32 join);
+* **regions admitted** — ``compress_to_device_budget`` under one shared
+  device-byte budget per layout: narrower slots admit a finer region
+  partition, which is the whole point of spending the dtype (full mode
+  only — the merge loop is the offline phase).
+
+    PYTHONPATH=src python -m benchmarks.bench_quantized --smoke
+
+``--smoke`` shrinks the workload and skips the merge-loop and async-qps
+columns; the exactness + estimator gates run either way (exit nonzero on
+any violation).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+from repro.core import (bucketed_device_bytes, compress_to_device_budget,
+                        pack_bucketed, query_batch_bucketed, slab_layout,
+                        uniform_queries)
+from repro.serving import JnpEngine, PathServer
+
+from . import common
+
+OUT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "artifacts")
+DTYPES = ("f32", "bf16", "f16")
+
+# async-qps parity gates vs f32.  bf16 (the serving-recommended dtype —
+# native on TPU, a bit shift on CPU) must hold full parity; f16 decode
+# pays real conversion instructions on CPU (~5-10% at small async batch
+# sizes, a consistent deficit, not jitter) so it gates at 0.90x.
+QPS_GATE = {"bf16": 0.95, "f16": 0.90}
+
+
+def _latency(bx, s, t, batch_size: int, reps: int = 3) -> float:
+    srv = PathServer(JnpEngine(bx), batch_size=batch_size)
+    srv.warmup()
+    best = np.inf
+    for _ in range(reps):
+        srv.stats.seconds = 0.0
+        srv.stats.queries = 0
+        srv.query(s, t)
+        best = min(best, srv.stats.us_per_query)
+    return best
+
+
+def _async_qps(bx, s, t, batch_size: int, reps: int = 2) -> float:
+    """Best-of-``reps`` open-loop qps (scheduling jitter is a few percent,
+    which matters against a 0.95x parity gate)."""
+    srv = PathServer(JnpEngine(bx), batch_size=batch_size)
+    srv.warmup()
+    best = 0.0
+    for _ in range(reps):
+        srv.start_async(max_wait_ms=5.0)
+        t0 = time.perf_counter()
+        tickets = [srv.submit(s[i], t[i]) for i in range(len(s))]
+        srv.flush()
+        srv.drain(timeout=600)
+        qps = len(s) / (time.perf_counter() - t0)
+        for tk in tickets:
+            tk.result(timeout=1)
+        srv.stop_async()
+        best = max(best, qps)
+    return best
+
+
+def _exactness(bx, base, s, t) -> tuple:
+    """(max |d - d32|, bound, argmin-bitwise?) vs the f32 reference."""
+    ref = [np.asarray(r) for r in query_batch_bucketed(
+        base, s, t, want_argmin=True)]
+    got = [np.asarray(r) for r in query_batch_bucketed(
+        bx, s, t, want_argmin=True)]
+    qerr = float(np.asarray(bx.qerr)) if bx.qerr is not None else 0.0
+    fin = np.isfinite(ref[0])
+    err = float(np.max(np.abs(np.where(fin, got[0] - ref[0], 0.0))))
+    bound = 2.0 * qerr + 1e-4 * float(np.max(np.abs(
+        np.where(fin, ref[0], 0.0)))) + 1e-6
+    m = ~ref[1] & fin
+    bitwise = (np.array_equal(fin, np.isfinite(got[0]))
+               and np.array_equal(ref[1], got[1])
+               and all(np.array_equal(r[m], g[m])
+                       for r, g in zip(ref[2:], got[2:])))
+    return err, bound, bool(bitwise)
+
+
+def run(map_name: str = "rooms-M", budget: float = 0.3,
+        batch_size: int = 64, quick: bool = False):
+    """Returns (csv rows, gate-failure strings)."""
+    n = 400 if quick else 2000
+    ctx = common.suite(map_name)
+    idx, _, _ = common.ehl_star_cached(ctx, budget)
+    qs = uniform_queries(ctx.scene, ctx.graph, n, seed=7,
+                         require_path=False)
+    s = qs.s.astype(np.float32)
+    t = qs.t.astype(np.float32)
+
+    rows, failures, table = [], [], {}
+    base = pack_bucketed(idx)
+    b32 = base.device_bytes()
+    qps32 = None
+    for dtype in DTYPES:
+        lay = slab_layout(dtype)
+        bx = base if dtype == "f32" else pack_bucketed(idx, layout=lay)
+        est = bucketed_device_bytes(idx, layout=lay)
+        if est != bx.device_bytes():
+            failures.append(f"{dtype}: analytic estimator {est}B != "
+                            f"realized {bx.device_bytes()}B")
+        err, bound, bitwise = (0.0, 0.0, True) if dtype == "f32" \
+            else _exactness(bx, base, s, t)
+        if err > bound:
+            failures.append(f"{dtype}: distance error {err:.3e} over the "
+                            f"2*qerr bound {bound:.3e}")
+        if not bitwise:
+            failures.append(f"{dtype}: argmin winners not bitwise-identical "
+                            "to the f32 engine")
+        us = _latency(bx, s, t, batch_size)
+        qps = None if quick else _async_qps(bx, s, t, batch_size)
+        if dtype == "f32":
+            qps32 = qps
+        st = bx.quant_stats() if lay.quantized else {}
+        ratio = b32 / bx.device_bytes()
+        table[dtype] = dict(
+            device_bytes=bx.device_bytes(), ratio=ratio,
+            qerr=float(np.asarray(bx.qerr)) if bx.qerr is not None else 0.0,
+            max_dist_err=err, argmin_bitwise=bitwise, us_per_query=us,
+            async_qps=qps, quant_stats={k: str(v) for k, v in st.items()})
+        rows.append(common.emit(
+            f"quantized/{map_name}/{dtype}", us,
+            f"bytes={bx.device_bytes()};ratio={ratio:.2f};"
+            f"err={err:.2e};bitwise={bitwise}"
+            + (f";qps={qps:.0f}" if qps else "")))
+        gate = QPS_GATE.get(dtype)
+        if qps is not None and qps32 and gate and qps < gate * qps32:
+            failures.append(f"{dtype}: async qps {qps:.0f} below {gate}x of "
+                            f"f32 ({qps32:.0f})")
+
+    if not quick:
+        # equal-budget admission: re-merge a fresh region partition under
+        # one shared device budget per layout (quantized slots are ~3x
+        # narrower, so the same budget keeps ~3x the regions)
+        target = int(0.6 * b32)
+        snap = None
+        for dtype in DTYPES:
+            fresh, _ = common.fresh_ehl_cached(ctx)
+            if snap is None:
+                snap = fresh.snapshot_regions()
+            else:
+                fresh.restore_regions(snap)
+            st = compress_to_device_budget(fresh, target,
+                                           layout=slab_layout(dtype))
+            table[dtype]["regions_admitted"] = st.regions
+            table[dtype]["budget_device_bytes"] = st.device_bytes
+            rows.append(common.emit(
+                f"quantized/{map_name}/admitted/{dtype}", 0.0,
+                f"budget={target};regions={st.regions};"
+                f"bytes={st.device_bytes}"))
+
+    os.makedirs(OUT, exist_ok=True)
+    # smoke runs keep their own artifact so CI never clobbers the full
+    # table (make_tables reads quantized.json for EXPERIMENTS.md §5)
+    name = "quantized_smoke.json" if quick else "quantized.json"
+    json.dump(dict(map=map_name, budget_frac=budget, n=n,
+                   batch_size=batch_size, f32_bytes=b32, table=table,
+                   failures=failures),
+              open(os.path.join(OUT, name), "w"), indent=1)
+    return rows, failures
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--map", default="rooms-M")
+    ap.add_argument("--budget", type=float, default=0.3)
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI size: small workload, exactness gates only")
+    args = ap.parse_args(argv)
+    _, failures = run(args.map, args.budget, batch_size=args.batch,
+                      quick=args.smoke)
+    if failures:
+        print("QUANTIZED BENCH FAILED:\n  " + "\n  ".join(failures))
+        sys.exit(1)
+    print("quantized bench OK")
+
+
+if __name__ == "__main__":
+    main()

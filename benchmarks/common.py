@@ -34,6 +34,12 @@ INDEX_CACHE = os.path.join(os.path.dirname(os.path.abspath(__file__)),
 # hand far cells phantom visibility labels).
 LABELS_VERSION = 2
 
+# Slab-layout salt: the host label sets are dtype-independent, but benches
+# that key cache entries to a packed artifact must not reuse an entry across
+# slab formats — non-f32 layouts get their own cache files (``layout=`` on
+# ``_cache_path``/``ehl_star_cached``); f32 keeps the historical key.
+SLAB_FORMAT_VERSION = 1
+
 
 @dataclasses.dataclass
 class SuiteContext:
@@ -99,13 +105,17 @@ def _scene_hash(scene) -> str:
 
 
 def _cache_path(ctx: SuiteContext, fraction, cell_mult: int,
-                scores, alpha: float) -> str:
+                scores, alpha: float, layout: str = "f32") -> str:
     frac = "full" if fraction is None else f"{fraction:g}"
+    # non-f32 slab layouts salt the key with the dtype + packed-format
+    # version, so a quantized bench never resurrects an entry written for a
+    # different slab format (and vice versa)
+    salt = "" if layout == "f32" else f"_{layout}-s{SLAB_FORMAT_VERSION}"
     return os.path.join(
         INDEX_CACHE,
         f"{ctx.name}_{_scene_hash(ctx.scene)}_v{LABELS_VERSION}"
         f"_cell{ctx.base_cell * cell_mult:g}_f{frac}"
-        f"_{_workload_hash(scores, alpha)}.npz")
+        f"_{_workload_hash(scores, alpha)}{salt}.npz")
 
 
 def fresh_ehl_cached(ctx: SuiteContext, cell_mult: int = 1):
@@ -122,14 +132,16 @@ def fresh_ehl_cached(ctx: SuiteContext, cell_mult: int = 1):
 
 
 def ehl_star_cached(ctx: SuiteContext, fraction: float, scores=None,
-                    alpha: float = 0.0, cell_mult: int = 1):
+                    alpha: float = 0.0, cell_mult: int = 1,
+                    layout: str = "f32"):
     """Disk-cached ``ehl_star``: the compressed index keyed by
-    (map, cell size, budget fraction, workload-hash).
+    (map, cell size, budget fraction, workload-hash, slab layout).
 
     Cache hits skip both the visibility sweep and the merge loop; the
     returned stats are ``None`` on a hit (no compression ran).
     """
-    path = _cache_path(ctx, fraction, cell_mult, scores, alpha)
+    path = _cache_path(ctx, fraction, cell_mult, scores, alpha,
+                       layout=layout)
     if os.path.exists(path):
         t0 = time.perf_counter()
         idx = load_ehl_index(path, ctx.scene, ctx.graph, ctx.hl)

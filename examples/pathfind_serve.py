@@ -37,7 +37,8 @@ import numpy as np
 from repro.core import (build_ehl, build_visgraph, bucketed_device_bytes,
                         cluster_queries, compress_to_fraction, make_map,
                         pack_bucketed, pack_index, path_length, plan_buckets,
-                        slab_device_bytes, uniform_queries, workload_scores)
+                        slab_device_bytes, slab_layout, uniform_queries,
+                        workload_scores)
 from repro.indexing import IndexManager
 from repro.serving import PathServer, expected_join_cost, make_engine
 
@@ -67,6 +68,16 @@ def main():
                     default="jnp", help="query engine backend")
     ap.add_argument("--kernels", action="store_true",
                     help="alias for --backend pallas (interpret on CPU)")
+    ap.add_argument("--quantize", choices=("off", "bf16", "f16"),
+                    default="off",
+                    help="serve quantized label slabs (DESIGN.md §11): "
+                         "narrow distances + delta-encoded u16 via ids with "
+                         "exact-argmin residual rescue; checks argmin/path "
+                         "answers bitwise against the f32 engine and the "
+                         "byte drop against --quantize-min-drop (CI gate)")
+    ap.add_argument("--quantize-min-drop", type=float, default=1.8,
+                    help="[quantize] required f32/quantized device-byte "
+                         "ratio")
     ap.add_argument("--paths", type=int, default=0,
                     help="also extract N full paths via the batched argmin "
                          "engine and verify their lengths")
@@ -144,9 +155,34 @@ def main():
               f"waste={1 - used / total:.1%}")
 
     if backend == "host":
+        if args.quantize != "off":
+            print("--quantize needs a device backend (jnp|pallas)")
+            sys.exit(2)
         engine = make_engine(index, backend="host")
     else:
         engine = make_engine(bx if serve_bucketed else pk, backend=backend)
+
+    eng32, qerr = None, 0.0
+    if args.quantize != "off" and backend != "host":
+        lay = slab_layout(args.quantize)
+        artq = (pack_bucketed(index, layout=lay) if serve_bucketed
+                else pack_index(index, layout=lay))
+        art32 = bx if serve_bucketed else pk
+        drop = art32.device_bytes() / artq.device_bytes()
+        qerr = float(np.asarray(artq.qerr))
+        qs_ = artq.quant_stats()
+        print(f"quantized[{args.quantize}]: "
+              f"{artq.device_bytes() / 1e6:.2f} MB on device "
+              f"({drop:.2f}x smaller), qerr={qerr:.2e}, "
+              f"id_fallback={qs_['id_fallback']} "
+              f"vid_fallback={qs_['vid_fallback']} "
+              f"dist_fallback={qs_['dist_fallback']}")
+        eng32 = engine                  # f32 reference for the bitwise gate
+        engine = make_engine(artq, backend=backend)
+        if drop < args.quantize_min_drop:
+            print(f"QUANTIZED SMOKE FAILED:\n  byte drop {drop:.2f}x < "
+                  f"required {args.quantize_min_drop:.2f}x")
+            sys.exit(1)
 
     if args.clusters > 0:
         qs = cluster_queries(scene, graph, args.clusters, args.queries,
@@ -166,6 +202,15 @@ def main():
               f"batches={b.batches:3d} occupancy={b.occupancy:.1%} "
               f"{b.us_per_query:.1f} us/query")
 
+    if eng32 is not None:
+        failures = check_quantized(engine, eng32, qs.s.astype(np.float32),
+                                   qs.t.astype(np.float32), qerr)
+        if failures:
+            print("QUANTIZED SMOKE FAILED:\n  " + "\n  ".join(failures))
+            sys.exit(1)
+        print("quantized smoke OK: argmin/covis bitwise vs f32, "
+              "distances within the 2*qerr bound")
+
     if args.serve_async:
         failures = check_async(srv, qs.s.astype(np.float32),
                                qs.t.astype(np.float32), backend)
@@ -183,6 +228,47 @@ def main():
                   default=0.0)
         print(f"extracted {n} paths via batched argmin ({backend}); "
               f"max |len(path) - d| = {err:.2e}")
+
+
+def engine_argmin(engine, s, t) -> list:
+    """Full-batch argmin through any bucket-routed engine (exact shapes)."""
+    from repro.core.packed import empty_results
+
+    keys = engine.buckets_of(s, t)
+    outs = empty_results(len(s), True)
+    for k in np.unique(keys):
+        m = keys == k
+        res = engine.batch_argmin(s[m], t[m], bucket=int(k))
+        for o, r in zip(outs, res):
+            o[m] = np.asarray(r)[:int(m.sum())]
+    return outs
+
+
+def check_quantized(eng_q, eng_32, s, t, qerr: float) -> list:
+    """The quantized serving gate: distances within the documented bound,
+    argmin winners (covis verdicts + via/hub ids — i.e. the extracted
+    paths) bitwise-identical to the f32 engine.  Returns failure strings.
+    """
+    d32, cv32, vs32, hb32, vt32 = engine_argmin(eng_32, s, t)
+    dq, cvq, vsq, hbq, vtq = engine_argmin(eng_q, s, t)
+    failures = []
+    fin = np.isfinite(d32)
+    if not np.array_equal(fin, np.isfinite(dq)):
+        failures.append("reachability differs from the f32 engine")
+    bound = 2.0 * qerr + 1e-4 * np.abs(np.where(fin, d32, 0.0))
+    err = np.abs(np.where(fin, dq - d32, 0.0))
+    if not np.all(err <= bound + 1e-6):
+        failures.append(f"distance error {err.max():.3e} over the "
+                        f"2*qerr bound {2 * qerr:.3e}")
+    if not np.array_equal(cv32, cvq):
+        failures.append("covis verdicts differ from the f32 engine")
+    m = ~cv32 & fin                     # rows whose path runs via hubs
+    for name, a, b in (("via_s", vs32, vsq), ("hub", hb32, hbq),
+                       ("via_t", vt32, vtq)):
+        if not np.array_equal(a[m], b[m]):
+            failures.append(f"argmin {name} ids differ from the f32 "
+                            "engine (paths not bitwise)")
+    return failures
 
 
 def check_async(srv, s, t, label: str) -> list:
@@ -256,6 +342,7 @@ def run_sharded(args, backend: str) -> None:
     compress_to_fraction(index, args.budget)
 
     mesh = serving_mesh_or_none(args.shards)
+    lay = None if args.quantize == "off" else slab_layout(args.quantize)
     planner = ShardPlanner(args.shards, tol=args.shard_tol)
     plan = planner.plan(index)
     sharded = planner.build(index, plan)
@@ -263,6 +350,13 @@ def run_sharded(args, backend: str) -> None:
                              use_kernels=backend == "pallas")
     bx = pack_bucketed(index)
     single = make_engine(bx, backend=backend)
+    eng_q, sharded_q, qerr = None, None, 0.0
+    if lay is not None:
+        sharded_q = ShardPlanner(args.shards, tol=args.shard_tol,
+                                 layout=lay).build(index, plan)
+        eng_q = ShardedQueryEngine(sharded_q, mesh=mesh,
+                                   use_kernels=backend == "pallas")
+        qerr = max(float(np.asarray(b.qerr)) for b in sharded_q.shards)
 
     per = sharded.per_shard_bytes()
     print(f"sharded: {args.shards} shards over "
@@ -305,6 +399,15 @@ def run_sharded(args, backend: str) -> None:
     if max(per) > cap:
         failures.append(f"max shard {max(per)}B over per-device cap "
                         f"{cap:.0f}B")
+    if eng_q is not None:
+        drop = sharded.device_bytes() / sharded_q.device_bytes()
+        print(f"  quantized[{args.quantize}]: "
+              f"{sharded_q.device_bytes() / 1e6:.2f} MB total "
+              f"({drop:.2f}x smaller), qerr={qerr:.2e}")
+        if drop < args.quantize_min_drop:
+            failures.append(f"quantized byte drop {drop:.2f}x < required "
+                            f"{args.quantize_min_drop:.2f}x")
+        failures += check_quantized(eng_q, eng, s, t, qerr)
     if args.serve_async:
         failures += check_async(srv2, s, t, "sharded")
     if failures:
@@ -322,11 +425,13 @@ def run_adaptive(args, backend: str) -> None:
     scene = make_map(args.map, seed=0)
     graph = build_visgraph(scene)
     index = build_ehl(scene, cell_size=2.0, graph=graph)
+    lay = None if args.quantize == "off" else slab_layout(args.quantize)
     budget = int(bucketed_device_bytes(index) * args.budget)
     shard_kw = {}
     if args.shards > 1:
         from repro.sharding import sharded_overhead_bytes
-        budget += sharded_overhead_bytes(index, args.shards)
+        over_kw = dict(layout=lay) if lay is not None else {}
+        budget += sharded_overhead_bytes(index, args.shards, **over_kw)
         shard_kw = dict(num_shards=args.shards,
                         mesh=serving_mesh_or_none(args.shards),
                         shard_tol=args.shard_tol)
@@ -337,11 +442,14 @@ def run_adaptive(args, backend: str) -> None:
     # enforces — merging/splitting preserves each winning label's exact
     # float arithmetic, so zero tolerance is attainable, and any candidate
     # that misses it is aborted rather than published
+    # (quantized layouts widen the manager's effective probe tolerance by
+    # the generations' quantization-error bounds — the *argmin* stays exact
+    # via the residual rescue, but reported distances carry the bound)
     mgr = IndexManager(index, budget, backend=backend,
                        batch_size=args.batch,
                        min_queries=max(64, args.queries // 4),
                        replan_threshold=0.10, min_dwell=1, probe_n=64,
-                       seed=17, validate_tol=0.0, **shard_kw)
+                       seed=17, validate_tol=0.0, layout=lay, **shard_kw)
     uniform_engine = mgr.engine.current    # generation-0 uniform-score ref
     srv = PathServer(mgr.engine, batch_size=args.batch,
                      recorder=mgr.recorder)
@@ -368,6 +476,7 @@ def run_adaptive(args, backend: str) -> None:
         lat[phase].append(srv.stats.us_per_query)
 
         probe_pre = mgr.probe_answers()
+        qe_pre = mgr._qerr_of(mgr.engine.artifact) if lay is not None else 0.0
         if args.async_swap:
             mgr.maybe_adapt(block=False)
             mgr.join()                      # bound the demo's swap count
@@ -377,8 +486,14 @@ def run_adaptive(args, backend: str) -> None:
         if swapped:
             probe_post = mgr.probe_answers()
             both_inf = (~np.isfinite(probe_pre)) & (~np.isfinite(probe_post))
-            stable = np.array_equal(np.where(both_inf, 0, probe_pre),
-                                    np.where(both_inf, 0, probe_post))
+            diff = np.abs(np.where(both_inf, 0.0, probe_post - probe_pre))
+            # quantized: two exact-equal generations may differ by the sum
+            # of their 2*qerr distance bounds; f32 stays bitwise (tol 0)
+            swap_tol = 0.0
+            if lay is not None:
+                swap_tol = 2.0 * (qe_pre
+                                  + mgr._qerr_of(mgr.engine.artifact))
+            stable = bool(np.all(diff <= swap_tol))
             if not stable:
                 failures.append(f"round {rnd}: probe answers changed "
                                 "across swap boundary")

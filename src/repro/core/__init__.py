@@ -21,6 +21,8 @@ from .compression import (compress, compress_to_fraction,   # noqa: F401
 from .query import query, query_distance, path_length       # noqa: F401
 from .query import unwind_path                              # noqa: F401
 from .packed import (PackedIndex, BucketedIndex,            # noqa: F401
+                     SlabLayout, LAYOUT_F32, slab_layout,
+                     dtype_bytes, ResidualTable,
                      pack_index, pack_bucketed, plan_buckets,
                      pack_bucketed_split, padded_edge_count,
                      slab_device_bytes, slab_label_slots,
@@ -28,7 +30,8 @@ from .packed import (PackedIndex, BucketedIndex,            # noqa: F401
                      query_batch, query_batch_argmin,
                      query_batch_bucketed, dispatch_buckets,
                      gather_labels_at_width, join_gathered,
-                     gather_masked_labels, join_masked, covis_blocked)
+                     gather_masked_labels, join_masked, covis_blocked,
+                     rescue_exact, splice_rescue, wire_dtypes)
 from .workload import (QuerySet, make_clusters,             # noqa: F401
                        cluster_queries, uniform_queries, mixed_queries,
                        historical_workload, workload_scores)

@@ -182,7 +182,8 @@ def compress_to_device_budget(index: EHLIndex, device_budget_bytes: int,
                               cell_scores: np.ndarray | None = None,
                               alpha: float = 0.0, lane: int = 128,
                               max_rounds: int = 16,
-                              verbose: bool = False) -> CompressionStats:
+                              verbose: bool = False,
+                              layout=None) -> CompressionStats:
     """Merge until the packed *bucketed artifact* fits ``device_budget_bytes``.
 
     Algorithm 1's budget constrains host label memory; what serving actually
@@ -191,16 +192,23 @@ def compress_to_device_budget(index: EHLIndex, device_budget_bytes: int,
     device footprint (``bucketed_device_bytes``, no device allocation),
     derive a proportional label-byte target, resume the incremental merge,
     repeat until the artifact fits or one region remains.
-    """
-    from .packed import bucketed_device_bytes
 
+    ``layout``: the :class:`~repro.core.packed.SlabLayout` the artifact will
+    be packed with (default f32).  A quantized layout packs ~3x more labels
+    into the same budget, so the same device budget admits a much finer
+    region partition — the dtype must be decided *before* merging, not after.
+    """
+    from .packed import LAYOUT_F32, bucketed_device_bytes
+
+    if layout is None:
+        layout = LAYOUT_F32
     initial = index.label_memory()
     merges = 0
     hit_single = False
     if cell_scores is not None:
         rescore_regions(index, cell_scores)
     for _ in range(max_rounds):
-        dev = bucketed_device_bytes(index, lane)
+        dev = bucketed_device_bytes(index, lane, layout=layout)
         if dev <= device_budget_bytes or len(index.regions) <= 1:
             break
         # labels shrink, fixed overhead (mapper/edges) doesn't: aim the label
@@ -216,4 +224,4 @@ def compress_to_device_budget(index: EHLIndex, device_budget_bytes: int,
         initial_bytes=initial, final_bytes=index.label_memory(),
         budget=device_budget_bytes, merges=merges,
         regions=len(index.regions), hit_single_region=hit_single,
-        device_bytes=bucketed_device_bytes(index, lane))
+        device_bytes=bucketed_device_bytes(index, lane, layout=layout))

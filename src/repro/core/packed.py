@@ -37,8 +37,33 @@ Shared across layouts:
   halves on different devices (``gather_masked_labels`` /
   ``covis_blocked`` / ``join_masked``) with byte-identical results.
 
-Everything is float32/int32; the host oracle is float64 — tests compare with
-~1e-5 tolerances.
+Everything is float32/int32 in the reference layout; the host oracle is
+float64 — tests compare with ~1e-5 tolerances.
+
+**Quantized slabs (DESIGN.md §11).**  Both layouts optionally store their
+label slabs in a compressed on-device format (:class:`SlabLayout`):
+
+* distances as bf16/f16 (per-bucket fallback to f32 when a finite distance
+  would overflow the narrow dtype — f16 tops out at 65504);
+* hub and via ids delta-encoded per region row into u16 against per-row
+  i32 bases (pad sentinel ``0xFFFF``; per-bucket fallback to raw i32 when
+  a row's id range exceeds what u16 can carry);
+* the 8-byte-per-slot ``via_xy`` slab replaced by one shared ``[V, 2]``
+  float32 vertex table gathered through the via id — exact, because the
+  packers always filled ``via_xy`` with ``graph.nodes[via]``.
+
+20 bytes/slot become 6.  The gathers decode in-register — ids back to
+exact int32, distances widened to f32 — so every downstream op (visibility
+fold, join, kernels) runs unchanged, and a *f32-layout* artifact compiles
+the exact pre-quantization program (the layout is static aux).  Distances
+come back within ``2*qerr`` of the f32 engine (``qerr`` is the measured
+max quantization error, a device scalar riding the artifact); argmin
+winners stay **bitwise-identical** via the residual rescue: the argmin
+entries also emit an ambiguity mask (join margin within the quantization
+error bound) and ambiguous rows are recomputed through
+:func:`gather_masked_exact` with exact f32 distance rows from the
+host-side :class:`ResidualTable` — the same arithmetic the f32 engine
+runs, so the spliced winners (and path answers) match it bit for bit.
 """
 
 from __future__ import annotations
@@ -51,11 +76,143 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+try:                            # jax's own low-precision dtype package
+    import ml_dtypes
+    _BF16 = np.dtype(ml_dtypes.bfloat16)
+except ImportError:             # pragma: no cover - ml_dtypes ships with jax
+    ml_dtypes = None
+    _BF16 = None
+
 from .edgegrid import (EdgeGrid, build_edge_grid, ell_bytes, plan_grid,
                        segvis_grid)
 from .grid import EHLIndex
 
 HUB_PAD = np.int32(2 ** 30)     # sorts after every real hub id
+U16_PAD = np.uint16(0xFFFF)     # delta-encoded pad sentinel (u16 id slabs)
+
+
+@dataclasses.dataclass(frozen=True)
+class SlabLayout:
+    """On-device slab dtypes — static (lives in pytree aux, keys jit caches).
+
+    ``dist``: f32 | bf16 | f16 — label-distance storage dtype.
+    ``ids``:  i32 | u16       — hub/via id storage (u16 = per-row delta).
+
+    The f32/i32 default reproduces the historical layout bit for bit; any
+    quantized layout also drops the per-slot ``via_xy`` pair in favor of
+    the shared vertex table.
+    """
+
+    dist: str = "f32"
+    ids: str = "i32"
+
+    def __post_init__(self):
+        if self.dist not in ("f32", "bf16", "f16"):
+            raise ValueError(f"unknown distance dtype {self.dist!r}")
+        if self.ids not in ("i32", "u16"):
+            raise ValueError(f"unknown id dtype {self.ids!r}")
+
+    @property
+    def quantized(self) -> bool:
+        return self.dist != "f32" or self.ids != "i32"
+
+    @property
+    def dist_dtype(self):
+        if self.dist == "bf16":
+            return _BF16
+        return np.dtype(np.float16) if self.dist == "f16" \
+            else np.dtype(np.float32)
+
+
+LAYOUT_F32 = SlabLayout()
+
+
+def slab_layout(name: str) -> SlabLayout:
+    """CLI spelling -> layout: 'f32'/'off' | 'bf16' | 'f16'."""
+    if name in ("f32", "off", "none", ""):
+        return LAYOUT_F32
+    if name in ("bf16", "f16"):
+        return SlabLayout(dist=name, ids="u16")
+    raise ValueError(f"unknown slab layout {name!r} (f32 | bf16 | f16)")
+
+
+@dataclasses.dataclass(frozen=True)
+class LayoutBytes:
+    """Analytic byte costs of a :class:`SlabLayout` (see :func:`dtype_bytes`)."""
+    per_slot: int               # bytes per label slot (slab area term)
+    per_row: int                # bytes per slab row (delta-encoding bases)
+    per_vertex: int             # bytes per graph vertex (shared xy table)
+
+
+def dtype_bytes(layout: SlabLayout = LAYOUT_F32) -> LayoutBytes:
+    """Single source of per-slot/per-row/per-vertex byte math.
+
+    Every analytic estimator (:func:`slab_device_bytes`,
+    :func:`bucketed_device_bytes`, the shard planner's balance weights and
+    ``sharded_overhead_bytes``) routes through this helper, so planner
+    decisions, per-shard budget gates and bench padding-waste rows all
+    agree with the real slab dtypes.  Estimates assume no per-bucket
+    fallback (the realized ``device_bytes()`` is authoritative when a
+    bucket overflowed its narrow dtype).
+    """
+    if not layout.quantized:
+        return LayoutBytes(per_slot=4 + 8 + 4 + 4,  # hub + xy + d + vid
+                           per_row=0, per_vertex=0)
+    id_b = 2 if layout.ids == "u16" else 4
+    dist_b = layout.dist_dtype.itemsize
+    return LayoutBytes(per_slot=2 * id_b + dist_b,  # hub_enc + d + via_enc
+                       per_row=(8 if layout.ids == "u16" else 0),
+                       per_vertex=8)                # shared [V, 2] f32 table
+
+
+class ResidualTable:
+    """Host-side exact f32 distance rows — the residual the rescue reads.
+
+    Per bucket, the pre-quantization float32 ``via_d`` slab plus int32
+    routing mirrors (mapper / region -> bucket / row), ~4 bytes per label
+    slot of host memory.  Only *distances* are kept: the device slabs
+    already decode hub/via ids to their exact int32 values, so the rescue
+    only has to replace the quantized distance term
+    (:func:`gather_masked_exact`).  Host-resident, never uploaded whole —
+    ambiguous batches gather [B, W] rows and ship just those.
+    """
+
+    def __init__(self, d_slabs, region_bucket, region_row, mapper,
+                 widths, nx: int, ny: int, cell_size: float):
+        self.d = [np.ascontiguousarray(np.asarray(a, np.float32))
+                  for a in d_slabs]
+        self.region_bucket = np.asarray(region_bucket, np.int32)
+        self.region_row = np.asarray(region_row, np.int32)
+        self.mapper = np.asarray(mapper, np.int32)
+        self.widths = tuple(int(w) for w in widths)
+        self.nx, self.ny = int(nx), int(ny)
+        self.cell_size = float(cell_size)
+
+    def locate(self, pts: np.ndarray) -> np.ndarray:
+        """[B] region ids — the same float32 floor-divide as
+        :func:`locate_regions`, so host rows match device gathers exactly."""
+        p = np.asarray(pts, np.float32)
+        cs = np.float32(self.cell_size)
+        ix = np.clip((p[:, 0] / cs).astype(np.int32), 0, self.nx - 1)
+        iy = np.clip((p[:, 1] / cs).astype(np.int32), 0, self.ny - 1)
+        return self.mapper[iy * self.nx + ix]
+
+    def gather_d(self, regions: np.ndarray, width: int) -> np.ndarray:
+        """[B, width] exact f32 distance rows, inf-padded — the host mirror
+        of the distance plane of :func:`_gather_bucketed`."""
+        regions = np.asarray(regions)
+        out = np.full((len(regions), width), np.inf, np.float32)
+        b = self.region_bucket[regions]
+        r = self.region_row[regions]
+        for k, w in enumerate(self.widths):
+            if w > width:
+                continue        # wider buckets stay padding, as on device
+            m = b == k
+            if m.any():
+                rows = np.minimum(r[m], self.d[k].shape[0] - 1)
+                out[np.nonzero(m)[0][:, None],
+                    np.arange(w)[None, :]] = self.d[k][rows]
+        return out
 
 
 class TraceCounter:
@@ -100,10 +257,10 @@ def bucket_width(n_labels: int, lane: int = 128) -> int:
 class PackedIndex:
     """Single-slab layout: pytree of device arrays (static geometry in aux)."""
 
-    hub_ids: jnp.ndarray    # [R, L] int32, HUB_PAD padded, sorted per row
-    via_xy: jnp.ndarray     # [R, L, 2] float32
-    via_d: jnp.ndarray      # [R, L] float32 (+inf on pads)
-    via_ids: jnp.ndarray    # [R, L] int32 (-1 pads) — for path unwinding
+    hub_ids: jnp.ndarray    # [R, L] int32 (or u16 delta vs hub_base), sorted
+    via_xy: jnp.ndarray     # [R, L, 2] float32, or None (quantized: vert_xy)
+    via_d: jnp.ndarray      # [R, L] float32/bf16/f16 (+inf on pads)
+    via_ids: jnp.ndarray    # [R, L] int32 (-1 pads) or u16 delta vs vid_base
     mapper: jnp.ndarray     # [C] int32 cell -> region row
     edges_a: jnp.ndarray    # [E, 2] float32 (degenerate-padded)
     edges_b: jnp.ndarray    # [E, 2] float32
@@ -115,18 +272,30 @@ class PackedIndex:
     cell_size: float
     width: float
     height: float
+    # quantized-layout extras (§11) — all None under the f32 layout
+    vert_xy: jnp.ndarray | None = None      # [V, 2] f32 shared vertex table
+    hub_base: jnp.ndarray | None = None     # [R] i32 per-row hub id base
+    vid_base: jnp.ndarray | None = None     # [R] i32 per-row via id base
+    qerr: jnp.ndarray | None = None         # f32 scalar max |f32(dq) - d|
+    layout: SlabLayout = LAYOUT_F32
+    residual: ResidualTable | None = dataclasses.field(
+        default=None, repr=False, compare=False)   # host-side, not a leaf
 
     # -- pytree protocol ----------------------------------------------------
     def tree_flatten(self):
         children = (self.hub_ids, self.via_xy, self.via_d, self.via_ids,
                     self.mapper, self.edges_a, self.edges_b, self.edges_c,
-                    self.grid)
-        aux = (self.nx, self.ny, self.cell_size, self.width, self.height)
+                    self.grid, self.vert_xy, self.hub_base, self.vid_base,
+                    self.qerr)
+        aux = (self.nx, self.ny, self.cell_size, self.width, self.height,
+               self.layout)
         return children, aux
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(*children, *aux)
+        return cls(*children[:9], *aux[:5],
+                   vert_xy=children[9], hub_base=children[10],
+                   vid_base=children[11], qerr=children[12], layout=aux[5])
 
     # -- properties ----------------------------------------------------------
     @property
@@ -142,15 +311,22 @@ class PackedIndex:
         return self.edges_a.shape[0]
 
     def device_bytes(self) -> int:
-        base = sum(np.prod(a.shape) * a.dtype.itemsize for a in
-                   (self.hub_ids, self.via_xy, self.via_d, self.via_ids,
-                    self.mapper, self.edges_a, self.edges_b, self.edges_c))
+        arrs = (self.hub_ids, self.via_xy, self.via_d, self.via_ids,
+                self.mapper, self.edges_a, self.edges_b, self.edges_c,
+                self.vert_xy, self.hub_base, self.vid_base)
+        base = sum(np.prod(a.shape) * a.dtype.itemsize
+                   for a in arrs if a is not None)
         return int(base) + (self.grid.device_bytes() if self.grid else 0)
 
     def label_slots(self) -> tuple[int, int]:
         """(used, total) label slots — padding waste is total - used."""
-        used = int((np.asarray(self.hub_ids) != HUB_PAD).sum())
+        used = int(_used_mask(self.hub_ids).sum())
         return used, int(np.prod(self.hub_ids.shape))
+
+    def quant_stats(self) -> dict:
+        """Realized quantization record (fallbacks are loud, not silent)."""
+        return _quant_stats(self.layout, (self.hub_ids,), (self.via_d,),
+                            (self.via_ids,), self.qerr)
 
 
 @jax.tree_util.register_pytree_node_class
@@ -163,10 +339,10 @@ class BucketedIndex:
     (not rows), so point location composes with the indirection in O(1).
     """
 
-    hub_ids: tuple          # per bucket: [R_k, W_k] int32, HUB_PAD padded
-    via_xy: tuple           # per bucket: [R_k, W_k, 2] float32
-    via_d: tuple            # per bucket: [R_k, W_k] float32 (+inf pads)
-    via_ids: tuple          # per bucket: [R_k, W_k] int32 (-1 pads)
+    hub_ids: tuple          # per bucket: [R_k, W_k] int32 or u16 delta
+    via_xy: tuple           # per bucket: [R_k, W_k, 2] float32 (or () §11)
+    via_d: tuple            # per bucket: [R_k, W_k] f32/bf16/f16 (+inf pads)
+    via_ids: tuple          # per bucket: [R_k, W_k] int32 (-1 pads) or u16
     mapper: jnp.ndarray     # [C] int32 cell -> region id
     region_bucket: jnp.ndarray  # [R] int32 region id -> bucket
     region_row: jnp.ndarray     # [R] int32 region id -> row in its slab
@@ -181,19 +357,30 @@ class BucketedIndex:
     width: float
     height: float
     widths: tuple           # per-bucket label width, strictly increasing
+    # quantized-layout extras (§11) — all None/() under the f32 layout
+    vert_xy: jnp.ndarray | None = None      # [V, 2] f32 shared vertex table
+    hub_base: tuple = ()                    # per bucket: [R_k] i32 row base
+    vid_base: tuple = ()                    # per bucket: [R_k] i32 row base
+    qerr: jnp.ndarray | None = None         # f32 scalar max |f32(dq) - d|
+    layout: SlabLayout = LAYOUT_F32
+    residual: ResidualTable | None = dataclasses.field(
+        default=None, repr=False, compare=False)   # host-side, not a leaf
 
     # -- pytree protocol ----------------------------------------------------
     def tree_flatten(self):
         children = (self.hub_ids, self.via_xy, self.via_d, self.via_ids,
                     self.mapper, self.region_bucket, self.region_row,
-                    self.edges_a, self.edges_b, self.edges_c, self.grid)
+                    self.edges_a, self.edges_b, self.edges_c, self.grid,
+                    self.vert_xy, self.hub_base, self.vid_base, self.qerr)
         aux = (self.nx, self.ny, self.cell_size, self.width, self.height,
-               self.widths)
+               self.widths, self.layout)
         return children, aux
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(*children, *aux)
+        return cls(*children[:11], *aux[:6],
+                   vert_xy=children[11], hub_base=children[12],
+                   vid_base=children[13], qerr=children[14], layout=aux[6])
 
     # -- properties ----------------------------------------------------------
     @property
@@ -216,11 +403,13 @@ class BucketedIndex:
     def device_bytes(self) -> int:
         slabs = sum(np.prod(a.shape) * a.dtype.itemsize
                     for group in (self.hub_ids, self.via_xy, self.via_d,
-                                  self.via_ids)
+                                  self.via_ids, self.hub_base, self.vid_base)
                     for a in group)
         fixed = sum(np.prod(a.shape) * a.dtype.itemsize for a in
                     (self.mapper, self.region_bucket, self.region_row,
                      self.edges_a, self.edges_b, self.edges_c))
+        if self.vert_xy is not None:
+            fixed += np.prod(self.vert_xy.shape) * self.vert_xy.dtype.itemsize
         return (int(slabs) + int(fixed)
                 + (self.grid.device_bytes() if self.grid else 0))
 
@@ -229,12 +418,17 @@ class BucketedIndex:
         out = []
         for k, w in enumerate(self.widths):
             hub = np.asarray(self.hub_ids[k])
-            used = int((hub != HUB_PAD).sum())
+            used = int(_used_mask(hub).sum())
             total = int(np.prod(hub.shape))
             out.append(dict(bucket=k, width=w, regions=hub.shape[0],
                             used_slots=used, total_slots=total,
                             waste=1.0 - used / max(1, total)))
         return out
+
+    def quant_stats(self) -> dict:
+        """Realized quantization record (fallbacks are loud, not silent)."""
+        return _quant_stats(self.layout, self.hub_ids, self.via_d,
+                            self.via_ids, self.qerr)
 
     def label_slots(self) -> tuple[int, int]:
         """(used, total) label slots across all buckets."""
@@ -268,6 +462,104 @@ def _alloc_slab(rows: int, width: int):
             np.zeros((rows, width, 2), dtype=np.float32),
             np.full((rows, width), np.inf, dtype=np.float32),
             np.full((rows, width), -1, dtype=np.int32))
+
+
+# ---------------------------------------------------------------------------
+# quantized slab encoding (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+def _used_mask(hub_arr) -> np.ndarray:
+    """Real-label mask for either id encoding (u16 sentinel vs HUB_PAD)."""
+    a = np.asarray(hub_arr)
+    return (a != np.uint16(U16_PAD)) if a.dtype == np.uint16 \
+        else (a != HUB_PAD)
+
+
+def encode_delta_u16(ids: np.ndarray, valid: np.ndarray):
+    """Per-row delta encoding of an id slab into u16 + [R] i32 bases.
+
+    Returns ``(enc, base)`` with pad slots at the ``0xFFFF`` sentinel, or
+    ``(None, None)`` when any row's id range exceeds 65534 — the caller
+    must then keep the raw i32 slab (the loud per-bucket fallback).
+    """
+    ids = np.asarray(ids, np.int64)
+    any_valid = valid.any(axis=1)
+    lo = np.where(valid, ids, np.iinfo(np.int64).max).min(axis=1)
+    lo = np.where(any_valid, lo, 0)
+    hi = np.where(valid, ids, np.iinfo(np.int64).min).max(axis=1)
+    hi = np.where(any_valid, hi, 0)
+    if int((hi - lo).max(initial=0)) > 0xFFFE:      # 0xFFFF is the pad
+        return None, None
+    enc = np.where(valid, ids - lo[:, None], 0xFFFF)
+    return enc.astype(np.uint16), lo.astype(np.int32)
+
+
+def encode_dist(d: np.ndarray, dtype) -> tuple:
+    """Quantize a f32 distance slab; returns ``(dq, qerr)``.
+
+    ``(None, 0.0)`` when any *finite* distance overflows to inf in the
+    narrow dtype (f16 tops out at 65504) — per-bucket fallback to f32.
+    +inf pads are representable in every dtype and round-trip exactly.
+    """
+    d = np.asarray(d, np.float32)
+    with np.errstate(over="ignore"):
+        dq = d.astype(dtype)
+        back = dq.astype(np.float32)
+    finite = np.isfinite(d)
+    if np.any(finite & ~np.isfinite(back)):
+        return None, 0.0
+    err = np.abs(back[finite] - d[finite])
+    return dq, float(err.max(initial=0.0))
+
+
+def _quantize_slab(arrs, layout: SlabLayout):
+    """Encode one (hub, xy, d, vid) f32 slab into the quantized layout.
+
+    Returns ``(hub, d, vid, hub_base, vid_base, qerr)`` — ids u16-delta
+    (or raw i32 on range overflow, per bucket), distances in
+    ``layout.dist_dtype`` (or f32 on finite-overflow, per bucket).  The
+    ``via_xy`` plane is dropped entirely: it is always
+    ``vert_xy[via_id]`` (see ``EHLIndex.pack_region``), so the shared
+    vertex table replaces it exactly.
+    """
+    hub, _, d, vid = arrs
+    R = hub.shape[0]
+    zeros = np.zeros(R, np.int32)
+    hub_q, hub_base = hub, zeros
+    vid_q, vid_base = vid, zeros
+    if layout.ids == "u16":
+        enc, base = encode_delta_u16(hub, hub != HUB_PAD)
+        if enc is not None:
+            hub_q, hub_base = enc, base
+        enc, base = encode_delta_u16(vid, vid >= 0)
+        if enc is not None:
+            vid_q, vid_base = enc, base
+    d_q, qerr = d, 0.0
+    if layout.dist != "f32":
+        dq, err = encode_dist(d, layout.dist_dtype)
+        if dq is not None:
+            d_q, qerr = dq, err
+    return hub_q, d_q, vid_q, hub_base, vid_base, qerr
+
+
+def _quant_stats(layout: SlabLayout, hub_ids, via_d, via_ids, qerr) -> dict:
+    """Per-bucket realized encoding + fallback flags (never silent)."""
+    return dict(
+        layout=layout,
+        qerr=(float(np.asarray(qerr)) if qerr is not None else 0.0),
+        id_fallback=tuple(np.asarray(h).dtype != np.uint16
+                          for h in hub_ids) if layout.ids == "u16" else (),
+        vid_fallback=tuple(np.asarray(v).dtype != np.uint16
+                           for v in via_ids) if layout.ids == "u16" else (),
+        dist_fallback=tuple(
+            np.asarray(d).dtype != layout.dist_dtype for d in via_d)
+        if layout.dist != "f32" else ())
+
+
+def _vert_table(index: EHLIndex) -> jnp.ndarray:
+    """[V, 2] f32 shared vertex table — exactly the values the f32 packers
+    wrote per slot (``via_xy = graph.nodes[via]`` cast to float32)."""
+    return jnp.asarray(np.asarray(index.graph.nodes, np.float32))
 
 
 def _cell_mapper(index: EHLIndex, live: list) -> np.ndarray:
@@ -372,26 +664,36 @@ def slab_label_slots(index: EHLIndex, lane: int = 128,
 
 def slab_device_bytes(index: EHLIndex, lane: int = 128,
                       region_pad_multiple: int = 1,
-                      edge_grid: bool | None = None) -> int:
+                      edge_grid: bool | None = None,
+                      layout: SlabLayout = LAYOUT_F32) -> int:
     """What ``pack_index(...).device_bytes()`` would be, without packing.
 
     Lets callers report the single-slab footprint for comparison against the
     bucketed layout without materializing the global-Lmax slab on device.
     """
     _, slots = slab_label_slots(index, lane, region_pad_multiple)
-    per_slot = 4 + 8 + 4 + 4          # hub_ids + via_xy + via_d + via_ids
+    lb = dtype_bytes(layout)
+    counts = index.packed_label_counts()
+    R = _round_up(max(1, len(counts)), region_pad_multiple)
     Ep = padded_edge_count(index.scene.edges.shape[0], lane)
-    return (slots * per_slot + index.mapper.size * 4 + 3 * Ep * 2 * 4
+    return (slots * lb.per_slot + R * lb.per_row
+            + index.graph.num_nodes * lb.per_vertex
+            + index.mapper.size * 4 + 3 * Ep * 2 * 4
             + _grid_bytes(index, lane, edge_grid))
 
 
 def pack_index(index: EHLIndex, lane: int = 128,
                region_pad_multiple: int = 1,
-               edge_grid: bool | None = None) -> PackedIndex:
+               edge_grid: bool | None = None,
+               layout: SlabLayout = LAYOUT_F32) -> PackedIndex:
     """Freeze a (possibly compressed) host index into one global-Lmax slab.
 
     ``edge_grid``: ``None`` attaches the §10 edge grid when pruning pays,
     ``True``/``False`` force it on/off.
+
+    ``layout``: quantized layouts store distances narrow, ids u16-delta,
+    drop ``via_xy`` for the shared vertex table, and attach the host-side
+    :class:`ResidualTable` the exact-argmin rescue reads (DESIGN.md §11).
     """
     live, packs = _host_packs(index)
     R = _round_up(len(live), region_pad_multiple)
@@ -407,6 +709,22 @@ def pack_index(index: EHLIndex, lane: int = 128,
     ea, eb, ec = _pack_edges(index, lane)
     grid = _maybe_grid(ea, eb, index.scene.edges.shape[0], index.scene,
                        edge_grid)
+    if layout.quantized:
+        hub_q, d_q, vid_q, hb, vb, qerr = _quantize_slab(arrs, layout)
+        residual = ResidualTable(
+            (arrs[2],), np.zeros(R, np.int32), np.arange(R, dtype=np.int32),
+            mapper, (L,), index.nx, index.ny, float(index.cell_size))
+        return PackedIndex(
+            hub_ids=jnp.asarray(hub_q), via_xy=None,
+            via_d=jnp.asarray(d_q), via_ids=jnp.asarray(vid_q),
+            mapper=jnp.asarray(mapper), edges_a=jnp.asarray(ea),
+            edges_b=jnp.asarray(eb), edges_c=jnp.asarray(ec), grid=grid,
+            nx=index.nx, ny=index.ny,
+            cell_size=float(index.cell_size), width=float(index.scene.width),
+            height=float(index.scene.height),
+            vert_xy=_vert_table(index), hub_base=jnp.asarray(hb),
+            vid_base=jnp.asarray(vb), qerr=jnp.float32(qerr),
+            layout=layout, residual=residual)
     return PackedIndex(
         hub_ids=jnp.asarray(arrs[0]), via_xy=jnp.asarray(arrs[1]),
         via_d=jnp.asarray(arrs[2]), via_ids=jnp.asarray(arrs[3]),
@@ -434,20 +752,24 @@ def plan_buckets(index: EHLIndex, lane: int = 128
 
 
 def bucketed_device_bytes(index: EHLIndex, lane: int = 128,
-                          edge_grid: bool | None = None) -> int:
+                          edge_grid: bool | None = None,
+                          layout: SlabLayout = LAYOUT_F32) -> int:
     """What ``pack_bucketed(...).device_bytes()`` would be, without packing."""
     counts, widths, region_bucket = plan_buckets(index, lane)
-    per_slot = 4 + 8 + 4 + 4          # hub_ids + via_xy + via_d + via_ids
-    slabs = sum(max(1, int((region_bucket == k).sum())) * w * per_slot
+    lb = dtype_bytes(layout)
+    slabs = sum(max(1, int((region_bucket == k).sum()))
+                * (w * lb.per_slot + lb.per_row)
                 for k, w in enumerate(widths))
     Ep = padded_edge_count(index.scene.edges.shape[0], lane)
-    return (slabs + index.mapper.size * 4 + 2 * len(counts) * 4
+    return (slabs + index.graph.num_nodes * lb.per_vertex
+            + index.mapper.size * 4 + 2 * len(counts) * 4
             + 3 * Ep * 2 * 4 + _grid_bytes(index, lane, edge_grid))
 
 
 def pack_bucketed(index: EHLIndex, lane: int = 128,
                   reuse_edges_from: "BucketedIndex | PackedIndex | None" = None,
-                  edge_grid: bool | None = None) -> BucketedIndex:
+                  edge_grid: bool | None = None,
+                  layout: SlabLayout = LAYOUT_F32) -> BucketedIndex:
     """Freeze a host index into width-bucketed slabs (DESIGN.md §4).
 
     Each region goes into the smallest power-of-two-multiple-of-``lane``
@@ -491,6 +813,28 @@ def pack_bucketed(index: EHLIndex, lane: int = 128,
         grid = _maybe_grid(ea, eb, index.scene.edges.shape[0], index.scene,
                            edge_grid)
         ea, eb, ec = jnp.asarray(ea), jnp.asarray(eb), jnp.asarray(ec)
+    if layout.quantized:
+        quant = [_quantize_slab(a, layout) for a in slabs]
+        residual = ResidualTable(
+            [a[2] for a in slabs], region_bucket, region_row, mapper,
+            widths, index.nx, index.ny, float(index.cell_size))
+        return BucketedIndex(
+            hub_ids=tuple(jnp.asarray(q[0]) for q in quant),
+            via_xy=(),
+            via_d=tuple(jnp.asarray(q[1]) for q in quant),
+            via_ids=tuple(jnp.asarray(q[2]) for q in quant),
+            mapper=jnp.asarray(mapper),
+            region_bucket=jnp.asarray(region_bucket),
+            region_row=jnp.asarray(region_row),
+            edges_a=ea, edges_b=eb, edges_c=ec, grid=grid,
+            nx=index.nx, ny=index.ny, cell_size=float(index.cell_size),
+            width=float(index.scene.width), height=float(index.scene.height),
+            widths=tuple(widths),
+            vert_xy=_vert_table(index),
+            hub_base=tuple(jnp.asarray(q[3]) for q in quant),
+            vid_base=tuple(jnp.asarray(q[4]) for q in quant),
+            qerr=jnp.float32(max((q[5] for q in quant), default=0.0)),
+            layout=layout, residual=residual)
     return BucketedIndex(
         hub_ids=tuple(jnp.asarray(a[0]) for a in slabs),
         via_xy=tuple(jnp.asarray(a[1]) for a in slabs),
@@ -556,13 +900,21 @@ def _mask_labels(labels, pts, edges, use_kernels: bool):
 
 
 def _join_masked(masked_s, masked_t, s, t, covis, use_kernels: bool,
-                 want_argmin: bool):
+                 want_argmin: bool, qerr2=None):
     """Join half of Eq. 1-3 over visibility-masked labels.
 
     The join emits the row-min form ``rowmin[b,i] = vd_s[b,i] + min_{hub
     match j} vd_t[b,j]`` and the argmin pair is recovered with two cheap
     O(L) reductions.  ``covis`` overrides with the direct Euclidean
     distance (the label set does not witness co-visible pairs).
+
+    ``qerr2`` (quantized layouts only, with ``want_argmin``): the summed
+    per-side quantization error bounds.  A sixth ``amb`` [B] bool output
+    flags rows whose argmin margin is within the error bound — their
+    winner could differ from the f32 engine's, so the host rescues them
+    against the exact residual rows (DESIGN.md §11).  Rows with a unique
+    candidate (inf second-best) or no candidate at all (all-inf row) are
+    provably unambiguous and excluded.
     """
     from repro.kernels import ops
 
@@ -589,11 +941,27 @@ def _join_masked(masked_s, masked_t, s, t, covis, use_kernels: bool,
     via_s = jnp.take_along_axis(vid_s, i[:, None], 1)[:, 0]
     via_t = jnp.take_along_axis(vid_t, j[:, None], 1)[:, 0]
     hub = hub_i[:, 0]
-    return d, covis, via_s, hub, via_t
+    if qerr2 is None:
+        return d, covis, via_s, hub, via_t
+
+    # exact-argmin ambiguity: two candidates can swap order in exact f32
+    # space only if their quantized margin is within twice the worst-case
+    # per-candidate perturbation (qerr2 plus a few ulps of f32 rounding)
+    L = rowmin.shape[-1]
+    iota = jax.lax.broadcasted_iota(jnp.int32, (1, L), 1)
+    second_i = jnp.min(jnp.where(iota == i[:, None], inf, rowmin), -1)
+    best_j = jnp.take_along_axis(vd_t_match, j[:, None], 1)[:, 0]
+    second_j = jnp.min(jnp.where(iota == j[:, None], inf, vd_t_match), -1)
+    thr = (jnp.float32(2.0) * qerr2
+           + jnp.float32(64.0) * jnp.finfo(jnp.float32).eps
+           * jnp.abs(d_label))
+    amb = ((jnp.isfinite(second_i) & (second_i - d_label <= thr))
+           | (jnp.isfinite(second_j) & (second_j - best_j <= thr)))
+    return d, covis, via_s, hub, via_t, amb
 
 
 def _labels_to_distances(labels_s, labels_t, s, t, edges,
-                         use_kernels: bool, want_argmin: bool):
+                         use_kernels: bool, want_argmin: bool, qerr2=None):
     """Shared Eq. 1-3 core: per-endpoint labels -> distances (+ argmin ids).
 
     ``labels_*`` are (hub_ids [B,L], via_xy [B,L,2], via_d [B,L],
@@ -606,50 +974,124 @@ def _labels_to_distances(labels_s, labels_t, s, t, edges,
     masked_s = _mask_labels(labels_s, s, edges, use_kernels)
     masked_t = _mask_labels(labels_t, t, edges, use_kernels)
     covis = _segvis(s, t, edges, use_kernels)           # [B]
+    # materialize the masked triples: left to itself XLA fuses the O(W*E)
+    # visibility fold into the O(W^2) join and re-evaluates per pair —
+    # measurably slower for every layout, ruinously so for quantized
+    # slabs whose fold also drags the decode gathers along (identity op,
+    # so bitwise answers are untouched)
+    masked_s, masked_t = jax.lax.optimization_barrier((masked_s, masked_t))
     return _join_masked(masked_s, masked_t, s, t, covis, use_kernels,
-                        want_argmin)
+                        want_argmin, qerr2=qerr2)
+
+
+def _decode_ids(enc: jnp.ndarray, base: jnp.ndarray, pad_val) -> jnp.ndarray:
+    """u16 delta rows + per-row bases -> exact int32 ids (i32 passes through).
+
+    The dtype check is a trace-time constant, so per-bucket i32 fallbacks
+    compile to a plain passthrough — fallback handling costs nothing where
+    it didn't happen.
+    """
+    if enc.dtype != jnp.uint16:
+        return enc
+    raw = base[:, None].astype(jnp.int32) + enc.astype(jnp.int32)
+    return jnp.where(enc == jnp.uint16(U16_PAD), jnp.int32(pad_val), raw)
+
+
+def _via_xy_of(vid: jnp.ndarray, vert_xy: jnp.ndarray) -> jnp.ndarray:
+    """Reconstruct the per-slot via coordinates from the shared vertex table.
+
+    Bitwise-equal to the f32 layout's ``via_xy`` plane: the packer writes
+    ``graph.nodes[via]`` (cast f32) per slot and zeros for pads, which is
+    exactly ``vert_xy[vid]`` masked at ``vid < 0``.
+    """
+    xy = vert_xy[jnp.clip(vid, 0, vert_xy.shape[0] - 1)]
+    return jnp.where((vid >= 0)[..., None], xy, jnp.float32(0.0))
 
 
 def _gather_packed(idx: PackedIndex, rows: jnp.ndarray):
-    return (idx.hub_ids[rows], idx.via_xy[rows], idx.via_d[rows],
-            idx.via_ids[rows])
+    if not idx.layout.quantized:
+        return (idx.hub_ids[rows], idx.via_xy[rows], idx.via_d[rows],
+                idx.via_ids[rows])
+    hub = _decode_ids(idx.hub_ids[rows], idx.hub_base[rows], HUB_PAD)
+    vid = _decode_ids(idx.via_ids[rows], idx.vid_base[rows], -1)
+    # materialize the decoded planes (see _gather_bucketed: XLA would
+    # otherwise re-evaluate the decode gathers inside the visibility loop)
+    return jax.lax.optimization_barrier(
+        (hub, _via_xy_of(vid, idx.vert_xy),
+         idx.via_d[rows].astype(jnp.float32), vid))
 
 
 def _edges_of(idx) -> tuple:
     return (idx.edges_a, idx.edges_b, idx.edges_c, idx.grid)
 
 
-@partial(jax.jit, static_argnames=("use_kernels",))
+@partial(jax.jit, static_argnames=("bucket", "use_kernels"))
+def _fold_endpoint(idx, pts: jnp.ndarray, bucket=None,
+                   use_kernels: bool = False):
+    """locate + gather + visibility-fold one endpoint side (own jit entry).
+
+    ``bucket=None`` gathers the single PackedIndex slab; an int gathers the
+    bucketed layout at that dispatch bucket.  Splitting the fold from the
+    O(W^2) join at a real jit boundary materializes the gathered planes:
+    fused into one program, XLA folds the gather/decode chain into the
+    visibility loop and re-evaluates it per edge — same flop count, ~2x
+    wall on wide buckets for quantized layouts (``optimization_barrier``
+    does not survive this backend's fusion pass).  The boundary changes no
+    arithmetic: the sharded engine has always split here
+    (``gather_masked_labels`` + ``join_masked``) and is bitwise-identical
+    to the fused engine.
+    """
+    TRACES.bump()
+    pts = pts.astype(jnp.float32)
+    r = locate_regions(idx, pts)
+    labels = (_gather_packed(idx, r) if bucket is None
+              else _gather_bucketed(idx, r, bucket))
+    return _mask_labels(labels, pts, _edges_of(idx), use_kernels)
+
+
+@partial(jax.jit, static_argnames=("use_kernels", "want_argmin"))
+def _join_endpoints(idx, masked_s, masked_t, s: jnp.ndarray, t: jnp.ndarray,
+                    use_kernels: bool = False, want_argmin: bool = False,
+                    qerr2=None):
+    """Co-visibility + Eq. 1-3 join over folded endpoint sides (jit entry)."""
+    TRACES.bump()
+    s = s.astype(jnp.float32)
+    t = t.astype(jnp.float32)
+    covis = _segvis(s, t, _edges_of(idx), use_kernels)
+    return _join_masked(masked_s, masked_t, s, t, covis, use_kernels,
+                        want_argmin, qerr2=qerr2)
+
+
 def query_batch(idx: PackedIndex, s: jnp.ndarray, t: jnp.ndarray,
                 use_kernels: bool = False) -> jnp.ndarray:
     """Batched Eq. 1-3: shortest distances for query pairs [B,2]x[B,2].
 
     use_kernels=True routes visibility + join through the Pallas kernels
     (``repro.kernels.ops``); False uses their jnp references — identical
-    semantics, asserted by tests.
+    semantics, asserted by tests.  Two async jit dispatches per call
+    (endpoint folds + join; see :func:`_fold_endpoint`).
     """
-    TRACES.bump()
-    s = s.astype(jnp.float32)
-    t = t.astype(jnp.float32)
-    rs = locate_regions(idx, s)
-    rt = locate_regions(idx, t)
-    return _labels_to_distances(
-        _gather_packed(idx, rs), _gather_packed(idx, rt), s, t,
-        _edges_of(idx), use_kernels, want_argmin=False)
+    s = jnp.asarray(s).astype(jnp.float32)
+    t = jnp.asarray(t).astype(jnp.float32)
+    ms = _fold_endpoint(idx, s, use_kernels=use_kernels)
+    mt = _fold_endpoint(idx, t, use_kernels=use_kernels)
+    return _join_endpoints(idx, ms, mt, s, t, use_kernels=use_kernels)
 
 
-@partial(jax.jit, static_argnames=("use_kernels",))
 def query_batch_argmin(idx: PackedIndex, s: jnp.ndarray, t: jnp.ndarray,
                        use_kernels: bool = False):
-    """Distances + winning (via_s, hub, via_t) label ids (path unwinding)."""
-    TRACES.bump()
-    s = s.astype(jnp.float32)
-    t = t.astype(jnp.float32)
-    rs = locate_regions(idx, s)
-    rt = locate_regions(idx, t)
-    return _labels_to_distances(
-        _gather_packed(idx, rs), _gather_packed(idx, rt), s, t,
-        _edges_of(idx), use_kernels, want_argmin=True)
+    """Distances + winning (via_s, hub, via_t) label ids (path unwinding).
+
+    Quantized layouts return a sixth ``amb`` array — rows the caller must
+    rescue against the residual (:func:`rescue_exact`) for exact argmin.
+    """
+    s = jnp.asarray(s).astype(jnp.float32)
+    t = jnp.asarray(t).astype(jnp.float32)
+    ms = _fold_endpoint(idx, s, use_kernels=use_kernels)
+    mt = _fold_endpoint(idx, t, use_kernels=use_kernels)
+    qerr2 = idx.qerr + idx.qerr if idx.layout.quantized else None
+    return _join_endpoints(idx, ms, mt, s, t, use_kernels=use_kernels,
+                           want_argmin=True, qerr2=qerr2)
 
 
 # ---------------------------------------------------------------------------
@@ -680,43 +1122,63 @@ def _gather_bucketed(bx: BucketedIndex, regions: jnp.ndarray, bucket: int,
 
     src_bucket = bx.region_bucket[regions]
     src_row = bx.region_row[regions]
+    quantized = bx.layout.quantized
     for k in range(bucket + 1):
         rows = jnp.clip(src_row, 0, bx.hub_ids[k].shape[0] - 1)
         sel = src_bucket == k
         pad = ((0, 0), (0, W - bx.widths[k]))
+        if quantized:
+            # dequantize in the gather: decode ids against the per-row
+            # bases, rebuild xy from the shared vertex table and widen the
+            # distances — downstream masking/join code is dtype-blind and
+            # identical to the f32 path.  The barrier materializes the
+            # decoded planes once: without it XLA fuses the decode chain
+            # into the O(W*E) visibility loop and re-evaluates the gathers
+            # per edge (~2x wall on wide buckets, same flop count).
+            hub_k = _decode_ids(bx.hub_ids[k][rows], bx.hub_base[k][rows],
+                                HUB_PAD)
+            vid_k = _decode_ids(bx.via_ids[k][rows], bx.vid_base[k][rows],
+                                -1)
+            xy_k = _via_xy_of(vid_k, bx.vert_xy)
+            vd_k = bx.via_d[k][rows].astype(jnp.float32)
+        else:
+            hub_k, xy_k, vd_k, vid_k = (bx.hub_ids[k][rows],
+                                        bx.via_xy[k][rows],
+                                        bx.via_d[k][rows],
+                                        bx.via_ids[k][rows])
         hub = jnp.where(sel[:, None],
-                        jnp.pad(bx.hub_ids[k][rows], pad,
-                                constant_values=HUB_PAD), hub)
+                        jnp.pad(hub_k, pad, constant_values=HUB_PAD), hub)
         xy = jnp.where(sel[:, None, None],
-                       jnp.pad(bx.via_xy[k][rows], pad + ((0, 0),)), xy)
+                       jnp.pad(xy_k, pad + ((0, 0),)), xy)
         vd = jnp.where(sel[:, None],
-                       jnp.pad(bx.via_d[k][rows], pad,
-                               constant_values=np.inf), vd)
+                       jnp.pad(vd_k, pad, constant_values=np.inf), vd)
         vid = jnp.where(sel[:, None],
-                        jnp.pad(bx.via_ids[k][rows], pad,
-                                constant_values=-1), vid)
-    return hub, xy, vd, vid
+                        jnp.pad(vid_k, pad, constant_values=-1), vid)
+    # materialize the merged planes: the select/pad merge chain (and, for
+    # quantized layouts, the decode gathers feeding it) must not fuse into
+    # the O(W*E) visibility fold downstream, which re-evaluates its input
+    # expression per edge (identity op — bitwise answers untouched)
+    return jax.lax.optimization_barrier((hub, xy, vd, vid))
 
 
-@partial(jax.jit, static_argnames=("bucket", "use_kernels", "want_argmin"))
 def query_batch_at_bucket(bx: BucketedIndex, s: jnp.ndarray, t: jnp.ndarray,
                           bucket: int, use_kernels: bool = False,
                           want_argmin: bool = False):
-    """Eq. 1-3 over one dispatch bucket — the per-bucket jit cache entry.
+    """Eq. 1-3 over one dispatch bucket (per-bucket fold + join jit entries).
 
     Every query's endpoint regions must live in buckets <= ``bucket``
     (i.e. ``bucket == max(endpoint buckets)`` after routing); the result is
     then bitwise-identical to the full-width ``query_batch`` because the
     extra slots it would have carried are all inf/HUB_PAD padding.
     """
-    TRACES.bump()
-    s = s.astype(jnp.float32)
-    t = t.astype(jnp.float32)
-    rs = locate_regions(bx, s)
-    rt = locate_regions(bx, t)
-    return _labels_to_distances(
-        _gather_bucketed(bx, rs, bucket), _gather_bucketed(bx, rt, bucket),
-        s, t, _edges_of(bx), use_kernels, want_argmin)
+    s = jnp.asarray(s).astype(jnp.float32)
+    t = jnp.asarray(t).astype(jnp.float32)
+    ms = _fold_endpoint(bx, s, bucket=bucket, use_kernels=use_kernels)
+    mt = _fold_endpoint(bx, t, bucket=bucket, use_kernels=use_kernels)
+    qerr2 = (bx.qerr + bx.qerr
+             if bx.layout.quantized and want_argmin else None)
+    return _join_endpoints(bx, ms, mt, s, t, use_kernels=use_kernels,
+                           want_argmin=want_argmin, qerr2=qerr2)
 
 
 # ---------------------------------------------------------------------------
@@ -743,19 +1205,21 @@ def join_gathered(labels_s, labels_t, s: jnp.ndarray, t: jnp.ndarray,
                   edges_a: jnp.ndarray, edges_b: jnp.ndarray,
                   edges_c: jnp.ndarray | None = None,
                   grid: EdgeGrid | None = None,
-                  use_kernels: bool = False, want_argmin: bool = False):
+                  use_kernels: bool = False, want_argmin: bool = False,
+                  qerr2=None):
     """Eq. 1-3 over pre-gathered label tensors (both sides [B, W]).
 
     Single-device convenience form (one edge set answers both sides).  The
     sharded router uses the split-phase entries below instead, so each
     side's visibility runs on the device whose clipped edge set covers it.
+    ``qerr2``: see :func:`_join_masked` (quantized argmin ambiguity).
     """
     TRACES.bump()
     s = s.astype(jnp.float32)
     t = t.astype(jnp.float32)
     edges = (edges_a, edges_b, edges_b if edges_c is None else edges_c, grid)
     return _labels_to_distances(labels_s, labels_t, s, t, edges,
-                                use_kernels, want_argmin)
+                                use_kernels, want_argmin, qerr2=qerr2)
 
 
 @partial(jax.jit, static_argnames=("width", "use_kernels"))
@@ -801,19 +1265,191 @@ def covis_blocked(s: jnp.ndarray, t: jnp.ndarray, edges_a, edges_b, edges_c,
 @partial(jax.jit, static_argnames=("use_kernels", "want_argmin"))
 def join_masked(masked_s, masked_t, s: jnp.ndarray, t: jnp.ndarray,
                 covis: jnp.ndarray, use_kernels: bool = False,
-                want_argmin: bool = False):
+                want_argmin: bool = False, qerr2=None):
     """Eq. 1-3 join over visibility-masked label triples (both sides [B, W]).
 
     Runs on the s-side device; ``covis`` is the merged co-visibility bit
     from :func:`covis_blocked`.  With identical masked inputs this is
     bitwise-identical to the single-device ``query_batch_at_bucket`` tail —
-    it is the same code.
+    it is the same code.  ``qerr2``: see :func:`_join_masked` (quantized
+    argmin ambiguity; pass the *sum* of the two shards' error bounds).
     """
     TRACES.bump()
     s = s.astype(jnp.float32)
     t = t.astype(jnp.float32)
     return _join_masked(masked_s, masked_t, s, t, covis.astype(bool),
-                        use_kernels, want_argmin)
+                        use_kernels, want_argmin, qerr2=qerr2)
+
+
+# ---------------------------------------------------------------------------
+# quantized layouts: exact-argmin rescue + cross-shard quantized wire
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("width", "use_kernels"))
+def gather_masked_exact(idx, pts: jnp.ndarray, d_exact: jnp.ndarray,
+                        width: int, use_kernels: bool = False):
+    """Rescue gather: quantized slabs with the exact f32 distance rows.
+
+    ``d_exact`` is the [B, width] residual gather
+    (:meth:`ResidualTable.gather_d`) for these points.  Ids and via
+    coordinates decode exactly from the device slabs, so substituting the
+    exact distances makes the returned masked triple *bitwise-identical*
+    to the f32 engine's visibility fold — the rescue join then reproduces
+    the f32 argmin exactly.
+    """
+    TRACES.bump()
+    pts = pts.astype(jnp.float32)
+    regions = locate_regions(idx, pts)
+    if isinstance(idx, PackedIndex):
+        hub, xy, _, vid = _gather_packed(idx, regions)
+    else:
+        bucket = max((k for k, w in enumerate(idx.widths) if w <= width),
+                     default=0)
+        hub, xy, _, vid = _gather_bucketed(idx, regions, bucket, width)
+    return _mask_labels((hub, xy, d_exact.astype(jnp.float32), vid), pts,
+                        _edges_of(idx), use_kernels)
+
+
+def rescue_exact(idx, s, t, width: int, covis, use_kernels: bool = False):
+    """Re-answer a batch with exact distances (host residual -> device).
+
+    Full-batch recomputation (shapes match the quantized run, so traces
+    are reused); the caller splices only the ambiguous rows.  ``covis`` is
+    the quantized run's co-visibility bit — pure geometry, identical in
+    both layouts.  Returns the exact 5-tuple.
+    """
+    res = idx.residual
+    if res is None:
+        raise ValueError("rescue_exact needs a quantized index with its "
+                         "ResidualTable attached")
+    s = np.asarray(s, np.float32)
+    t = np.asarray(t, np.float32)
+    ds = res.gather_d(res.locate(s), width)
+    dt = res.gather_d(res.locate(t), width)
+    ms = gather_masked_exact(idx, jnp.asarray(s), jnp.asarray(ds), width,
+                             use_kernels=use_kernels)
+    mt = gather_masked_exact(idx, jnp.asarray(t), jnp.asarray(dt), width,
+                             use_kernels=use_kernels)
+    return join_masked(ms, mt, jnp.asarray(s), jnp.asarray(t), covis,
+                       use_kernels=use_kernels, want_argmin=True)
+
+
+def splice_rescue(quant6, exact5) -> tuple:
+    """Host splice: overwrite ambiguous rows of the quantized answers with
+    the exact rescue rows.  Returns the engine's plain 5-tuple (numpy)."""
+    d, cv, vs, hb, vt, amb = quant6
+    outs = [np.asarray(a).copy() for a in (d, cv, vs, hb, vt)]
+    m = np.asarray(amb)
+    for o, e in zip(outs, exact5):
+        o[m] = np.asarray(e)[m]
+    return tuple(outs)
+
+
+def wire_dtypes(bx: BucketedIndex) -> tuple:
+    """(id_dtype, dist_dtype) of the cross-shard quantized wire.
+
+    Unified per artifact: if *any* bucket fell back to raw i32 ids (range
+    overflow) the whole wire ships i32; likewise any f32 distance fallback
+    widens the distance plane.  Keeps the wire a single dtype so one trace
+    serves every bucket mix.
+    """
+    id_dt = np.dtype(np.uint16)
+    for arr in (*bx.hub_ids, *bx.via_ids):
+        if np.dtype(arr.dtype) != np.uint16:
+            id_dt = np.dtype(np.int32)
+    dist_dt = np.dtype(bx.layout.dist_dtype)
+    for arr in bx.via_d:
+        if np.dtype(arr.dtype) != dist_dt:
+            dist_dt = np.dtype(np.float32)
+    return id_dt, dist_dt
+
+
+def _gather_quant_plane(slabs, bases, src_bucket, src_row, widths,
+                        bucket: int, W: int, wire_i32: bool, pad_raw,
+                        B: int):
+    """One id plane of the quantized wire gather (hub or via)."""
+    if wire_i32:
+        enc = jnp.full((B, W), jnp.int32(pad_raw), jnp.int32)
+    else:
+        enc = jnp.full((B, W), U16_PAD, jnp.uint16)
+    base = jnp.zeros((B,), jnp.int32)
+    for k in range(bucket + 1):
+        rows = jnp.clip(src_row, 0, slabs[k].shape[0] - 1)
+        sel = src_bucket == k
+        pad = ((0, 0), (0, W - widths[k]))
+        if wire_i32:
+            plane = _decode_ids(slabs[k][rows], bases[k][rows], pad_raw)
+            enc = jnp.where(sel[:, None],
+                            jnp.pad(plane, pad, constant_values=pad_raw),
+                            enc)
+        else:
+            enc = jnp.where(sel[:, None],
+                            jnp.pad(slabs[k][rows], pad,
+                                    constant_values=int(U16_PAD)), enc)
+            base = jnp.where(sel, bases[k][rows], base)
+    return enc, base
+
+
+@partial(jax.jit, static_argnames=("width", "use_kernels"))
+def gather_quant_rows(bx: BucketedIndex, regions: jnp.ndarray,
+                      pts: jnp.ndarray, width: int,
+                      use_kernels: bool = False):
+    """Owner-side half of the quantized cross-shard gather.
+
+    Ships the *encoded* label rows — (hub_enc, hub_base, dq, via_enc,
+    via_base, vis) — instead of the decoded f32 masked triple, cutting the
+    wire from 12 to ~7 bytes per slot.  The visibility fold's verdict is
+    computed here (the owner holds the clipped edge set) but the decode +
+    distance sum happen on the joining device
+    (:func:`dequant_masked_labels`), which reproduces the owner-side fold
+    bit for bit (same expression, same input bits).
+    """
+    TRACES.bump()
+    pts = pts.astype(jnp.float32)
+    bucket = max((k for k, w in enumerate(bx.widths) if w <= width),
+                 default=0)
+    id_dt, dist_dt = wire_dtypes(bx)
+    wire_i32 = id_dt == np.int32
+    src_bucket = bx.region_bucket[regions]
+    src_row = bx.region_row[regions]
+    B = regions.shape[0]
+    henc, hbase = _gather_quant_plane(
+        bx.hub_ids, bx.hub_base, src_bucket, src_row, bx.widths, bucket,
+        width, wire_i32, HUB_PAD, B)
+    venc, vbase = _gather_quant_plane(
+        bx.via_ids, bx.vid_base, src_bucket, src_row, bx.widths, bucket,
+        width, wire_i32, -1, B)
+    dq = jnp.full((B, width), jnp.asarray(np.inf, dist_dt), dist_dt)
+    for k in range(bucket + 1):
+        rows = jnp.clip(src_row, 0, bx.via_d[k].shape[0] - 1)
+        sel = src_bucket == k
+        pad = ((0, 0), (0, width - bx.widths[k]))
+        dq = jnp.where(sel[:, None],
+                       jnp.pad(bx.via_d[k][rows].astype(dist_dt), pad,
+                               constant_values=np.inf), dq)
+    vid = _decode_ids(venc, vbase, -1)
+    xy = _via_xy_of(vid, bx.vert_xy)
+    vis = _segvis(jnp.repeat(pts, width, axis=0), xy.reshape(-1, 2),
+                  _edges_of(bx), use_kernels).reshape(B, width)
+    return henc, hbase, dq, venc, vbase, vis
+
+
+@jax.jit
+def dequant_masked_labels(henc, hbase, dq, venc, vbase, vis,
+                          pts: jnp.ndarray, vert_xy: jnp.ndarray):
+    """Joining-device half: decode shipped quantized rows into the masked
+    triple — the same ``where(vis, norm + d, inf)`` expression as the
+    owner-side fold, so the result is bitwise-identical to having shipped
+    the decoded rows."""
+    TRACES.bump()
+    pts = pts.astype(jnp.float32)
+    hub = _decode_ids(henc, hbase, HUB_PAD)
+    vid = _decode_ids(venc, vbase, -1)
+    xy = _via_xy_of(vid, vert_xy)
+    vd = jnp.where(vis, jnp.linalg.norm(pts[:, None] - xy, axis=-1)
+                   + dq.astype(jnp.float32), jnp.float32(jnp.inf))
+    # materialize before the O(L^2) join fusion (see _gather_bucketed)
+    return jax.lax.optimization_barrier((hub, vd, vid))
 
 
 def _region_clip_boxes(index: EHLIndex, live: list, packs: list,
@@ -868,7 +1504,8 @@ def _shard_edge_mask(index: EHLIndex, clip_boxes: np.ndarray,
 def pack_bucketed_split(index: EHLIndex, region_shard: np.ndarray,
                         num_shards: int | None = None, lane: int = 128,
                         reuse_edges_from=None, reuse_edge_masks=None,
-                        edge_grid: bool | None = None):
+                        edge_grid: bool | None = None,
+                        layout: SlabLayout = LAYOUT_F32):
     """Freeze a host index into per-shard width-bucketed slabs.
 
     The shard-aware sibling of :func:`pack_bucketed`: ``region_shard`` maps
@@ -976,18 +1613,43 @@ def pack_bucketed_split(index: EHLIndex, region_shard: np.ndarray,
         # full-grid mapper: owned cells -> local id, foreign cells -> 0
         mapper_k = np.where(region_shard[cell_region] == k,
                             region_local[cell_region], 0).astype(np.int32)
-        shards.append(BucketedIndex(
-            hub_ids=tuple(jnp.asarray(a[0]) for a in slabs),
-            via_xy=tuple(jnp.asarray(a[1]) for a in slabs),
-            via_d=tuple(jnp.asarray(a[2]) for a in slabs),
-            via_ids=tuple(jnp.asarray(a[3]) for a in slabs),
-            mapper=jnp.asarray(mapper_k),
-            region_bucket=jnp.asarray(lbucket),
-            region_row=jnp.asarray(lrow),
-            edges_a=ea, edges_b=eb, edges_c=ec, grid=grid,
-            nx=index.nx, ny=index.ny, cell_size=float(index.cell_size),
-            width=float(index.scene.width), height=float(index.scene.height),
-            widths=tuple(widths_k)))
+        if layout.quantized:
+            quant = [_quantize_slab(a, layout) for a in slabs]
+            residual = ResidualTable(
+                [a[2] for a in slabs], lbucket, lrow, mapper_k,
+                widths_k, index.nx, index.ny, float(index.cell_size))
+            shards.append(BucketedIndex(
+                hub_ids=tuple(jnp.asarray(q[0]) for q in quant),
+                via_xy=(),
+                via_d=tuple(jnp.asarray(q[1]) for q in quant),
+                via_ids=tuple(jnp.asarray(q[2]) for q in quant),
+                mapper=jnp.asarray(mapper_k),
+                region_bucket=jnp.asarray(lbucket),
+                region_row=jnp.asarray(lrow),
+                edges_a=ea, edges_b=eb, edges_c=ec, grid=grid,
+                nx=index.nx, ny=index.ny, cell_size=float(index.cell_size),
+                width=float(index.scene.width),
+                height=float(index.scene.height),
+                widths=tuple(widths_k),
+                vert_xy=_vert_table(index),
+                hub_base=tuple(jnp.asarray(q[3]) for q in quant),
+                vid_base=tuple(jnp.asarray(q[4]) for q in quant),
+                qerr=jnp.float32(max((q[5] for q in quant), default=0.0)),
+                layout=layout, residual=residual))
+        else:
+            shards.append(BucketedIndex(
+                hub_ids=tuple(jnp.asarray(a[0]) for a in slabs),
+                via_xy=tuple(jnp.asarray(a[1]) for a in slabs),
+                via_d=tuple(jnp.asarray(a[2]) for a in slabs),
+                via_ids=tuple(jnp.asarray(a[3]) for a in slabs),
+                mapper=jnp.asarray(mapper_k),
+                region_bucket=jnp.asarray(lbucket),
+                region_row=jnp.asarray(lrow),
+                edges_a=ea, edges_b=eb, edges_c=ec, grid=grid,
+                nx=index.nx, ny=index.ny, cell_size=float(index.cell_size),
+                width=float(index.scene.width),
+                height=float(index.scene.height),
+                widths=tuple(widths_k)))
 
     route = dict(
         region_shard=region_shard,
@@ -1031,6 +1693,14 @@ def query_batch_bucketed(bx: BucketedIndex, s, t,
         res = query_batch_at_bucket(bx, jnp.asarray(s[m]), jnp.asarray(t[m]),
                                     bucket=int(k), use_kernels=use_kernels,
                                     want_argmin=want_argmin)
+        if want_argmin and bx.layout.quantized:
+            # 6-tuple: rescue ambiguous-margin rows against the residual
+            if bool(np.asarray(res[5]).any()):
+                exact = rescue_exact(bx, s[m], t[m], bx.widths[int(k)],
+                                     res[1], use_kernels=use_kernels)
+                res = splice_rescue(res, exact)
+            else:
+                res = res[:5]
         for o, r in zip(outs, res if want_argmin else (res,)):
             o[m] = np.asarray(r)
     return tuple(outs) if want_argmin else outs[0]

@@ -100,12 +100,13 @@ class IndexManager:
                  exit_threshold: float | None = None, min_dwell: int = 2,
                  halflife: float = 4000.0, warm_argmin: bool = False,
                  num_shards: int = 0, mesh=None, shard_tol: float = 1.15,
-                 seed: int = 0):
+                 seed: int = 0, layout=None):
         if backend not in ("jnp", "pallas"):
             raise ValueError("IndexManager serves packed artifacts; "
                              f"backend must be jnp|pallas, got {backend!r}")
         from repro.core.compression import compress_to_device_budget
-        from repro.core.packed import bucketed_device_bytes
+        from repro.core.packed import (LAYOUT_F32, bucketed_device_bytes,
+                                       slab_layout)
 
         self.host_index = index
         self._base = index.snapshot_regions()
@@ -114,6 +115,13 @@ class IndexManager:
         self.batch_size = batch_size
         self.validate_tol = float(validate_tol)
         self.warm_argmin = warm_argmin
+        # slab layout ("f32" | "bf16" | "f16" | SlabLayout): quantized
+        # layouts shrink the per-slot cost, so the same device budget admits
+        # a finer region partition — every candidate of this manager's
+        # lifetime packs (and is budget-measured) under this layout
+        if isinstance(layout, str):
+            layout = slab_layout(layout)
+        self.layout = layout if layout is not None else LAYOUT_F32
         # sharded serving (repro.sharding): the budget stays a *total*
         # device-byte budget; each shard replicates the mapper + edge
         # tensors, so the compressible slab budget shrinks by that overhead
@@ -126,8 +134,10 @@ class IndexManager:
         if self.num_shards > 1:
             from repro.sharding import ShardPlanner, sharded_overhead_bytes
             self._shard_planner = ShardPlanner(self.num_shards, lane=lane,
-                                               tol=shard_tol)
-            overhead = sharded_overhead_bytes(index, self.num_shards, lane)
+                                               tol=shard_tol,
+                                               layout=self.layout)
+            overhead = sharded_overhead_bytes(index, self.num_shards, lane,
+                                              layout=self.layout)
             if overhead >= device_budget_bytes:
                 raise ValueError(
                     f"device budget {device_budget_bytes}B is infeasible "
@@ -140,10 +150,13 @@ class IndexManager:
                                      min_queries=min_queries,
                                      replan_threshold=replan_threshold,
                                      exit_threshold=exit_threshold,
-                                     min_dwell=min_dwell, lane=lane)
+                                     min_dwell=min_dwell, lane=lane,
+                                     layout=self.layout)
         # initial fit: uniform scores (no traffic observed yet)
-        if bucketed_device_bytes(index, lane) > slab_budget:
-            compress_to_device_budget(index, slab_budget, lane=lane)
+        if bucketed_device_bytes(index, lane,
+                                 layout=self.layout) > slab_budget:
+            compress_to_device_budget(index, slab_budget, lane=lane,
+                                      layout=self.layout)
         art0 = self._pack()
         if art0.device_bytes() > device_budget_bytes:
             raise ValueError(
@@ -201,7 +214,14 @@ class IndexManager:
             return self._shard_planner.build(self.host_index,
                                              reuse_edges_from=reuse_from)
         return pack_bucketed(self.host_index, lane=self.lane,
-                             reuse_edges_from=reuse_from)
+                             reuse_edges_from=reuse_from, layout=self.layout)
+
+    @staticmethod
+    def _qerr_of(artifact) -> float:
+        """Worst-case per-label quantization error of a packed artifact."""
+        shards = getattr(artifact, "shards", None) or (artifact,)
+        return max((float(np.asarray(bx.qerr)) if bx.qerr is not None
+                    else 0.0) for bx in shards)
 
     def _make_engine(self, artifact):
         if self._shard_planner is not None:
@@ -273,9 +293,17 @@ class IndexManager:
             # propagate into max_err and abort, not be skipped over
             err = np.abs(np.where(both_inf, 0.0, d_cand - d_live))
             max_err = float(np.max(err)) if err.size else 0.0
-            ok = bool(np.isfinite(max_err)) and max_err <= self.validate_tol
+            # quantized layouts: each generation's reported distance sits
+            # within 2*qerr of the exact answer (one bound per endpoint
+            # side), so two exact-equal generations may still disagree by
+            # the sum of their bounds — widen the tolerance accordingly
+            tol = self.validate_tol
+            if self.layout.quantized:
+                tol += 2.0 * (self._qerr_of(self.engine.artifact)
+                              + self._qerr_of(bx))
+            ok = bool(np.isfinite(max_err)) and max_err <= tol
             abort = "" if ok else (f"probe mismatch {max_err:.3e} > "
-                                   f"{self.validate_tol:.1e}")
+                                   f"{tol:.1e}")
             # the documented guarantee: no over-budget candidate goes live
             budget = self.device_budget_bytes()
             if ok and bx.device_bytes() > budget:

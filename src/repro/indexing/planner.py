@@ -60,8 +60,11 @@ class BudgetPlanner:
     def __init__(self, device_budget_bytes: int, alpha: float = 0.2,
                  min_queries: int = 256, replan_threshold: float = 0.15,
                  exit_threshold: float | None = None, min_dwell: int = 2,
-                 lane: int = 128):
+                 lane: int = 128, layout=None):
+        from repro.core.packed import LAYOUT_F32
+
         self.device_budget_bytes = int(device_budget_bytes)
+        self.layout = layout if layout is not None else LAYOUT_F32
         self.alpha = float(alpha)
         self.min_queries = int(min_queries)
         self.replan_threshold = float(replan_threshold)
@@ -91,7 +94,7 @@ class BudgetPlanner:
     def decide(self, recorder, index) -> PlanDecision:
         from repro.core.packed import bucketed_device_bytes
 
-        dev = bucketed_device_bytes(index, self.lane)
+        dev = bucketed_device_bytes(index, self.lane, layout=self.layout)
         fresh = recorder.queries - self._planned_at_queries
         if fresh < self.min_queries:
             if dev > self.device_budget_bytes:
@@ -154,11 +157,11 @@ class BudgetPlanner:
             index.restore_regions(base_snapshot)
             stats = compress_to_device_budget(
                 index, self.device_budget_bytes, cell_scores=scores,
-                alpha=self.alpha, lane=self.lane)
+                alpha=self.alpha, lane=self.lane, layout=self.layout)
         elif decision.kind == "incremental":
             stats = compress_to_device_budget(
                 index, self.device_budget_bytes, cell_scores=scores,
-                alpha=self.alpha, lane=self.lane)
+                alpha=self.alpha, lane=self.lane, layout=self.layout)
         else:
             raise ValueError(f"nothing to execute for {decision.kind!r}")
         self._pending = (recorder.distribution(), recorder.queries)

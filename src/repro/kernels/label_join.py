@@ -59,6 +59,8 @@ def label_join_rowmin(hub_s: jnp.ndarray, vd_s: jnp.ndarray,
 
     Pad rows use hub id HUB_PAD on the s side only — HUB_PAD == HUB_PAD
     matches pad-to-pad, but vd is +inf there so the min is unaffected.
+    Quantized (bf16/f16) ``vd`` inputs are widened in-register; the kernel
+    body always accumulates the distance sum in f32 (DESIGN.md §11).
     """
     B, L = hub_s.shape
     b_pad = (-B) % b_blk

@@ -128,8 +128,13 @@ def label_join_rowmin_ref(hub_s: jnp.ndarray, vd_s: jnp.ndarray,
 
     The dense-TPU form of the paper's sorted merge-join (Eq. 3): hub match is
     an L x L equality mask instead of a two-pointer scan.
+
+    Accepts quantized (bf16/f16) ``vd`` inputs: they are widened in-register
+    and the distance sum always accumulates in f32 (DESIGN.md §11).
     """
     inf = jnp.float32(jnp.inf)
+    vd_s = vd_s.astype(jnp.float32)
+    vd_t = vd_t.astype(jnp.float32)
     eq = hub_s[:, :, None] == hub_t[:, None, :]           # [B,L,L]
     matchmin = jnp.min(jnp.where(eq, vd_t[:, None, :], inf), axis=-1)
     return vd_s + matchmin
@@ -148,6 +153,8 @@ def label_join_hubdense_ref(hub_s, vd_s, hub_t, vd_t, num_hubs: int
     a min-reduction collective).  Pads (hub id >= num_hubs) are dropped.
     """
     inf = jnp.float32(jnp.inf)
+    vd_s = vd_s.astype(jnp.float32)
+    vd_t = vd_t.astype(jnp.float32)
     B, L = hub_s.shape
     safe_s = jnp.clip(hub_s, 0, num_hubs - 1)
     safe_t = jnp.clip(hub_t, 0, num_hubs - 1)

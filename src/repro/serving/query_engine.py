@@ -29,9 +29,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.grid import EHLIndex
-from repro.core.packed import (BucketedIndex, PackedIndex, pack_bucketed,
-                               query_batch, query_batch_argmin,
-                               query_batch_at_bucket, dispatch_buckets)
+from repro.core.packed import (BucketedIndex, LAYOUT_F32, PackedIndex,
+                               gather_masked_exact, join_masked,
+                               pack_bucketed, query_batch,
+                               query_batch_argmin, query_batch_at_bucket,
+                               rescue_exact, splice_rescue, dispatch_buckets)
 from repro.core.query import query as host_query
 
 
@@ -126,12 +128,13 @@ class DeviceEngine(QueryEngine):
     use_kernels = False
     static_shapes = True    # jitted: pad batches so shapes never recompile
 
-    def __init__(self, index):
+    def __init__(self, index, layout=LAYOUT_F32):
         if isinstance(index, EHLIndex):
-            index = pack_bucketed(index)
+            index = pack_bucketed(index, layout=layout)
         if not isinstance(index, (PackedIndex, BucketedIndex)):
             raise TypeError(f"unsupported index artifact: {type(index)!r}")
         self.index = index
+        self.quantized = index.layout.quantized
         self.bucketed = isinstance(index, BucketedIndex)
         if self.bucketed:
             # host-side routing table mirrors (see buckets_of): admission-
@@ -178,7 +181,17 @@ class DeviceEngine(QueryEngine):
         return self._run(s, t, bucket, want_argmin=False)
 
     def batch_argmin(self, s, t, bucket: int = 0):
-        return self._run(s, t, bucket, want_argmin=True)
+        res = self._run(s, t, bucket, want_argmin=True)
+        if not self.quantized:
+            return res
+        # quantized: 6-tuple — rescue ambiguous-margin rows against the
+        # exact residual so argmin winners match the f32 engine bitwise
+        if bool(np.asarray(res[5]).any()):
+            exact = rescue_exact(self.index, s, t,
+                                 self.bucket_width(bucket), res[1],
+                                 use_kernels=self.use_kernels)
+            return splice_rescue(res, exact)
+        return tuple(np.asarray(r) for r in res[:5])
 
     def stage(self, s, t, bucket: int = 0):
         """Start the host->device copies for a batch (jax transfers are
@@ -198,6 +211,16 @@ class DeviceEngine(QueryEngine):
             self._run(z, z, b, want_argmin=False).block_until_ready()
             if want_argmin:
                 jax.block_until_ready(self._run(z, z, b, want_argmin=True))
+                if self.quantized:
+                    # the rescue path's entries (exact gather + plain
+                    # argmin join) are their own jit cache entries
+                    W = self.bucket_width(b)
+                    d0 = jnp.full((batch_size, W), jnp.inf, jnp.float32)
+                    ms = gather_masked_exact(self.index, z, d0, W,
+                                             use_kernels=self.use_kernels)
+                    jax.block_until_ready(join_masked(
+                        ms, ms, z, z, jnp.zeros(batch_size, bool),
+                        use_kernels=self.use_kernels, want_argmin=True))
 
     def device_bytes(self) -> int:
         return self.index.device_bytes()
@@ -213,16 +236,18 @@ class PallasEngine(DeviceEngine):
     use_kernels = True
 
 
-def make_engine(index, backend: str = "jnp") -> QueryEngine:
+def make_engine(index, backend: str = "jnp",
+                layout=LAYOUT_F32) -> QueryEngine:
     """Engine factory.  ``index``: EHLIndex (host backend, or auto-packed
-    bucketed for device backends), PackedIndex, or BucketedIndex."""
+    bucketed for device backends), PackedIndex, or BucketedIndex.
+    ``layout`` picks the slab dtypes when auto-packing (DESIGN.md §11)."""
     if backend == "host":
         if not isinstance(index, EHLIndex):
             raise TypeError("host backend needs the host-side EHLIndex")
         return HostEngine(index)
     if backend == "jnp":
-        return JnpEngine(index)
+        return JnpEngine(index, layout=layout)
     if backend == "pallas":
-        return PallasEngine(index)
+        return PallasEngine(index, layout=layout)
     raise ValueError(f"unknown backend {backend!r} "
                      "(expected host | jnp | pallas)")

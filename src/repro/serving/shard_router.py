@@ -42,7 +42,9 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.packed import covis_blocked, gather_masked_labels, join_masked
+from repro.core.packed import (covis_blocked, dequant_masked_labels,
+                               gather_masked_exact, gather_masked_labels,
+                               gather_quant_rows, join_masked)
 from repro.launch.mesh import shard_devices
 
 
@@ -79,8 +81,19 @@ class ShardRouter:
         # transfers.  Leaves already committed to the right device (the
         # hot-swap path aliases the previous router's placed edge tensors)
         # pass through without a copy.
-        self.shards = [jax.device_put(bx, dev)
-                       for bx, dev in zip(sharded.shards, self.devices)]
+        self.shards = []
+        for bx, dev in zip(sharded.shards, self.devices):
+            placed = jax.device_put(bx, dev)
+            # the ResidualTable is host-side state excluded from the pytree,
+            # so device_put drops it — re-attach for the argmin rescue
+            placed.residual = bx.residual
+            self.shards.append(placed)
+        self.quantized = bool(self.shards
+                              and self.shards[0].layout.quantized)
+        # per-shard quantization error bounds, host floats: join_staged sums
+        # the two sides' bounds into the argmin ambiguity threshold
+        self._qerr = [float(np.asarray(bx.qerr)) if bx.qerr is not None
+                      else 0.0 for bx in sharded.shards]
         self.width_classes = np.asarray(sharded.width_classes, np.int64)
         self._nw = len(self.width_classes)
         # per-shard clip bound: foreign/padding cells can carry local ids
@@ -209,12 +222,23 @@ class ShardRouter:
         masked_s = gather_masked_labels(
             self.shards[i], self._locals(cs, i), s_at(i), W,
             use_kernels=self.use_kernels)
-        masked_t = gather_masked_labels(
-            self.shards[j], self._locals(ct, j), t_at(j), W,
-            use_kernels=self.use_kernels)
-        if i != j:
-            # ship the masked [B, W] label triple, not the slabs
-            masked_t = jax.device_put(masked_t, dev)
+        if i != j and self.quantized:
+            # quantized wire: ship the *encoded* t-side rows (u16 ids +
+            # narrow distances + vis bits, ~7 B/slot vs 12) and decode on
+            # the home device — same fold expression, bitwise-identical
+            wire = gather_quant_rows(
+                self.shards[j], self._locals(ct, j), t_at(j), W,
+                use_kernels=self.use_kernels)
+            wire = jax.device_put(wire, dev)
+            masked_t = dequant_masked_labels(*wire, t_at(i),
+                                             self.shards[i].vert_xy)
+        else:
+            masked_t = gather_masked_labels(
+                self.shards[j], self._locals(ct, j), t_at(j), W,
+                use_kernels=self.use_kernels)
+            if i != j:
+                # ship the masked [B, W] label triple, not the slabs
+                masked_t = jax.device_put(masked_t, dev)
         parts = self.covis_shards(s, t) or [i]
         covis = self._covis(s_at, t_at, parts, i)
         return StagedGroup(key=int(key), i=i, j=j, parts=parts,
@@ -225,10 +249,38 @@ class ShardRouter:
         """Run the Eq. 1-3 join for a staged group on its home device.
 
         Returns un-synchronized device arrays — the caller owns
-        ``block_until_ready``."""
+        ``block_until_ready``.  Quantized artifacts with ``want_argmin``
+        return the 6-tuple with the ambiguity bits; the engine rescues
+        flagged rows via :meth:`rescue`."""
+        qerr2 = None
+        if want_argmin and self.quantized:
+            qerr2 = np.float32(self._qerr[st.i] + self._qerr[st.j])
         return join_masked(
             st.masked_s, st.masked_t, st.s_dev, st.t_dev, st.covis,
-            use_kernels=self.use_kernels, want_argmin=want_argmin)
+            use_kernels=self.use_kernels, want_argmin=want_argmin,
+            qerr2=qerr2)
+
+    def rescue(self, st: StagedGroup):
+        """Exact-argmin rescue of one staged group (full batch, spliced by
+        the caller): re-gather both sides with the exact residual distance
+        rows, re-join on the home device without quantization error — the
+        result matches the f32 sharded engine bitwise."""
+        i, j, W = self.decode_key(st.key)
+        s = np.asarray(st.s_dev, np.float32)
+        t = np.asarray(st.t_dev, np.float32)
+        ri = self.sharded.shards[i].residual
+        rj = self.sharded.shards[j].residual
+        ds = jax.device_put(ri.gather_d(ri.locate(s), W), self.devices[i])
+        dt = jax.device_put(rj.gather_d(rj.locate(t), W), self.devices[j])
+        ms = gather_masked_exact(self.shards[i], st.s_dev, ds, W,
+                                 use_kernels=self.use_kernels)
+        mt = gather_masked_exact(
+            self.shards[j], jax.device_put(t, self.devices[j]), dt, W,
+            use_kernels=self.use_kernels)
+        if i != j:
+            mt = jax.device_put(mt, self.devices[i])
+        return join_masked(ms, mt, st.s_dev, st.t_dev, st.covis,
+                           use_kernels=self.use_kernels, want_argmin=True)
 
     def dispatch(self, s, t, key: int, want_argmin: bool = False):
         """Answer one routed sub-batch on its destination shard's device.
@@ -265,7 +317,27 @@ class ShardRouter:
                 jax.block_until_ready(join_masked(
                     masked, masked, zd, zd, cz,
                     use_kernels=self.use_kernels, want_argmin=False))
+                if self.quantized:
+                    # cross-shard quantized wire: owner-side encoded gather
+                    # + home-side decode (same shapes/dtypes any home uses)
+                    wire = gather_quant_rows(bx, zrd, zd, W,
+                                             use_kernels=self.use_kernels)
+                    jax.block_until_ready(dequant_masked_labels(
+                        *wire, zd, bx.vert_xy))
                 if want_argmin:
                     jax.block_until_ready(join_masked(
                         masked, masked, zd, zd, cz,
                         use_kernels=self.use_kernels, want_argmin=True))
+                    if self.quantized:
+                        # staged-path join with the ambiguity bits, plus
+                        # the rescue's exact gather + plain argmin join
+                        jax.block_until_ready(join_masked(
+                            masked, masked, zd, zd, cz,
+                            use_kernels=self.use_kernels, want_argmin=True,
+                            qerr2=np.float32(0.0)))
+                        d0 = jax.device_put(
+                            np.full((batch_size, W), np.inf, np.float32),
+                            dev)
+                        me = gather_masked_exact(
+                            bx, zd, d0, W, use_kernels=self.use_kernels)
+                        jax.block_until_ready(me)

@@ -24,6 +24,7 @@ import numpy as np
 import jax
 
 from repro.core.grid import EHLIndex
+from repro.core.packed import LAYOUT_F32, splice_rescue
 from repro.serving.query_engine import QueryEngine
 from repro.serving.shard_router import ShardRouter
 
@@ -77,12 +78,14 @@ class ShardedQueryEngine(QueryEngine):
 
     def __init__(self, index, num_shards: int | None = None, mesh=None,
                  use_kernels: bool = False, lane: int = 128,
-                 tol: float = 1.15, reuse_edges_from=None):
+                 tol: float = 1.15, reuse_edges_from=None,
+                 layout=LAYOUT_F32):
         if isinstance(index, EHLIndex):
             if not num_shards or num_shards < 1:
                 raise ValueError("building from a host index needs "
                                  "num_shards >= 1")
-            planner = ShardPlanner(num_shards, lane=lane, tol=tol)
+            planner = ShardPlanner(num_shards, lane=lane, tol=tol,
+                                   layout=layout)
             index = planner.build(index, reuse_edges_from=reuse_edges_from)
         if not isinstance(index, ShardedIndex):
             raise TypeError(f"unsupported artifact: {type(index)!r}")
@@ -123,12 +126,22 @@ class ShardedQueryEngine(QueryEngine):
             if k != staged.i:
                 self._stats[k].covis_assists += n
 
+    def _finish_argmin(self, staged, res6) -> tuple:
+        """Quantized argmin epilogue: rescue ambiguous-margin rows against
+        the exact residual so winners match the f32 sharded engine bitwise.
+        """
+        if bool(np.asarray(res6[5]).any()):
+            return splice_rescue(res6, self.router.rescue(staged))
+        return tuple(np.asarray(r) for r in res6[:5])
+
     def _run(self, s, t, key: int, want_argmin: bool):
         t0 = time.perf_counter()
         staged = self.router.stage(np.asarray(s, np.float32),
                                    np.asarray(t, np.float32), int(key))
         res = self.router.join_staged(staged, want_argmin=want_argmin)
         jax.block_until_ready(res)
+        if want_argmin and self.router.quantized:
+            res = self._finish_argmin(staged, res)
         self._stats[staged.i].seconds += time.perf_counter() - t0
         self._note_dispatch(staged, len(s))
         return res
@@ -152,6 +165,11 @@ class ShardedQueryEngine(QueryEngine):
         """Non-blocking join over a staged group; the batcher owns
         synchronization (per-shard seconds land via note_batch_seconds)."""
         res = self.router.join_staged(staged, want_argmin=want_argmin)
+        if want_argmin and self.router.quantized:
+            # The amb verdict must be inspected host-side before results can
+            # be scattered, so quantized argmin groups synchronize here; the
+            # distance-only path stays fully asynchronous.
+            res = self._finish_argmin(staged, res)
         self._note_dispatch(staged, int(staged.s_dev.shape[0]))
         return tuple(res) if want_argmin else (res,)
 

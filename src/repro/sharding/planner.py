@@ -27,10 +27,9 @@ import dataclasses
 import numpy as np
 
 from repro.core.grid import EHLIndex
-from repro.core.packed import (_grid_bytes, bucket_width,
+from repro.core.packed import (LAYOUT_F32, SlabLayout, _grid_bytes,
+                               bucket_width, dtype_bytes,
                                pack_bucketed_split, padded_edge_count)
-
-PER_SLOT = 4 + 8 + 4 + 4        # hub_ids + via_xy + via_d + via_ids bytes
 
 
 def _morton(ix: np.ndarray, iy: np.ndarray, bits: int = 16) -> np.ndarray:
@@ -138,7 +137,8 @@ class ShardedIndex:
 
 
 def sharded_overhead_bytes(index: EHLIndex, num_shards: int,
-                           lane: int = 128) -> int:
+                           lane: int = 128,
+                           layout: SlabLayout = LAYOUT_F32) -> int:
     """Upper bound on extra device bytes sharding adds vs single-device.
 
     Each shard replicates the full-grid mapper; edge tensors are *clipped*
@@ -154,8 +154,11 @@ def sharded_overhead_bytes(index: EHLIndex, num_shards: int,
         return 0
     Ep = padded_edge_count(index.scene.edges.shape[0], lane)
     # edge_grid=True: a clipped subset may attach a grid even when the full
-    # edge set's auto policy stays dense, so bound with the forced grid
+    # edge set's auto policy stays dense, so bound with the forced grid.
+    # Quantized layouts also replicate the shared [V, 2] vertex table
+    # (dtype_bytes.per_vertex) on every shard.
     per_shard_fixed = (index.mapper.size * 4 + 3 * Ep * 2 * 4
+                       + index.graph.num_nodes * dtype_bytes(layout).per_vertex
                        + _grid_bytes(index, lane, True))
     return (num_shards - 1) * per_shard_fixed
 
@@ -164,13 +167,15 @@ class ShardPlanner:
     """Plan and build region-sharded artifacts over ``num_shards`` devices."""
 
     def __init__(self, num_shards: int, lane: int = 128, tol: float = 1.15,
-                 max_moves: int | None = None):
+                 max_moves: int | None = None,
+                 layout: SlabLayout = LAYOUT_F32):
         if num_shards < 1:
             raise ValueError("num_shards must be >= 1")
         self.num_shards = int(num_shards)
         self.lane = int(lane)
         self.tol = float(tol)
         self.max_moves = max_moves
+        self.layout = layout
 
     # ------------------------------------------------------------------ plan
     def plan(self, index: EHLIndex) -> ShardPlan:
@@ -180,8 +185,9 @@ class ShardPlanner:
         if R < S:
             raise ValueError(f"{R} regions cannot fill {S} shards — "
                              "compress less or use fewer shards")
-        rb = np.array([bucket_width(max(1, int(c)), self.lane) * PER_SLOT
-                       for c in counts], dtype=np.int64)
+        lb = dtype_bytes(self.layout)
+        rb = np.array([bucket_width(max(1, int(c)), self.lane) * lb.per_slot
+                       + lb.per_row for c in counts], dtype=np.int64)
         cent = region_centroids(index)
         order = np.argsort(
             _morton(cent[:, 0].astype(np.int64), cent[:, 1].astype(np.int64)),
@@ -252,7 +258,7 @@ class ShardPlanner:
         shards, route = pack_bucketed_split(
             index, plan.assignment, plan.num_shards, lane=self.lane,
             reuse_edges_from=reuse_edges_from, reuse_edge_masks=reuse_masks,
-            edge_grid=edge_grid)
+            edge_grid=edge_grid, layout=self.layout)
         classes = sorted({w for bx in shards for w in bx.widths})
         return ShardedIndex(
             shards=tuple(shards), plan=plan,

@@ -44,3 +44,120 @@ def fresh_ehl(scene_s, graph_s, hl_s):
     """Mutable copy-equivalent index for compression tests."""
     from repro.core.grid import build_ehl
     return build_ehl(scene_s, cell_size=2.0, graph=graph_s, hl=hl_s)
+
+
+@pytest.fixture(scope="session")
+def compressed_s(scene_s, graph_s, hl_s, queries_s):
+    """Budget-compressed index + exact host-f64 truth on ``queries_s``.
+
+    Session-scoped and treated as read-only by every consumer (packers
+    never mutate the region set)."""
+    from repro.core.compression import compress_to_fraction
+    from repro.core.grid import build_ehl
+    from repro.core.query import query
+
+    idx = build_ehl(scene_s, cell_size=2.0, graph=graph_s, hl=hl_s)
+    truth = np.array([query(idx, s, t, want_path=False)[0]
+                      for s, t in zip(queries_s.s, queries_s.t)])
+    compress_to_fraction(idx, 0.2)
+    return idx, truth
+
+
+class ConformanceHarness:
+    """One query set answered by every (backend, slab layout) combination.
+
+    The case table every engine identity test runs on: ``run(backend,
+    layout)`` returns the full argmin tuple as numpy arrays (or a 1-tuple
+    of distances for the argmin-less host oracle), with artifacts and
+    engines cached per combination.  ``baseline`` is the jnp-jit f32
+    bucketed engine — the layout every other backend is measured against;
+    ``truth`` anchors the baseline itself to the exact float64 oracle.
+    """
+
+    BACKENDS = ("host", "jnp", "jnp-jit", "pallas", "grid", "slab",
+                "sharded")
+    LAYOUTS = ("f32", "bf16")
+
+    def __init__(self, idx, truth, queries):
+        self.idx = idx
+        self.truth = truth
+        self.s = queries.s.astype(np.float32)
+        self.t = queries.t.astype(np.float32)
+        self._cache: dict = {}
+
+    def _layout(self, name: str):
+        from repro.core.packed import slab_layout
+        return slab_layout(name)
+
+    def bucketed(self, layout: str, edge_grid=None):
+        from repro.core.packed import pack_bucketed
+        key = ("bx", layout, edge_grid)
+        if key not in self._cache:
+            self._cache[key] = pack_bucketed(
+                self.idx, layout=self._layout(layout), edge_grid=edge_grid)
+        return self._cache[key]
+
+    def qerr(self, layout: str) -> float:
+        bx = self.bucketed(layout)
+        return float(np.asarray(bx.qerr)) if bx.qerr is not None else 0.0
+
+    def _sharded(self, layout: str):
+        from repro.sharding import ShardPlanner, ShardedQueryEngine
+        key = ("sharded", layout)
+        if key not in self._cache:
+            art = ShardPlanner(2, layout=self._layout(layout)).build(self.idx)
+            self._cache[key] = ShardedQueryEngine(art)
+        return self._cache[key]
+
+    def _slab_engine(self, layout: str):
+        from repro.core.packed import pack_index
+        from repro.serving.query_engine import JnpEngine
+        key = ("slab", layout)
+        if key not in self._cache:
+            pk = pack_index(self.idx, layout=self._layout(layout))
+            self._cache[key] = JnpEngine(pk)
+        return self._cache[key]
+
+    @property
+    def baseline(self) -> tuple:
+        return self.run("jnp-jit", "f32")
+
+    def run(self, backend: str, layout: str) -> tuple:
+        """(d, covis, via_s, hub, via_t) numpy tuple — (d,) for host."""
+        import jax
+        from repro.core.packed import query_batch_bucketed
+        from repro.core.query import query as host_query
+
+        key = ("run", backend, layout)
+        if key in self._cache:
+            return self._cache[key]
+        if backend == "host":
+            res = (np.array([host_query(self.idx, si, ti,
+                                        want_path=False)[0]
+                             for si, ti in zip(self.s, self.t)],
+                            dtype=np.float32),)
+        elif backend == "sharded":
+            res = self._sharded(layout).query(self.s, self.t,
+                                              want_argmin=True)
+        elif backend == "slab":
+            eng = self._slab_engine(layout)
+            res = eng.batch_argmin(self.s, self.t)
+        else:
+            bx = self.bucketed(layout,
+                               edge_grid=True if backend == "grid" else None)
+            kw = dict(want_argmin=True,
+                      use_kernels=backend == "pallas")
+            if backend == "jnp":
+                with jax.disable_jit():
+                    res = query_batch_bucketed(bx, self.s, self.t, **kw)
+            else:
+                res = query_batch_bucketed(bx, self.s, self.t, **kw)
+        res = tuple(np.asarray(r) for r in res)
+        self._cache[key] = res
+        return res
+
+
+@pytest.fixture(scope="session")
+def conformance(compressed_s, queries_s):
+    idx, truth = compressed_s
+    return ConformanceHarness(idx, truth, queries_s)

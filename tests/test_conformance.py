@@ -1,0 +1,89 @@
+"""Engine-identity conformance table (ISSUE-7 satellite).
+
+Every backend x slab-layout combination answers the same query set; the
+jnp-jit f32 bucketed engine is the reference.  f32 backends must match it
+bitwise; quantized (bf16) backends must keep distances inside the
+documented ``2 * qerr`` bound while covis verdicts and via/hub argmin
+winners stay bitwise-identical (the residual-rescue guarantee).  A
+separate test anchors the reference itself against the exact float64 host
+oracle, so bitwise agreement is agreement with a *correct* answer.
+"""
+
+import numpy as np
+import pytest
+
+from conftest import ConformanceHarness
+
+# (backend, layout) case table; host is f64 + argmin-less so only the f32
+# distance column applies to it
+CASES = [(b, l) for b in ConformanceHarness.BACKENDS
+         for l in ConformanceHarness.LAYOUTS
+         if not (b == "host" and l != "f32")]
+
+HOST_TOL = 1e-4      # f32 engine vs f64 oracle, relative
+REL_SLOP = 1e-4      # f32 accumulation slop on top of the 2*qerr bound
+
+
+def _ids(case):
+    return f"{case[0]}-{case[1]}"
+
+
+def test_baseline_matches_host_oracle(conformance):
+    """The reference column itself is correct, not merely self-consistent."""
+    d = conformance.baseline[0]
+    truth = conformance.truth
+    fin = np.isfinite(truth)
+    assert np.array_equal(fin, np.isfinite(d))
+    np.testing.assert_allclose(d[fin], truth[fin], rtol=HOST_TOL,
+                               atol=HOST_TOL)
+
+
+@pytest.mark.parametrize("case", CASES, ids=_ids)
+def test_distances_conform(conformance, case):
+    backend, layout = case
+    d = conformance.run(backend, layout)[0]
+    base = conformance.baseline[0]
+    fin = np.isfinite(base)
+    assert np.array_equal(fin, np.isfinite(d)), \
+        f"{backend}/{layout}: reachability verdicts differ from reference"
+    if backend == "host":
+        np.testing.assert_allclose(d[fin], base[fin], rtol=HOST_TOL,
+                                   atol=HOST_TOL)
+    elif backend == "jnp" and layout == "f32":
+        # eager mode: same math, but XLA fusion in the jitted reference
+        # reassociates float adds — ulp-level drift, not an identity target
+        np.testing.assert_allclose(d[fin], base[fin], rtol=1e-5, atol=1e-5)
+    elif layout == "f32":
+        np.testing.assert_array_equal(d, base)
+    else:
+        bound = 2.0 * conformance.qerr(layout) + REL_SLOP * np.abs(base[fin])
+        err = np.abs(d[fin] - base[fin])
+        assert np.all(err <= bound + 1e-6), \
+            (f"{backend}/{layout}: max distance error {err.max():.3e} over "
+             f"the quantization bound")
+
+
+@pytest.mark.parametrize("case", [c for c in CASES if c[0] != "host"],
+                         ids=_ids)
+def test_argmin_conforms(conformance, case):
+    """covis + via/hub winners bitwise across ALL backends and layouts —
+    quantized rows with ambiguous margins must have been rescued."""
+    backend, layout = case
+    d, covis, via_s, hub, via_t = conformance.run(backend, layout)
+    bd, bcv, bvs, bhb, bvt = conformance.baseline
+    assert np.array_equal(covis, bcv), \
+        f"{backend}/{layout}: co-visibility verdicts differ"
+    m = ~bcv & np.isfinite(bd)
+    for name, got, ref in (("via_s", via_s, bvs), ("hub", hub, bhb),
+                           ("via_t", via_t, bvt)):
+        assert np.array_equal(got[m], ref[m]), \
+            f"{backend}/{layout}: argmin {name} winners differ"
+
+
+def test_quantized_actually_shrinks(conformance):
+    """The table is only meaningful if bf16 really packs a different
+    (smaller) artifact rather than silently falling back to f32."""
+    b32 = conformance.bucketed("f32").device_bytes()
+    bq = conformance.bucketed("bf16").device_bytes()
+    assert bq < b32
+    assert conformance.qerr("bf16") > 0.0

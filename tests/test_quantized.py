@@ -1,0 +1,190 @@
+"""Quantized slab encoding edge cases + exact-argmin guarantee (DESIGN §11).
+
+Unit-level: the delta-u16 id encoder and narrow-dtype distance encoder
+must fall back *loudly* (per-bucket raw dtypes surfaced by
+``quant_stats``) instead of silently corrupting ids or distances; the
+ambiguity margin in the argmin join must flag exact ties.  Property-level:
+a seeded multi-scene sweep asserting the quantized engine's argmin winners
+are bitwise-identical to the f32 engine after residual rescue.
+"""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core.packed import (bucketed_device_bytes, encode_delta_u16,
+                               encode_dist, join_masked, pack_bucketed,
+                               query_batch_bucketed, slab_layout,
+                               _quant_stats, _quantize_slab)
+
+F16 = slab_layout("f16").dist_dtype
+BF16 = slab_layout("bf16").dist_dtype
+
+
+# ---------------------------------------------------------------------------
+# id encoding: u16 delta + loud i32 fallback
+# ---------------------------------------------------------------------------
+
+def test_delta_u16_roundtrip_with_pads():
+    ids = np.array([[7, 100, -1, 65541], [0, 0, -1, -1]], np.int32)
+    valid = ids >= 0
+    enc, base = encode_delta_u16(ids, valid)
+    assert enc.dtype == np.uint16 and base.dtype == np.int32
+    assert (enc[~valid] == 0xFFFF).all()          # pad sentinel
+    dec = base[:, None].astype(np.int64) + enc
+    np.testing.assert_array_equal(dec[valid], ids[valid])
+
+
+def test_delta_u16_range_overflow_returns_none():
+    # per-row range 70000 > 0xFFFE: no u16 encoding exists without lossy
+    # clamping, so the encoder must refuse rather than wrap
+    ids = np.array([[5, 70005]], np.int64)
+    enc, base = encode_delta_u16(ids, np.ones_like(ids, bool))
+    assert enc is None and base is None
+    # large *absolute* ids with a small range are fine (delta vs row base)
+    ids = np.array([[1_000_000, 1_000_002]], np.int64)
+    enc, base = encode_delta_u16(ids, np.ones_like(ids, bool))
+    assert enc is not None and int(base[0]) == 1_000_000
+
+
+def test_quantize_slab_id_fallback_is_loud():
+    lay = slab_layout("bf16")
+    R, W = 2, 4
+    xy = np.zeros((R, W, 2), np.float32)
+    d = np.full((R, W), 1.5, np.float32)
+    wide_hub = np.array([[0, 80_000, -1, -1]] * R, np.int32)   # range > u16
+    vid = np.tile(np.arange(W, dtype=np.int32), (R, 1))        # range ok
+    hub_q, d_q, vid_q, hub_base, vid_base, qerr = _quantize_slab(
+        (wide_hub, xy, d, vid), lay)
+    assert hub_q.dtype == np.int32           # fell back, ids untouched
+    np.testing.assert_array_equal(hub_q, wide_hub)
+    assert vid_q.dtype == np.uint16          # independent planes
+    assert d_q.dtype == BF16
+    # the fallback is observable per bucket, never silent
+    st = _quant_stats(lay, [hub_q, vid_q.view(np.uint16)], [d_q], [vid_q],
+                      qerr)
+    assert st["id_fallback"] == (True, False)
+    assert st["dist_fallback"] == (False,)
+
+
+# ---------------------------------------------------------------------------
+# distance encoding: overflow + subnormals, f16 vs bf16
+# ---------------------------------------------------------------------------
+
+def test_encode_dist_f16_finite_overflow_falls_back():
+    d = np.array([1.0, 70_000.0, np.inf], np.float32)   # f16 max is 65504
+    dq, qerr = encode_dist(d, F16)
+    assert dq is None and qerr == 0.0
+    dq, qerr = encode_dist(d, BF16)                     # bf16 reaches 3e38
+    assert dq is not None
+    back = dq.astype(np.float32)
+    assert np.isinf(back[2]) and np.isfinite(back[:2]).all()
+    assert np.abs(back[:2] - d[:2]).max() <= qerr
+
+
+def test_encode_dist_bf16_finite_overflow_falls_back():
+    # above bf16's max finite (~3.39e38) but still finite in f32
+    d = np.array([np.float32(3.4e38)], np.float32)
+    dq, qerr = encode_dist(d, BF16)
+    assert dq is None and qerr == 0.0
+
+
+@pytest.mark.parametrize("dtype", [F16, BF16], ids=["f16", "bf16"])
+def test_encode_dist_subnormals_stay_in_bound(dtype):
+    # values below each format's min normal (f16: 6.1e-5, bf16: 1.2e-38)
+    # round through the subnormal range; qerr must still bound the error
+    d = np.array([1e-5, 6.1e-5, 5e-4, 1e-40, 0.0, np.inf], np.float32)
+    dq, qerr = encode_dist(d, dtype)
+    assert dq is not None
+    back = dq.astype(np.float32)
+    fin = np.isfinite(d)
+    assert np.array_equal(fin, np.isfinite(back))
+    assert np.abs(back[fin] - d[fin]).max() <= qerr
+    assert float(back[4]) == 0.0                        # zero is exact
+
+
+# ---------------------------------------------------------------------------
+# argmin ambiguity margin: exact ties must be flagged
+# ---------------------------------------------------------------------------
+
+def test_join_masked_flags_margin_ties():
+    qerr2 = np.float32(0.5)       # summed per-side bound; threshold 2*qerr2
+    PAD_HUB = 9                   # never matches across sides (vd is inf)
+    hub = jnp.asarray(np.array([
+        [0, 1, PAD_HUB, PAD_HUB],   # two candidates, margin == 2*qerr2
+        [0, 1, PAD_HUB, PAD_HUB],   # two candidates, margin >> threshold
+        [0, PAD_HUB, PAD_HUB, PAD_HUB],   # unique candidate
+    ], np.int32))
+    vd_s = jnp.asarray(np.array([
+        [10.0, 11.0, np.inf, np.inf],
+        [10.0, 12.0, np.inf, np.inf],
+        [10.0, np.inf, np.inf, np.inf],
+    ], np.float32))
+    vd_t = jnp.where(jnp.isfinite(vd_s), 0.0, jnp.inf).astype(jnp.float32)
+    vid_s = jnp.asarray(np.arange(12, dtype=np.int32).reshape(3, 4) + 100)
+    vid_t = vid_s + 50
+    s = jnp.zeros((3, 2), jnp.float32)
+    t = jnp.ones((3, 2), jnp.float32)
+    covis = jnp.zeros(3, bool)
+
+    d, cv, via_s, hub_w, via_t, amb = (np.asarray(r) for r in join_masked(
+        (hub, vd_s, vid_s), (hub, vd_t, vid_t), s, t, covis,
+        want_argmin=True, qerr2=qerr2))
+    np.testing.assert_allclose(d, [10.0, 10.0, 10.0])
+    np.testing.assert_array_equal(via_s, [100, 104, 108])   # winner slot 0
+    np.testing.assert_array_equal(hub_w, [0, 0, 0])
+    np.testing.assert_array_equal(via_t, [150, 154, 158])
+    # the margin test is inclusive: a tie exactly at 2*qerr2 could swap
+    # winners in exact f32 space, so it MUST be rescued; a clear margin and
+    # a unique candidate provably cannot
+    np.testing.assert_array_equal(amb, [True, False, False])
+
+    # without qerr2 the same call is the plain exact 5-tuple entry
+    res = join_masked((hub, vd_s, vid_s), (hub, vd_t, vid_t), s, t, covis,
+                      want_argmin=True)
+    assert len(res) == 5
+
+
+# ---------------------------------------------------------------------------
+# property sweep: quantized argmin == f32 argmin (the rescue guarantee)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("layout", ["bf16", "f16"])
+def test_quantized_argmin_bitwise_matches_f32_sweep(conformance, scene_s,
+                                                    layout):
+    """Seeded property sweep over fresh random endpoints: for every pair,
+    the quantized engine's covis verdict and via/hub winners are bitwise
+    equal to f32 (ambiguous rows went through the residual), and distances
+    stay inside the 2*qerr bound."""
+    from repro.core.geometry import random_free_points
+    bx32 = conformance.bucketed("f32")
+    bxq = conformance.bucketed(layout)
+    qerr = conformance.qerr(layout)
+    assert qerr > 0.0
+    for seed in (3, 17, 91):
+        rng = np.random.default_rng(seed)
+        s = random_free_points(scene_s, 16, rng).astype(np.float32)
+        t = random_free_points(scene_s, 16, rng).astype(np.float32)
+        ref = [np.asarray(r) for r in query_batch_bucketed(
+            bx32, s, t, want_argmin=True)]
+        got = [np.asarray(r) for r in query_batch_bucketed(
+            bxq, s, t, want_argmin=True)]
+        fin = np.isfinite(ref[0])
+        assert np.array_equal(fin, np.isfinite(got[0]))
+        bound = 2.0 * qerr + 1e-4 * np.abs(ref[0][fin])
+        assert np.all(np.abs(got[0][fin] - ref[0][fin]) <= bound + 1e-6)
+        np.testing.assert_array_equal(got[1], ref[1])
+        m = ~ref[1] & fin
+        for g, r in zip(got[2:], ref[2:]):
+            np.testing.assert_array_equal(g[m], r[m])
+
+
+@pytest.mark.parametrize("layout", ["bf16", "f16"])
+def test_quantized_estimator_matches_realized_bytes(conformance, layout):
+    """The planner steers by the analytic byte model — it must agree
+    exactly with the realized quantized artifact (per-slot narrow planes +
+    per-row bases + the shared vertex table)."""
+    bx = conformance.bucketed(layout)
+    est = bucketed_device_bytes(conformance.idx, layout=slab_layout(layout))
+    assert est == bx.device_bytes()
+    assert bx.device_bytes() < conformance.bucketed("f32").device_bytes()
