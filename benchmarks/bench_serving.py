@@ -33,20 +33,19 @@ exits nonzero when a gate fails either way.
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import sys
 import time
 
 import numpy as np
 
+from repro import obs
 from repro.core import pack_bucketed, uniform_queries
 from repro.indexing import SwappableEngine
 from repro.serving import JnpEngine, PathServer
 
 from . import common
 
-OUT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "artifacts")
 
 
 def _occupancy(stats) -> float:
@@ -58,6 +57,12 @@ def _occupancy(stats) -> float:
 def _pcts(lat_s: np.ndarray) -> tuple:
     ms = 1e3 * lat_s
     return float(np.percentile(ms, 50)), float(np.percentile(ms, 99))
+
+
+def _pcts3(lat_s: np.ndarray) -> tuple:
+    ms = 1e3 * lat_s
+    return (float(np.percentile(ms, 50)), float(np.percentile(ms, 95)),
+            float(np.percentile(ms, 99)))
 
 
 def _burst_baseline(srv, s, t) -> float:
@@ -207,7 +212,56 @@ def run(map_name: str = "rooms-M", budget: float = 0.3,
         f"swaps={st.swaps};requeued={st.requeued_batches};"
         f"stale={st.stale_batches};identical={identical}"))
 
+    # ---- instrumentation-overhead gate (DESIGN.md §12) ------------------
+    # Same workload, two private registries: head-sampling enabled (the
+    # production default) vs ``Telemetry.off()``.  The registry records in
+    # both — it IS the serving stats — so the delta isolates what spans +
+    # events cost.  Closed-system capacity (best-of-3, interleaved) gives
+    # the throughput ratio; an open-loop replay at the shared rate gives
+    # p99 at equal offered load.
+    tel_on = obs.Telemetry(registry=obs.MetricsRegistry(), sample_rate=0.05)
+    tel_off = obs.Telemetry.off(registry=obs.MetricsRegistry())
+    srv_on = PathServer(JnpEngine(bx), batch_size=batch_size,
+                        telemetry=tel_on)
+    srv_off = PathServer(JnpEngine(bx), batch_size=batch_size,
+                         telemetry=tel_off)
+    srv_on.warmup()
+    srv_off.warmup()
+    cap_on = cap_off = 0.0
+    for _ in range(3):
+        cap_off = max(cap_off, _burst_async(srv_off, s, t, wait_ms))
+        cap_on = max(cap_on, _burst_async(srv_on, s, t, wait_ms))
+    ratio_tel = cap_on / cap_off
+    _, lat_off, _ = _rate_async(srv_off, s, t, arrivals, wait_ms)
+    _, lat_on, _ = _rate_async(srv_on, s, t, arrivals, wait_ms)
+    p50_off, p95_off, p99_off = _pcts3(lat_off)
+    p50_on, p95_on, p99_on = _pcts3(lat_on)
+
+    # span attribution: telescoping stages must reproduce e2e (<= 5% gap)
+    spans = tel_on.spans.traces("async")
+    gaps = [abs(tr.e2e_seconds - tr.stage_sum) / tr.e2e_seconds
+            for tr in spans if tr.e2e_seconds > 0]
+    span_gap = max(gaps) if gaps else float("nan")
+    rows.append(common.emit(
+        f"serving/{map_name}/telemetry_overhead", 0.0,
+        f"qps_on={cap_on:.0f};qps_off={cap_off:.0f};ratio={ratio_tel:.3f};"
+        f"p99_on={p99_on:.1f};p99_off={p99_off:.1f};"
+        f"spans={len(spans)};span_gap={span_gap:.4f}"))
+
     failures = []
+    if ratio_tel < 0.97:
+        failures.append(
+            f"telemetry overhead: sampled qps {cap_on:.0f} is "
+            f"{ratio_tel:.3f}x of disabled {cap_off:.0f} (< 0.97x gate)")
+    if p99_on > 1.25 * p99_off + 2.0:
+        failures.append(
+            f"telemetry overhead: p99 {p99_on:.1f}ms vs disabled "
+            f"{p99_off:.1f}ms (> 1.25x + 2ms band)")
+    if not spans:
+        failures.append("head sampling produced no async spans")
+    elif span_gap > 0.05:
+        failures.append(f"span stage attribution off by {span_gap:.1%} "
+                        "of e2e (> 5% gate)")
     if not identical:
         failures.append("answers differ from the sync reference "
                         "(across hot-swap under load)")
@@ -223,22 +277,29 @@ def run(map_name: str = "rooms-M", budget: float = 0.3,
         failures.append(f"flush mix degenerate (full={st.full_flushes}, "
                         f"deadline={st.deadline_flushes})")
 
-    os.makedirs(OUT, exist_ok=True)
-    json.dump(dict(map=map_name, budget_frac=budget, n=n,
-                   batch_size=batch_size, max_wait_ms=wait_ms,
-                   capacity_qps=dict(fixed=cap_base, continuous=cap_async),
-                   rate_qps=rate,
-                   fixed=dict(qps=qps_b, p50_ms=p50_b, p99_ms=p99_b,
-                              occupancy=occ_b),
-                   continuous=dict(qps=qps_a, p50_ms=p50_a, p99_ms=p99_a,
-                                   occupancy=occ_a,
-                                   full_flushes=st.full_flushes,
-                                   deadline_flushes=st.deadline_flushes,
-                                   swaps=st.swaps,
-                                   requeued=st.requeued_batches,
-                                   stale=st.stale_batches),
-                   ratio=ratio, identical=identical, failures=failures),
-              open(os.path.join(OUT, "serving.json"), "w"), indent=1)
+    common.write_bench_json(
+        "serving", qps=qps_a, p50_ms=p50_on, p95_ms=p95_on, p99_ms=p99_on,
+        device_bytes=bx.device_bytes(), registry=tel_on.registry,
+        data=dict(map=map_name, budget_frac=budget, n=n,
+                  batch_size=batch_size, max_wait_ms=wait_ms,
+                  capacity_qps=dict(fixed=cap_base, continuous=cap_async),
+                  rate_qps=rate,
+                  fixed=dict(qps=qps_b, p50_ms=p50_b, p99_ms=p99_b,
+                             occupancy=occ_b),
+                  continuous=dict(qps=qps_a, p50_ms=p50_a, p99_ms=p99_a,
+                                  occupancy=occ_a,
+                                  full_flushes=st.full_flushes,
+                                  deadline_flushes=st.deadline_flushes,
+                                  swaps=st.swaps,
+                                  requeued=st.requeued_batches,
+                                  stale=st.stale_batches),
+                  telemetry_overhead=dict(
+                      qps_on=cap_on, qps_off=cap_off, ratio=ratio_tel,
+                      p50_on_ms=p50_on, p95_on_ms=p95_on, p99_on_ms=p99_on,
+                      p50_off_ms=p50_off, p95_off_ms=p95_off,
+                      p99_off_ms=p99_off, spans=len(spans),
+                      span_gap=span_gap),
+                  ratio=ratio, identical=identical, failures=failures))
     return rows, failures
 
 

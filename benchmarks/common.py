@@ -6,7 +6,9 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import json
 import os
+import subprocess
 import time
 
 import numpy as np
@@ -182,3 +184,66 @@ def emit(name: str, us: float, derived: str = "") -> str:
     line = f"{name},{us:.3f},{derived}"
     print(line, flush=True)
     return line
+
+
+# --------------------------------------------------------------------------
+# Common-schema bench artifacts (DESIGN.md §12): every bench that measures a
+# serving loop writes ``BENCH_<name>.json`` with the same top-level keys, so
+# make_tables / CI diff runs without per-bench parsing.
+
+BENCH_SCHEMA_VERSION = 1
+
+ARTIFACTS = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                         "artifacts")
+
+
+def git_sha() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            timeout=10, cwd=os.path.dirname(os.path.abspath(__file__)),
+        ).stdout.strip() or "unknown"
+    except Exception:   # noqa: BLE001 — benches run outside checkouts too
+        return "unknown"
+
+
+def _jsonable(x):
+    if isinstance(x, dict):
+        return {str(k): _jsonable(v) for k, v in x.items()}
+    if isinstance(x, (list, tuple)):
+        return [_jsonable(v) for v in x]
+    if isinstance(x, np.generic):
+        return x.item()
+    if isinstance(x, np.ndarray):
+        return x.tolist()
+    return x
+
+
+def write_bench_json(name: str, *, qps: float = None, p50_ms: float = None,
+                     p95_ms: float = None, p99_ms: float = None,
+                     device_bytes: int = None, registry=None,
+                     data: dict = None, out_dir: str = None) -> str:
+    """Write ``BENCH_<name>.json`` in the shared schema; returns the path.
+
+    ``registry`` (a ``repro.obs.MetricsRegistry``) is snapshotted so the
+    artifact carries the full metric state the numbers were derived from;
+    ``data`` holds bench-specific detail under one key, never at top level.
+    """
+    out_dir = ARTIFACTS if out_dir is None else out_dir
+    rec = {
+        "name": name,
+        "schema_version": BENCH_SCHEMA_VERSION,
+        "git_sha": git_sha(),
+        "qps": qps,
+        "p50_ms": p50_ms,
+        "p95_ms": p95_ms,
+        "p99_ms": p99_ms,
+        "device_bytes": device_bytes,
+        "registry": registry.snapshot() if registry is not None else None,
+        "data": _jsonable(data or {}),
+    }
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return path

@@ -153,6 +153,33 @@ def quantized_table() -> str:
     return head + "\n" + "\n".join(rows)
 
 
+def telemetry_table() -> str:
+    """Instrumentation overhead + span attribution (bench_serving)."""
+    path = os.path.join(HERE, "artifacts", "BENCH_serving.json")
+    head = "### Serving telemetry overhead (DESIGN.md §12)\n"
+    if not os.path.exists(path):
+        return head + "\n(run `python -m benchmarks.bench_serving`)"
+    d = json.load(open(path))
+    t = d["data"]["telemetry_overhead"]
+    rows = [
+        "| qps sampled | qps disabled | ratio (gate >= 0.97) | p99 sampled "
+        "ms | p99 disabled ms | spans | max span gap vs e2e |",
+        "|---|---|---|---|---|---|---|",
+        f"| {t['qps_on']:.0f} | {t['qps_off']:.0f} | {t['ratio']:.3f}x | "
+        f"{t['p99_on_ms']:.1f} | {t['p99_off_ms']:.1f} | {t['spans']} | "
+        f"{t['span_gap']:.2%} |",
+    ]
+    rows.append(
+        f"\n({d['data']['map']}, n={d['data']['n']}, batch "
+        f"{d['data']['batch_size']}; head sampling at the production "
+        "default rate with private registries per side — the registry "
+        "records in both (it backs ServeStats), so the delta isolates "
+        "span + event cost.  Span stages telescope over the batcher's own "
+        "timestamps, so the attribution gap is float rounding, not "
+        "measurement error.)")
+    return head + "\n" + "\n".join(rows)
+
+
 def main():
     if os.path.exists(EXP):
         text = open(EXP).read()
@@ -164,7 +191,7 @@ def main():
     out = (base + MARK + "\n\n" + roofline_table() + "\n\n"
            + dryrun_table() + "\n\n" + adaptive_table() + "\n\n"
            + sharded_table() + "\n\n" + segvis_grid_table() + "\n\n"
-           + quantized_table() + "\n")
+           + quantized_table() + "\n\n" + telemetry_table() + "\n")
     open(EXP, "w").write(out)
     print(f"EXPERIMENTS.md updated "
           f"({len(out.splitlines())} lines)")

@@ -33,6 +33,16 @@ def main(argv=None) -> None:
     t0 = time.time()
     print("name,us_per_call,derived")
 
+    rows: list = []
+
+    def keep(res) -> None:
+        """Collect CSV rows from bench modules that return them (modules
+        return either ``rows`` or ``(rows, failures)``)."""
+        if isinstance(res, tuple) and res:
+            res = res[0]
+        if isinstance(res, list):
+            rows.extend(r for r in res if isinstance(r, str))
+
     def want(name):
         return only is None or name in only
 
@@ -41,36 +51,36 @@ def main(argv=None) -> None:
     if want("table5"):
         from . import bench_table5
         if args.full:
-            bench_table5.run()
+            keep(bench_table5.run())
         else:
-            bench_table5.run(maps=("rooms-M",), n_queries=160,
-                             budgets=(0.8, 0.6, 0.4, 0.2, 0.1, 0.05)
-                             if not args.quick else (0.6, 0.2, 0.05),
-                             quick=False)
+            keep(bench_table5.run(maps=("rooms-M",), n_queries=160,
+                                  budgets=(0.8, 0.6, 0.4, 0.2, 0.1, 0.05)
+                                  if not args.quick else (0.6, 0.2, 0.05),
+                                  quick=False))
     if want("table6"):
         from . import bench_deviation
-        bench_deviation.run(quick=args.quick or not args.full)
+        keep(bench_deviation.run(quick=args.quick or not args.full))
     if want("fig5"):
         from . import bench_regions
-        bench_regions.run(quick=args.quick)
+        keep(bench_regions.run(quick=args.quick))
     if want("kernels"):
         from . import bench_kernels
-        bench_kernels.run(quick=args.quick)
+        keep(bench_kernels.run(quick=args.quick))
     if want("ehlperf"):
         from . import bench_ehl_perf
-        bench_ehl_perf.run(quick=True)
+        keep(bench_ehl_perf.run(quick=True))
     if want("adaptive"):
         from . import bench_adaptive
-        bench_adaptive.run(quick=args.quick or not args.full)
+        keep(bench_adaptive.run(quick=args.quick or not args.full))
     if want("sharded"):
         from . import bench_sharded
-        bench_sharded.run(quick=args.quick or not args.full)
+        keep(bench_sharded.run(quick=args.quick or not args.full))
     if want("serving"):
         from . import bench_serving
-        bench_serving.run(quick=args.quick or not args.full)
+        keep(bench_serving.run(quick=args.quick or not args.full))
     if want("segvis_grid"):
         from . import bench_segvis_grid
-        bench_segvis_grid.run(quick=args.quick)
+        keep(bench_segvis_grid.run(quick=args.quick))
 
     if want("roofline"):
         art = os.path.join(os.path.dirname(os.path.abspath(__file__)),
@@ -87,6 +97,16 @@ def main(argv=None) -> None:
                         n += 1
         if n == 0:
             print("roofline/none,0.0,run `python -m benchmarks.roofline`")
+
+    # harness-level artifact: all collected CSV rows + the process-wide
+    # metrics registry (every engine/server the benches built records there)
+    from repro import obs
+    from . import common
+    common.write_bench_json(
+        "harness", registry=obs.REGISTRY,
+        data={"rows": rows, "only": sorted(only) if only else None,
+              "quick": args.quick, "full": args.full,
+              "total_s": time.time() - t0})
 
     print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
 

@@ -30,10 +30,12 @@ shard atomically under one generation.
 """
 
 import argparse
+import os
 import sys
 
 import numpy as np
 
+from repro import obs
 from repro.core import (build_ehl, build_visgraph, bucketed_device_bytes,
                         cluster_queries, compress_to_fraction, make_map,
                         pack_bucketed, pack_index, path_length, plan_buckets,
@@ -108,6 +110,17 @@ def main():
     ap.add_argument("--async-swap", action="store_true",
                     help="[adaptive] build/validate/swap on a background "
                          "thread instead of between rounds")
+    ap.add_argument("--metrics", action="store_true",
+                    help="export telemetry (DESIGN.md §12) on exit: "
+                         "telemetry.prom + telemetry.json + events.jsonl "
+                         "under --metrics-dir; self-checks that the "
+                         "Prometheus text parses and the expected series/"
+                         "events are present (CI smoke gate)")
+    ap.add_argument("--metrics-dir",
+                    default=os.path.join(os.path.dirname(
+                        os.path.abspath(__file__)), "..", "benchmarks",
+                        "artifacts", "telemetry"),
+                    help="[metrics] output directory")
     args = ap.parse_args()
     backend = "pallas" if args.kernels else args.backend
     if args.adaptive:
@@ -229,6 +242,12 @@ def main():
         print(f"extracted {n} paths via batched argmin ({backend}); "
               f"max |len(path) - d| = {err:.2e}")
 
+    if args.metrics:
+        failures = dump_metrics(args, srv.telemetry)
+        if failures:
+            print("METRICS SMOKE FAILED:\n  " + "\n  ".join(failures))
+            sys.exit(1)
+
 
 def engine_argmin(engine, s, t) -> list:
     """Full-batch argmin through any bucket-routed engine (exact shapes)."""
@@ -326,6 +345,51 @@ def check_async(srv, s, t, label: str) -> list:
     return failures
 
 
+def dump_metrics(args, telemetry, *, expect_shards: int = 0,
+                 expect_swaps: int = 0) -> list:
+    """Export telemetry.prom / telemetry.json / events.jsonl and self-check
+    the export (DESIGN.md §12).  Returns failure strings (empty = pass):
+
+    * the Prometheus text must round-trip through ``parse_prometheus``;
+    * ``serve_queries_total`` must be present with a nonzero sum;
+    * sharded runs must export per-shard series for every shard id;
+    * adaptive runs must have logged >= ``expect_swaps`` swap events.
+    """
+    out = os.path.abspath(args.metrics_dir)
+    os.makedirs(out, exist_ok=True)
+    text = obs.prometheus_text(telemetry.registry)
+    with open(os.path.join(out, "telemetry.prom"), "w") as f:
+        f.write(text)
+    with open(os.path.join(out, "telemetry.json"), "w") as f:
+        f.write(obs.json_snapshot(telemetry.registry))
+    n_events = telemetry.events.dump_jsonl(
+        os.path.join(out, "events.jsonl"))
+
+    failures = []
+    try:
+        parsed = obs.parse_prometheus(text)
+    except ValueError as e:
+        return [f"metrics: exported Prometheus text does not parse: {e}"]
+    served = sum(parsed.get("serve_queries_total", {}).values())
+    if served <= 0:
+        failures.append("metrics: no serve_queries_total series exported")
+    if expect_shards > 0:
+        shards = {dict(k).get("shard")
+                  for k in parsed.get("shard_slots_total", {})}
+        missing = {str(i) for i in range(expect_shards)} - shards
+        if missing:
+            failures.append("metrics: per-shard series missing for "
+                            f"shard(s) {sorted(missing)}")
+    if expect_swaps > 0:
+        swaps = telemetry.events.counts().get("swap", 0)
+        if swaps < expect_swaps:
+            failures.append(f"metrics: {swaps} swap events in the log, "
+                            f"expected >= {expect_swaps}")
+    print(f"metrics: exported {len(parsed)} series "
+          f"({served:.0f} queries served), {n_events} events -> {out}")
+    return failures
+
+
 def run_sharded(args, backend: str) -> None:
     """Sharded serving smoke: answers must match the single-device engine
     bitwise and every shard must respect the per-device byte cap.  Exits
@@ -410,6 +474,9 @@ def run_sharded(args, backend: str) -> None:
         failures += check_quantized(eng_q, eng, s, t, qerr)
     if args.serve_async:
         failures += check_async(srv2, s, t, "sharded")
+    if args.metrics:
+        failures += dump_metrics(args, srv2.telemetry,
+                                 expect_shards=args.shards)
     if failures:
         print("SHARDED SMOKE FAILED:\n  " + "\n  ".join(failures))
         sys.exit(1)
@@ -445,14 +512,18 @@ def run_adaptive(args, backend: str) -> None:
     # (quantized layouts widen the manager's effective probe tolerance by
     # the generations' quantization-error bounds — the *argmin* stays exact
     # via the residual rescue, but reported distances carry the bound)
+    # one Telemetry bundle across the manager and the server, so swap /
+    # drift events and serve-side series land in the same export
+    tel = obs.Telemetry()
     mgr = IndexManager(index, budget, backend=backend,
                        batch_size=args.batch,
                        min_queries=max(64, args.queries // 4),
                        replan_threshold=0.10, min_dwell=1, probe_n=64,
-                       seed=17, validate_tol=0.0, layout=lay, **shard_kw)
+                       seed=17, validate_tol=0.0, layout=lay,
+                       telemetry=tel, **shard_kw)
     uniform_engine = mgr.engine.current    # generation-0 uniform-score ref
     srv = PathServer(mgr.engine, batch_size=args.batch,
-                     recorder=mgr.recorder)
+                     recorder=mgr.recorder, telemetry=tel)
     srv.warmup()
     print(f"adaptive: budget={budget / 1e6:.2f} MB "
           f"(x{args.budget:.2f} of uncompressed artifact), "
@@ -529,6 +600,12 @@ def run_adaptive(args, backend: str) -> None:
     if mgr.validation_failures:
         failures.append(f"{mgr.validation_failures} probe validations "
                         "failed (swap aborted)")
+    if args.serve_async:
+        failures += check_async(srv, s2, t2, "adaptive")
+    if args.metrics:
+        failures += dump_metrics(
+            args, tel, expect_swaps=args.min_swaps,
+            expect_shards=args.shards if args.shards > 1 else 0)
     if failures:
         print("ADAPTIVE SMOKE FAILED:\n  " + "\n  ".join(failures))
         sys.exit(1)

@@ -223,13 +223,25 @@ class TraceCounter:
     nothing cold": snapshot ``TRACES.count``, serve, and require the count
     unchanged.  Bumps happen inside the traced bodies — they run at trace
     time only, never per call.
+
+    ``count`` stays the in-process fast path; each bump also lands on the
+    ``jit_traces_total`` counter in the process-wide metrics registry so
+    cold-compile events show up in the Prometheus/JSON exports next to
+    the serving series they perturb (DESIGN.md §12).
     """
 
     def __init__(self):
         self.count = 0
+        self._metric = None
 
     def bump(self) -> None:
         self.count += 1
+        if self._metric is None:
+            # deferred: repro.obs is import-light (numpy + stdlib), but
+            # binding lazily keeps module import order unconstrained
+            from repro.obs import REGISTRY
+            self._metric = REGISTRY.counter("jit_traces_total")
+        self._metric.inc()
 
 
 TRACES = TraceCounter()

@@ -33,6 +33,7 @@ import time
 
 import numpy as np
 
+from repro import obs
 from repro.core.grid import EHLIndex
 from repro.core.packed import pack_bucketed
 from repro.serving.query_engine import make_engine
@@ -100,7 +101,7 @@ class IndexManager:
                  exit_threshold: float | None = None, min_dwell: int = 2,
                  halflife: float = 4000.0, warm_argmin: bool = False,
                  num_shards: int = 0, mesh=None, shard_tol: float = 1.15,
-                 seed: int = 0, layout=None):
+                 seed: int = 0, layout=None, telemetry=None):
         if backend not in ("jnp", "pallas"):
             raise ValueError("IndexManager serves packed artifacts; "
                              f"backend must be jnp|pallas, got {backend!r}")
@@ -110,6 +111,11 @@ class IndexManager:
 
         self.host_index = index
         self._base = index.snapshot_regions()
+        # lifecycle event sink (DESIGN.md §12): drift decisions, swaps /
+        # aborts and quantization loud-fallbacks all land here.  Share one
+        # Telemetry with the PathServer so serving + indexing events
+        # interleave in a single JSONL stream.
+        self.telemetry = obs.Telemetry() if telemetry is None else telemetry
         self.backend = backend
         self.lane = lane
         self.batch_size = batch_size
@@ -226,9 +232,29 @@ class IndexManager:
     def _make_engine(self, artifact):
         if self._shard_planner is not None:
             from repro.sharding import ShardedQueryEngine
-            return ShardedQueryEngine(artifact, mesh=self.mesh,
-                                      use_kernels=self.backend == "pallas")
+            eng = ShardedQueryEngine(artifact, mesh=self.mesh,
+                                     use_kernels=self.backend == "pallas")
+            eng.bind_telemetry(self.telemetry)
+            return eng
         return make_engine(artifact, backend=self.backend)
+
+    def _emit_quant_fallbacks(self, artifact, generation: int) -> None:
+        """Loud-fallback events: any bucket whose slab could not take the
+        quantized encoding (and silently pays f32/i32 widths) is a
+        capacity/accuracy signal the operator should see."""
+        if not self.layout.quantized:
+            return
+        for shard, bx in enumerate(getattr(artifact, "shards", None)
+                                   or (artifact,)):
+            qs = bx.quant_stats()
+            falls = {k: [i for i, f in enumerate(qs.get(k, ())) if f]
+                     for k in ("id_fallback", "vid_fallback",
+                               "dist_fallback")}
+            falls = {k: v for k, v in falls.items() if v}
+            if falls:
+                self.telemetry.events.emit(
+                    "quant_fallback", generation=generation, shard=shard,
+                    qerr=qs["qerr"], **falls)
 
     # ------------------------------------------------------------ adaptation
     def maybe_adapt(self, block: bool = True) -> bool:
@@ -243,6 +269,10 @@ class IndexManager:
         decision = self.planner.decide(self.recorder, self.host_index)
         if decision.kind == "skip":
             return False
+        self.telemetry.events.emit("drift", decision=decision.kind,
+                                   drift=decision.drift,
+                                   reason=decision.reason,
+                                   recorded_queries=self.recorder.queries)
         if block:
             return self._adapt(decision)
         self._thread = threading.Thread(target=self._adapt, args=(decision,),
@@ -332,11 +362,17 @@ class IndexManager:
                 pack_s=pack_s, validate_s=validate_s,
                 probe_max_err=max_err, swapped=ok, abort_reason=abort)
             self.history.append(rec)
+            self.telemetry.events.emit(
+                "swap" if ok else "swap_abort",
+                **{("decision" if f.name == "kind" else f.name):
+                   getattr(rec, f.name)
+                   for f in dataclasses.fields(rec)})
             if not ok:
                 self.validation_failures += 1
                 self.planner.discard()
                 self.host_index.restore_regions(pre)    # roll back mirror
                 return False
+            self._emit_quant_fallbacks(bx, rec.generation)
             # validation traffic must not leak into the live serving stats
             reset = getattr(candidate, "reset_serve_counters", None)
             if reset is not None:

@@ -43,6 +43,7 @@ import dataclasses
 
 import numpy as np
 
+from repro import obs
 from repro.core.compression import (CompressionStats, compress_incremental,
                                     compress_to_device_budget)
 
@@ -82,6 +83,9 @@ class BudgetPlanner:
         self._pending: tuple | None = None
         self._alarm = False
         self._dwell_left = 0
+        # drift-trigger observability (DESIGN.md §12): decision mix,
+        # live drift and alarm state as per-planner registry series
+        self._obs_labels = {"planner": obs.next_instance_id("p")}
 
     # ------------------------------------------------------------ decisions
     def drift(self, recorder) -> float:
@@ -92,6 +96,15 @@ class BudgetPlanner:
                                   - self._planned_dist).sum())
 
     def decide(self, recorder, index) -> PlanDecision:
+        d = self._decide(recorder, index)
+        reg = obs.REGISTRY
+        reg.counter("planner_decisions_total", kind=d.kind,
+                    **self._obs_labels).inc()
+        reg.gauge("planner_drift", **self._obs_labels).set(d.drift)
+        reg.gauge("planner_alarm", **self._obs_labels).set(int(self._alarm))
+        return d
+
+    def _decide(self, recorder, index) -> PlanDecision:
         from repro.core.packed import bucketed_device_bytes
 
         dev = bucketed_device_bytes(index, self.lane, layout=self.layout)

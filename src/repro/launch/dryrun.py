@@ -30,7 +30,6 @@ Usage:
 import argparse
 import json
 import re
-import time
 import traceback
 
 import numpy as np
@@ -45,6 +44,7 @@ from repro.distributed.sharding import (batch_spec, cache_specs,
 from repro.launch.mesh import make_production_mesh
 from repro.models import transformer as T
 from repro.models.config import LM_SHAPES, shape_applicable
+from repro.obs.timing import Stopwatch
 from repro.optim import adamw
 
 ART_DIR = os.path.join(os.path.dirname(__file__),
@@ -199,14 +199,14 @@ def run_cell(arch: str, shape, mesh_kind: str, out_dir: str) -> dict:
     mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))
     set_mesh_hints(mesh)
     n_dev = mesh.devices.size
-    t0 = time.time()
+    sw = Stopwatch()
     try:
         with mesh:
             fn, args, in_sh = build_step(cfg, shape, mesh)
             lowered = jax.jit(fn, in_shardings=in_sh).lower(*args)
-            t_lower = time.time() - t0
+            t_lower = sw.lap()
             compiled = lowered.compile()
-            t_compile = time.time() - t0 - t_lower
+            t_compile = sw.lap()
             mem = compiled.memory_analysis()
             cost = compiled.cost_analysis() or {}
             coll = collective_bytes(compiled.as_text())

@@ -14,7 +14,6 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import time
 from functools import partial
 
 import jax
@@ -28,6 +27,7 @@ from repro.distributed.fault import SimulatedFault, StepGuard
 from repro.distributed.sharding import batch_spec, param_shardings
 from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.models import transformer as T
+from repro.obs.timing import Stopwatch
 from repro.optim import adamw
 from repro.optim.compression import compress_psum_tree, init_residuals
 
@@ -158,15 +158,16 @@ def main(argv=None):
             return (st["p"], st["o"])
 
         carry = (params, opt_state)
+        sw = Stopwatch()
         for step in range(start, args.steps):
-            t0 = time.time()
+            sw.lap()
             carry, m = guard.run(one_step, carry, step, restore_fn)
             if step % args.ckpt_every == 0 or step == args.steps - 1:
                 store.save(args.ckpt_dir, step,
                            {"p": carry[0], "o": carry[1]})
             print(f"step {step:4d} loss={float(m['loss']):.4f} "
                   f"lr={float(m['lr']):.2e} gnorm={float(m['grad_norm']):.2f} "
-                  f"{time.time() - t0:.2f}s")
+                  f"{sw.lap():.2f}s")
         return float(m["loss"])
 
 

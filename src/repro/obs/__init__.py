@@ -1,0 +1,64 @@
+"""repro.obs — dependency-free serving telemetry (DESIGN.md §12).
+
+Three primitives, one bundle:
+
+* :class:`MetricsRegistry` — labeled counters/gauges/histograms; the
+  process-wide :data:`REGISTRY` is the single source of truth that the
+  ``ServeStats``/``BucketStats``/``ShardStats`` views, the Prometheus/
+  JSON exporters and the benches all read.
+* :class:`Trace`/:class:`TraceLog`/:class:`HeadSampler` — per-request
+  span trees, head-sampled with an always-sample-on-slow override.
+* :class:`EventLog` — structured ring + JSONL sink for discrete state
+  changes (swaps, drift, sheds, requeues, quant fallbacks, covis).
+
+:class:`Telemetry` bundles sampler + trace ring + event log (the
+registry defaults to the shared :data:`REGISTRY`).  ``Telemetry.off()``
+builds the disabled variant used by the instrumentation-overhead gate:
+sampling rate 0, events suppressed — the registry stays live because it
+*is* the serving stats.
+"""
+
+from .events import EventLog
+from .metrics import (DEFAULT_LATENCY_BOUNDS_MS, Counter, Gauge, Histogram,
+                      MetricsRegistry, REGISTRY, log_bounds,
+                      next_instance_id)
+from .export import json_snapshot, parse_prometheus, prometheus_text
+from .timing import Stopwatch, monotonic
+from .trace import (ASYNC_STAGES, SYNC_STAGES, HeadSampler, Span, Trace,
+                    TraceLog)
+from .views import StatsView
+
+__all__ = [
+    "ASYNC_STAGES", "SYNC_STAGES", "Counter", "DEFAULT_LATENCY_BOUNDS_MS",
+    "EventLog", "Gauge", "HeadSampler", "Histogram", "MetricsRegistry",
+    "REGISTRY", "Span", "StatsView", "Stopwatch", "Telemetry", "Trace",
+    "TraceLog",
+    "json_snapshot", "log_bounds", "monotonic", "next_instance_id",
+    "parse_prometheus", "prometheus_text",
+]
+
+
+class Telemetry:
+    """Sampler + trace ring + event log over a shared metrics registry."""
+
+    def __init__(self, registry: MetricsRegistry = None,
+                 sample_rate: float = 0.05, slow_ms: float = 50.0,
+                 events: EventLog = None, span_capacity: int = 1024,
+                 events_path: str = None):
+        self.registry = REGISTRY if registry is None else registry
+        self.sampler = HeadSampler(rate=sample_rate, slow_ms=slow_ms)
+        self.spans = TraceLog(capacity=span_capacity)
+        self.events = EventLog(path=events_path) if events is None \
+            else events
+
+    @classmethod
+    def off(cls, registry: MetricsRegistry = None) -> "Telemetry":
+        """Spans and events disabled; registry recording stays on."""
+        t = cls(registry=registry, sample_rate=0.0, slow_ms=0.0)
+        t.events.enabled = False
+        return t
+
+    @property
+    def enabled(self) -> bool:
+        return (self.sampler.rate > 0.0 or self.sampler.slow_ms > 0.0
+                or self.events.enabled)

@@ -1,0 +1,169 @@
+"""Request-lifecycle spans for the serving stack.
+
+A ``Trace`` is one request's closed span tree: a root span (submit →
+reply) plus one child span per pipeline stage.  Stage boundaries are the
+timestamps the batcher already takes for its own accounting, so the stage
+durations *telescope*: their sum equals the end-to-end latency exactly
+(modulo float rounding), which is what makes the "attribution sums to
+e2e within 5%" acceptance gate structural rather than statistical.
+
+Async stage taxonomy (``ASYNC_STAGES``, in pipeline order):
+
+==============  ========================================================
+admission       ``submit()`` entry → admitted past the backpressure gate
+queue_wait      admitted → group launch (includes any requeue laps)
+stage           host routing + cross-shard gathers (``eng.stage``)
+dispatch        staged → device program issued (``dispatch_staged``)
+pipeline_wait   dispatched → retire loop turns to this flight
+device_join     ``block_until_ready`` wait — the device-time attribution
+rescue          quantized argmin residual rescue (engine-reported; 0 when
+                the layout is exact or rescue is fused into dispatch)
+unwind          path unwinding (async replies are distance/argmin only,
+                so 0 here; the sync ``query_paths`` span fills it)
+reply           scatter results to tickets + stats bookkeeping
+==============  ========================================================
+
+Sync queries (``PathServer.query``/``query_paths``) reuse the same trace
+type with ``SYNC_STAGES`` (route → dispatch → rescue → unwind → reply).
+
+Head sampling: the submit path decides *once per request* whether to
+build a trace (deterministic leaky-bucket at ``sample_rate`` — no RNG, so
+tests and resumable workflows see stable picks).  Requests slower than
+``slow_ms`` are traced retroactively at retire time from the group
+timestamps, so tail outliers always land in the ring regardless of rate.
+"""
+
+from __future__ import annotations
+
+import threading
+from collections import deque
+from typing import Dict, List, Optional, Tuple
+
+ASYNC_STAGES: Tuple[str, ...] = (
+    "admission", "queue_wait", "stage", "dispatch", "pipeline_wait",
+    "device_join", "rescue", "unwind", "reply")
+
+SYNC_STAGES: Tuple[str, ...] = (
+    "route", "dispatch", "rescue", "unwind", "reply")
+
+
+class Span:
+    """One named interval; ``t0`` is relative to the trace root (s)."""
+
+    __slots__ = ("name", "t0", "seconds")
+
+    def __init__(self, name: str, t0: float, seconds: float):
+        self.name = name
+        self.t0 = t0
+        self.seconds = seconds
+
+    def to_dict(self) -> dict:
+        return {"name": self.name, "t0": self.t0, "seconds": self.seconds}
+
+
+class Trace:
+    """A closed span tree for one request."""
+
+    __slots__ = ("kind", "stages", "attrs", "t_start", "t_end", "closed")
+
+    def __init__(self, kind: str = "async", **attrs):
+        self.kind = kind
+        self.stages: Dict[str, float] = {}
+        self.attrs: dict = attrs
+        self.t_start: Optional[float] = None
+        self.t_end: Optional[float] = None
+        self.closed = False
+
+    def stage(self, name: str, seconds: float) -> None:
+        self.stages[name] = self.stages.get(name, 0.0) + float(seconds)
+
+    def close(self, t_start: float, t_end: float,
+              outcome: str = "ok") -> "Trace":
+        self.t_start = t_start
+        self.t_end = t_end
+        self.attrs["outcome"] = outcome
+        self.closed = True
+        return self
+
+    @property
+    def e2e_seconds(self) -> float:
+        if self.t_start is None or self.t_end is None:
+            return 0.0
+        return self.t_end - self.t_start
+
+    @property
+    def stage_sum(self) -> float:
+        return sum(self.stages.values())
+
+    def complete(self, required=None) -> bool:
+        req = (ASYNC_STAGES if self.kind == "async" else SYNC_STAGES) \
+            if required is None else required
+        return self.closed and all(s in self.stages for s in req)
+
+    def tree(self) -> dict:
+        """Root span with one child per stage, in taxonomy order."""
+        order = ASYNC_STAGES if self.kind == "async" else SYNC_STAGES
+        names = [s for s in order if s in self.stages] + \
+            [s for s in self.stages if s not in order]
+        t, children = 0.0, []
+        for name in names:
+            dur = self.stages[name]
+            children.append(Span(name, t, dur).to_dict())
+            t += dur
+        return {"name": f"request/{self.kind}", "t0": 0.0,
+                "seconds": self.e2e_seconds, "attrs": dict(self.attrs),
+                "closed": self.closed, "children": children}
+
+    def to_dict(self) -> dict:
+        return self.tree()
+
+
+class HeadSampler:
+    """Deterministic leaky-bucket head sampler with a slow-path override.
+
+    ``sample()`` is called at admission; ``slow(e2e_s)`` at retire for
+    requests that were not head-sampled.  Rate 0 disables head sampling
+    entirely (slow-path tracing still applies unless ``slow_ms`` is 0).
+    """
+
+    def __init__(self, rate: float = 0.05, slow_ms: float = 50.0):
+        self.rate = float(rate)
+        self.slow_ms = float(slow_ms)
+        self._acc = 0.0
+        self._lock = threading.Lock()
+
+    def sample(self) -> bool:
+        if self.rate <= 0.0:
+            return False
+        with self._lock:
+            self._acc += self.rate
+            if self._acc >= 1.0:
+                self._acc -= 1.0
+                return True
+        return False
+
+    def slow(self, e2e_seconds: float) -> bool:
+        return self.slow_ms > 0.0 and e2e_seconds * 1e3 >= self.slow_ms
+
+
+class TraceLog:
+    """Bounded ring of closed traces (newest kept)."""
+
+    def __init__(self, capacity: int = 1024):
+        self._ring: deque = deque(maxlen=int(capacity))
+        self._lock = threading.Lock()
+        self.recorded = 0
+
+    def add(self, trace: Trace) -> None:
+        with self._lock:
+            self._ring.append(trace)
+            self.recorded += 1
+
+    def traces(self, kind: Optional[str] = None) -> List[Trace]:
+        with self._lock:
+            ts = list(self._ring)
+        return ts if kind is None else [t for t in ts if t.kind == kind]
+
+    def clear(self) -> None:
+        with self._lock:
+            self._ring.clear()

@@ -47,6 +47,7 @@ import numpy as np
 
 import jax
 
+from repro import obs
 from repro.core.packed import empty_results
 
 
@@ -65,6 +66,7 @@ class Ticket:
         self._remaining = n
         self._lock = threading.Lock()
         self._event = threading.Event()
+        self.t_submit = time.perf_counter()      # span root (obs.Trace)
         self.completed_at: float | None = None   # perf_counter stamp
         if n == 0:
             self.completed_at = time.perf_counter()
@@ -97,16 +99,23 @@ class Ticket:
 
 
 class _Entry:
-    """One queued query: destination ticket slot + endpoints + arrival."""
+    """One queued query: destination ticket slot + endpoints + arrival.
 
-    __slots__ = ("ticket", "slot", "s", "t", "arrived")
+    ``sampled`` is the head-sampling verdict taken once at admission
+    (trace objects are only materialized at retire, off the hot path);
+    ``requeues`` counts swap-superseded re-routes of this entry."""
 
-    def __init__(self, ticket, slot, s, t, arrived):
+    __slots__ = ("ticket", "slot", "s", "t", "arrived", "sampled",
+                 "requeues")
+
+    def __init__(self, ticket, slot, s, t, arrived, sampled=False):
         self.ticket = ticket
         self.slot = slot
         self.s = s
         self.t = t
         self.arrived = arrived
+        self.sampled = sampled
+        self.requeues = 0
 
 
 class _Flight:
@@ -118,10 +127,11 @@ class _Flight:
     slots it never dispatched (occupancy > 1)."""
 
     __slots__ = ("pin_cm", "eng", "gen", "key", "want_argmin", "entries",
-                 "rows", "res", "t_launch", "bstats")
+                 "rows", "res", "t_launch", "bstats", "reason", "t_staged",
+                 "t_dispatched")
 
     def __init__(self, pin_cm, eng, gen, key, want_argmin, entries, rows,
-                 res, t_launch, bstats):
+                 res, t_launch, bstats, reason, t_staged, t_dispatched):
         self.pin_cm = pin_cm
         self.eng = eng
         self.gen = gen
@@ -132,6 +142,9 @@ class _Flight:
         self.res = res
         self.t_launch = t_launch
         self.bstats = bstats
+        self.reason = reason            # flush reason (span attribute)
+        self.t_staged = t_staged        # stage -> dispatch boundary
+        self.t_dispatched = t_dispatched
 
 
 class CoalescingBatcher:
@@ -228,6 +241,10 @@ class CoalescingBatcher:
         if n == 0:
             return ticket
         stats = self.server.stats
+        tel = self.server.telemetry
+        # head-sampling verdict, once per submit; traces materialize at
+        # retire from group timestamps (nothing allocated here)
+        sampled = tel.sampler.sample()
         with self.server.engine.pin() as eng:
             gen = eng.generation
             keys = eng.buckets_of(s, t)
@@ -238,6 +255,16 @@ class CoalescingBatcher:
             if self._queued + n > self.max_queue:
                 if self.policy == "shed":
                     stats.shed += n
+                    tel.events.emit("shed", n=n, queued=self._queued,
+                                    max_queue=self.max_queue)
+                    if sampled:
+                        tr = obs.Trace("async", n=n, argmin=want_argmin,
+                                       srv=stats.labels["srv"])
+                        tr.stage("admission", now - ticket.t_submit)
+                        for st in obs.ASYNC_STAGES:
+                            tr.stages.setdefault(st, 0.0)
+                        tel.spans.add(tr.close(ticket.t_submit, now,
+                                               outcome="shed"))
                     raise QueueFull(
                         f"queue at {self._queued}/{self.max_queue}; "
                         f"rejected {n} queries")
@@ -255,7 +282,7 @@ class CoalescingBatcher:
                 k = int(keys[i])
                 gk = (gen, k, want_argmin)
                 self._groups.setdefault(gk, []).append(
-                    _Entry(ticket, i, s[i], t[i], now))
+                    _Entry(ticket, i, s[i], t[i], now, sampled=sampled))
                 bs = self.server._bucket_stats(k, eng)
                 bs.admitted += 1
             self._queued += n
@@ -367,7 +394,7 @@ class CoalescingBatcher:
         eng = cm.__enter__()
         if eng.generation != gen:
             cm.__exit__(None, None, None)
-            self._requeue(entries, want_argmin)
+            self._requeue(entries, want_argmin, old_gen=gen)
             return None
         if eng.generation != stats.generation:
             # first dispatch of a new generation: per-bucket rows describe
@@ -384,8 +411,10 @@ class CoalescingBatcher:
             tb[i] = e.t
         t0 = time.perf_counter()
         staged = eng.stage(sb, tb, bucket=key)
+        t_staged = time.perf_counter()
         res = eng.dispatch_staged(staged, bucket=key,
                                   want_argmin=want_argmin)
+        t_dispatched = time.perf_counter()
         bstats = srv._bucket_stats(key, eng)
         bstats.batches += 1
         bstats.slots += rows
@@ -395,9 +424,10 @@ class CoalescingBatcher:
             bstats.deadline_flushes += 1
         stats.batches += 1
         return _Flight(cm, eng, gen, key, want_argmin, entries, rows, res,
-                       t0, bstats)
+                       t0, bstats, reason, t_staged, t_dispatched)
 
-    def _requeue(self, entries: list, want_argmin: bool) -> None:
+    def _requeue(self, entries: list, want_argmin: bool,
+                 old_gen: int = -1) -> None:
         """Re-route a superseded chunk: recompute keys under the live
         generation and put the entries back with their original arrival
         times (deadlines keep counting from first admission)."""
@@ -409,6 +439,7 @@ class CoalescingBatcher:
             keys = eng.buckets_of(s, t)
         with self._cond:
             for e, k in zip(entries, keys):
+                e.requeues += 1
                 self._groups.setdefault((gen, int(k), want_argmin),
                                         []).append(e)
             self._queued += len(entries)
@@ -416,6 +447,8 @@ class CoalescingBatcher:
             srv.stats.requeued_batches += 1
             srv.stats.queue_depth = self._queued
             self._cond.notify_all()
+        srv.telemetry.events.emit("requeue", n=len(entries),
+                                  from_gen=old_gen, to_gen=gen)
 
     def _retire(self, f: _Flight) -> None:
         """Synchronize one in-flight group, scatter results into tickets,
@@ -423,8 +456,10 @@ class CoalescingBatcher:
         srv = self.server
         stats = srv.stats
         try:
+            t_retire = time.perf_counter()
             jax.block_until_ready(f.res)
-            dt = time.perf_counter() - f.t_launch
+            t_joined = time.perf_counter()
+            dt = t_joined - f.t_launch
             n = len(f.entries)
             outs = [np.asarray(r)[:n] for r in f.res]
             per_ticket: dict = collections.defaultdict(lambda: ([], []))
@@ -436,6 +471,8 @@ class CoalescingBatcher:
                 ridx = np.asarray(rows)
                 ticket._write(np.asarray(slots),
                               [o[ridx] for o in outs])
+            t_reply = time.perf_counter()
+            self._observe(f, per_ticket, t_retire, t_joined, t_reply)
             f.bstats.queries += n
             f.bstats.seconds += dt
             stats.queries += n
@@ -459,3 +496,53 @@ class CoalescingBatcher:
             with self._cond:
                 self._in_flight -= len(f.entries)
                 self._cond.notify_all()
+
+    # -------------------------------------------------------------- observe
+    def _observe(self, f: _Flight, per_ticket: dict, t_retire: float,
+                 t_joined: float, t_reply: float) -> None:
+        """Record per-stage histograms and materialize span trees.
+
+        Every stage boundary is a timestamp the loop already took for its
+        own accounting, so the per-request stage durations *telescope* —
+        their sum equals ``t_reply - ticket.t_submit`` exactly — which is
+        what makes the span-attribution acceptance gate structural.
+        Traces are built only for head-sampled tickets (or retroactively
+        for requests over the slow threshold: all stamps survive in the
+        flight, so no information was lost by not sampling them)."""
+        tel = srv_tel = self.server.telemetry
+        reg = tel.registry
+        lbl = self.server.stats.labels
+        stages = (("queue_wait", f.t_launch - f.entries[0].arrived),
+                  ("stage", f.t_staged - f.t_launch),
+                  ("dispatch", f.t_dispatched - f.t_staged),
+                  ("pipeline_wait", t_retire - f.t_dispatched),
+                  ("device_join", t_joined - t_retire),
+                  ("reply", t_reply - t_joined))
+        for name, dur in stages:
+            reg.histogram("stage_ms", stage=name,
+                          **lbl).record(max(0.0, dur) * 1e3)
+        lat = reg.histogram("request_latency_ms", **lbl)
+        lat.record_many([(t_reply - t.t_submit) * 1e3 for t in per_ticket])
+        if not (srv_tel.sampler.rate > 0.0 or srv_tel.sampler.slow_ms > 0.0):
+            return
+        for ticket, (rows, _) in per_ticket.items():
+            e2e = t_reply - ticket.t_submit
+            ents = [f.entries[i] for i in rows]
+            if not (ents[0].sampled or srv_tel.sampler.slow(e2e)):
+                continue
+            tr = obs.Trace("async", key=f.key, generation=f.gen,
+                           flush=f.reason, n=len(ents),
+                           argmin=f.want_argmin, srv=lbl["srv"],
+                           requeues=max(e.requeues for e in ents))
+            # admission: submit entry -> admitted; per-submit stamp pairs
+            tr.stage("admission", ents[0].arrived - ticket.t_submit)
+            tr.stage("queue_wait", f.t_launch - ents[0].arrived)
+            for name, dur in stages[1:]:
+                tr.stage(name, dur)
+            # rescue is fused into dispatch/device_join by the quantized
+            # engines (engine-side counters cover it); unwind only happens
+            # on the sync query_paths span — present as explicit zeros so
+            # the tree is complete
+            tr.stage("rescue", 0.0)
+            tr.stage("unwind", 0.0)
+            srv_tel.spans.add(tr.close(ticket.t_submit, t_reply))

@@ -17,7 +17,6 @@ batching/stats machinery, per the framework design.
 
 from __future__ import annotations
 
-import dataclasses
 import time
 
 import numpy as np
@@ -25,23 +24,39 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core.packed import empty_results
 from repro.core.query import path_length, unwind_path
 from repro.serving.query_engine import HostEngine, QueryEngine, make_engine
 
 
-@dataclasses.dataclass
-class BucketStats:
-    """Per-dispatch-bucket serving counters (width = label slots paid)."""
-    width: int = 0
-    batches: int = 0
-    queries: int = 0
-    seconds: float = 0.0
-    slots: int = 0          # batch slots dispatched (incl. tail padding)
-    # continuous batching (serving.batcher): per-key admission + flush mix
-    admitted: int = 0           # queries admitted to this key's queue
-    full_flushes: int = 0       # groups shipped because the batch filled
-    deadline_flushes: int = 0   # groups shipped by the latency deadline
+class BucketStats(obs.StatsView):
+    """Per-dispatch-bucket serving counters (width = label slots paid).
+
+    Registry-backed view (DESIGN.md §12): every counter is a labeled
+    series in the metrics registry — same field surface as the old
+    dataclass, but the Prometheus export and this object read the same
+    storage.  Rows are generation-tagged (``gen`` label), so a hot-swap's
+    per-bucket reset starts fresh series while the retired generation
+    stays frozen in the registry.
+    """
+
+    _COUNTERS = {
+        "batches": ("bucket_batches_total", int),
+        "queries": ("bucket_queries_total", int),
+        "seconds": ("bucket_seconds_total", float),
+        # batch slots dispatched (incl. tail padding)
+        "slots": ("bucket_slots_total", int),
+        # continuous batching (serving.batcher): admission + flush mix
+        "admitted": ("bucket_admitted_total", int),
+        "full_flushes": ("bucket_full_flushes_total", int),
+        "deadline_flushes": ("bucket_deadline_flushes_total", int),
+    }
+
+    def __init__(self, width: int = 0, registry=None, labels=None):
+        self.width = int(width)
+        self._bind(registry, labels, row_prefix="b")
+        self.registry.gauge("bucket_width", **self.labels).set(width)
 
     @property
     def occupancy(self) -> float:
@@ -58,33 +73,49 @@ class BucketStats:
         return 1e6 * self.seconds / max(1, self.queries)
 
 
-@dataclasses.dataclass
-class ServeStats:
-    batches: int = 0
-    queries: int = 0
-    seconds: float = 0.0
-    per_bucket: dict = dataclasses.field(default_factory=dict)
-    # adaptive serving (repro.indexing): engine generation observability.
-    # per_bucket is reset whenever a new generation is first served — bucket
-    # ids/widths are meaningless across artifact generations.
-    generation: int = 0     # generation the last request was served on
-    swaps: int = 0          # generation changes observed by this server
-    stale_batches: int = 0  # batches that finished on a superseded artifact
-    # sharded serving (repro.sharding): per-shard ShardStats rows, refreshed
-    # from the engine after every request (empty for unsharded engines)
-    per_shard: list = dataclasses.field(default_factory=list)
-    # continuous batching (serving.batcher): admission / queue / flush
-    # observability for the async coalescing loop
-    submitted: int = 0          # queries admitted through submit()
-    shed: int = 0               # queries rejected by the backpressure gate
-    admission_waits: int = 0    # submit() calls that blocked on the gate
-    full_flushes: int = 0       # groups dispatched because they filled
-    deadline_flushes: int = 0   # groups dispatched by max_wait_ms expiry
-    forced_flushes: int = 0     # groups dispatched by flush()/close()
-    requeued_batches: int = 0   # groups re-routed after a generation swap
-    queue_depth: int = 0        # live gauge: queries waiting to dispatch
-    queue_depth_peak: int = 0
-    pipeline_peak: int = 0      # max groups concurrently in flight
+class ServeStats(obs.StatsView):
+    """Server-level counters: a registry-backed view (DESIGN.md §12).
+
+    Field names and mutation idioms (``+=``, direct assignment) are the
+    dataclass-era public surface; storage is labeled series in the
+    metrics registry (one unique ``srv`` row per server instance), so
+    exports reproduce these numbers from the same source.
+    """
+
+    _COUNTERS = {
+        "batches": ("serve_batches_total", int),
+        "queries": ("serve_queries_total", int),
+        "seconds": ("serve_seconds_total", float),
+        # adaptive serving: generation changes observed / stale finishes
+        "swaps": ("serve_swaps_total", int),
+        "stale_batches": ("serve_stale_batches_total", int),
+        # continuous batching (serving.batcher): admission / queue / flush
+        "submitted": ("serve_submitted_total", int),
+        "shed": ("serve_shed_total", int),
+        "admission_waits": ("serve_admission_waits_total", int),
+        "full_flushes": ("serve_full_flushes_total", int),
+        "deadline_flushes": ("serve_deadline_flushes_total", int),
+        "forced_flushes": ("serve_forced_flushes_total", int),
+        "requeued_batches": ("serve_requeued_batches_total", int),
+    }
+    _GAUGES = {
+        # generation the last request was served on; per_bucket is reset
+        # whenever a new generation is first served — bucket ids/widths
+        # are meaningless across artifact generations
+        "generation": ("serve_generation", int),
+        "queue_depth": ("serve_queue_depth", int),
+        "queue_depth_peak": ("serve_queue_depth_peak", int),
+        "pipeline_peak": ("serve_pipeline_peak", int),
+    }
+
+    def __init__(self, registry=None, labels=None):
+        lbl = dict(labels or {})
+        lbl.setdefault("srv", obs.next_instance_id("s"))
+        self._bind(registry, lbl, row_prefix="s")
+        self.per_bucket: dict = {}
+        # sharded serving (repro.sharding): per-shard ShardStats rows,
+        # refreshed from the engine after every request
+        self.per_shard: list = []
 
     @property
     def us_per_query(self) -> float:
@@ -118,7 +149,7 @@ class PathServer:
 
     def __init__(self, index, batch_size: int = 256,
                  use_kernels: bool = False, mesh=None, batch_sharding=None,
-                 recorder=None):
+                 recorder=None, telemetry=None):
         if isinstance(index, QueryEngine):
             if use_kernels and not getattr(index, "use_kernels", False):
                 raise ValueError("use_kernels=True conflicts with the given "
@@ -130,7 +161,15 @@ class PathServer:
                 index, backend="pallas" if use_kernels else "jnp")
         self.index = getattr(self.engine, "index", None)
         self.batch_size = batch_size
-        self.stats = ServeStats()
+        # telemetry: spans + events + the registry the stats views bind to
+        # (DESIGN.md §12).  Default is head-sampled tracing over the
+        # process-wide registry; pass obs.Telemetry.off() to disable
+        # span/event recording (registry stays on — it IS the stats).
+        self.telemetry = obs.Telemetry() if telemetry is None else telemetry
+        self.stats = ServeStats(registry=self.telemetry.registry)
+        bind = getattr(self.engine, "bind_telemetry", None)
+        if bind is not None:
+            bind(self.telemetry)
         self._sharding = batch_sharding
         # adaptive serving: every answered query's endpoints feed the live
         # workload histogram (repro.indexing.WorkloadRecorder)
@@ -197,10 +236,13 @@ class PathServer:
     def _bucket_stats(self, bucket: int, eng) -> BucketStats:
         if bucket not in self.stats.per_bucket:
             width = getattr(eng, "bucket_width", lambda b: 0)(bucket)
-            self.stats.per_bucket[bucket] = BucketStats(width=width)
+            self.stats.per_bucket[bucket] = BucketStats(
+                width=width, registry=self.stats.registry,
+                labels={"srv": self.stats.labels["srv"], "bucket": bucket,
+                        "gen": getattr(eng, "generation", 0)})
         return self.stats.per_bucket[bucket]
 
-    def _dispatch(self, s, t, want_argmin: bool):
+    def _dispatch(self, s, t, want_argmin: bool, trace=None):
         """Bucket-route N requests through fixed-shape batches; scatter back.
 
         Sort by dispatch bucket (stable), answer each bucket's sub-batches
@@ -227,7 +269,11 @@ class PathServer:
                 self.stats.swaps += max(0, gen0 - self.stats.generation)
                 self.stats.per_bucket = {}
             pad = getattr(eng, "static_shapes", True)
+            t_route = time.perf_counter()
             buckets = eng.buckets_of(s, t) if n else np.zeros(0, np.int32)
+            if trace is not None:
+                trace.stage("route", time.perf_counter() - t_route)
+            t_batches = time.perf_counter()
             outs = empty_results(n, want_argmin)
             for k in np.unique(buckets):
                 idxs = np.nonzero(buckets == k)[0]
@@ -258,6 +304,9 @@ class PathServer:
                     self.stats.batches += 1
                 bstats.queries += len(idxs)
                 bstats.seconds += time.perf_counter() - tb0
+            if trace is not None:
+                trace.stage("dispatch", time.perf_counter() - t_batches)
+                trace.attrs["generation"] = gen0
             shard_stats = getattr(eng, "shard_stats", None)
             if shard_stats is not None:
                 self.stats.per_shard = shard_stats()
@@ -270,14 +319,45 @@ class PathServer:
             self._recorder.record(s, t)
         return outs
 
+    def _sync_trace(self, n: int, argmin: bool):
+        """Head-sample a sync-path trace (None = not sampled)."""
+        if not self.telemetry.sampler.sample():
+            return None
+        return obs.Trace("sync", n=n, argmin=argmin,
+                         srv=self.stats.labels["srv"])
+
+    def _close_sync(self, trace, t0: float, t1: float) -> None:
+        """Close a sync span tree: fill missing stages with 0, let
+        ``reply`` absorb the unattributed remainder (scatter + stats
+        bookkeeping) so the stage sum telescopes to e2e exactly."""
+        tel = self.telemetry
+        e2e = t1 - t0
+        tel.registry.histogram("sync_batch_ms",
+                               **self.stats.labels).record(e2e * 1e3)
+        if trace is None:
+            if not tel.sampler.slow(e2e):
+                return
+            # slow-path override without head sampling: a coarse trace
+            # (no per-stage stamps were taken) still lands in the ring
+            trace = obs.Trace("sync", coarse=True, n=0,
+                              srv=self.stats.labels["srv"])
+            trace.stage("dispatch", e2e)
+        for st in obs.SYNC_STAGES:
+            trace.stages.setdefault(st, 0.0)
+        trace.stage("reply", max(0.0, e2e - trace.stage_sum))
+        tel.spans.add(trace.close(t0, t1))
+
     def query(self, s: np.ndarray, t: np.ndarray) -> np.ndarray:
         """Answer N distance requests (any N), bucket-routed."""
         t0 = time.perf_counter()
+        trace = self._sync_trace(len(s), argmin=False)
         out = self._dispatch(np.asarray(s, np.float32),
                              np.asarray(t, np.float32),
-                             want_argmin=False)[0]
-        self.stats.seconds += time.perf_counter() - t0
+                             want_argmin=False, trace=trace)[0]
+        t1 = time.perf_counter()
+        self.stats.seconds += t1 - t0
         self.stats.queries += len(out)
+        self._close_sync(trace, t0, t1)
         return out
 
     def query_paths(self, s: np.ndarray, t: np.ndarray, host_index=None
@@ -304,7 +384,10 @@ class PathServer:
             raise ValueError("query_paths on a device engine needs the host "
                              "EHLIndex for label unwinding")
         t0 = time.perf_counter()
-        d, covis, via_s, hub, via_t = self._dispatch(s, t, want_argmin=True)
+        trace = self._sync_trace(len(s), argmin=True)
+        d, covis, via_s, hub, via_t = self._dispatch(s, t, want_argmin=True,
+                                                     trace=trace)
+        t_unwind = time.perf_counter()
         paths = []
         for i in range(len(s)):
             if covis[i]:
@@ -315,8 +398,12 @@ class PathServer:
                 paths.append(unwind_path(host_index, s[i], t[i],
                                          int(via_s[i]), int(hub[i]),
                                          int(via_t[i])))
-        self.stats.seconds += time.perf_counter() - t0
+        t1 = time.perf_counter()
+        if trace is not None:
+            trace.stage("unwind", t1 - t_unwind)
+        self.stats.seconds += t1 - t0
         self.stats.queries += len(s)
+        self._close_sync(trace, t0, t1)
         return d, paths
 
 

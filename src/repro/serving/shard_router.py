@@ -36,12 +36,14 @@ compiles, so answers are bitwise-identical to the unsharded
 from __future__ import annotations
 
 import dataclasses
+import time
 
 import numpy as np
 
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core.packed import (covis_blocked, dequant_masked_labels,
                                gather_masked_exact, gather_masked_labels,
                                gather_quant_rows, join_masked)
@@ -104,6 +106,12 @@ class ShardRouter:
         self._rects = np.asarray(sharded.shard_rects, np.float64)
         self._covis_slack = 1e-3 * float(
             max(self.sharded.shards[0].width, self.sharded.shards[0].height))
+        # cross-shard traffic attribution (DESIGN.md §12): per-router
+        # labeled series in the process-wide registry — one stage-phase
+        # wall-time histogram plus wire-row counters per (src, dst) pair
+        self._obs_labels = {"router": obs.next_instance_id("r")}
+        self._stage_ms = obs.REGISTRY.histogram("router_stage_ms",
+                                                **self._obs_labels)
 
     # ------------------------------------------------------------- routing
     def _cells(self, pts: np.ndarray) -> np.ndarray:
@@ -199,6 +207,7 @@ class ShardRouter:
         verdicts — all asynchronously.  Nothing here blocks, so a staged
         group can overlap an in-flight group's join.
         """
+        t_stage0 = time.perf_counter()
         i, j, W = self.decode_key(key)
         s = np.asarray(s, np.float32)
         t = np.asarray(t, np.float32)
@@ -241,6 +250,13 @@ class ShardRouter:
                 masked_t = jax.device_put(masked_t, dev)
         parts = self.covis_shards(s, t) or [i]
         covis = self._covis(s_at, t_at, parts, i)
+        if i != j:
+            # wire-row attribution: [B, W] t-side rows shipped j -> i
+            obs.REGISTRY.counter(
+                "router_wire_rows_total", src=j, dst=i,
+                wire="quant" if self.quantized else "f32",
+                **self._obs_labels).inc(len(s) * W)
+        self._stage_ms.record((time.perf_counter() - t_stage0) * 1e3)
         return StagedGroup(key=int(key), i=i, j=j, parts=parts,
                            masked_s=masked_s, masked_t=masked_t,
                            covis=covis, s_dev=s_at(i), t_dev=t_at(i))

@@ -16,13 +16,13 @@ shard set alive until it drains; no mixed-generation batch is expressible.
 
 from __future__ import annotations
 
-import dataclasses
 import time
 
 import numpy as np
 
 import jax
 
+from repro import obs
 from repro.core.grid import EHLIndex
 from repro.core.packed import LAYOUT_F32, splice_rescue
 from repro.serving.query_engine import QueryEngine
@@ -31,21 +31,42 @@ from repro.serving.shard_router import ShardRouter
 from .planner import ShardedIndex, ShardPlanner
 
 
-@dataclasses.dataclass
-class ShardStats:
-    """Per-shard serving + occupancy counters (surfaced via ``ServeStats``)."""
-    shard: int
-    device: str
-    regions: int
-    device_bytes: int
-    used_slots: int             # label slots holding real labels
-    total_slots: int            # label slots allocated (slab area)
-    batches: int = 0            # sub-batches joined on this shard
-    slots: int = 0              # query slots dispatched here (incl. padding)
-    seconds: float = 0.0
-    gathers_out: int = 0        # label rows gathered here for another shard
-    covis_assists: int = 0      # covis verdicts computed here for another
-    #   shard's join (distributed s->t visibility over clipped edges, §10)
+class ShardStats(obs.StatsView):
+    """Per-shard serving + occupancy counters (surfaced via ``ServeStats``).
+
+    Registry-backed view (DESIGN.md §12): traffic counters are labeled
+    series keyed by engine instance + shard, so per-shard series appear
+    in the Prometheus export and survive the view object itself."""
+
+    _COUNTERS = {
+        "batches": ("shard_batches_total", int),   # sub-batches joined here
+        # query slots dispatched here (incl. padding)
+        "slots": ("shard_slots_total", int),
+        "seconds": ("shard_seconds_total", float),
+        # label rows gathered here for another shard
+        "gathers_out": ("shard_gathers_out_total", int),
+        # covis verdicts computed here for another shard's join
+        # (distributed s->t visibility over clipped edges, §10)
+        "covis_assists": ("shard_covis_assists_total", int),
+    }
+
+    def __init__(self, shard: int, device: str, regions: int,
+                 device_bytes: int, used_slots: int, total_slots: int,
+                 registry=None, labels=None):
+        self.shard = shard
+        self.device = device
+        self.regions = regions
+        self.device_bytes = device_bytes
+        self.used_slots = used_slots    # label slots holding real labels
+        self.total_slots = total_slots  # label slots allocated (slab area)
+        lbl = dict(labels or {})
+        lbl.setdefault("shard", shard)
+        self._bind(registry, lbl, row_prefix="sh")
+        for name, v in (("shard_regions", regions),
+                        ("shard_device_bytes", device_bytes),
+                        ("shard_used_slots", used_slots),
+                        ("shard_total_slots", total_slots)):
+            self.registry.gauge(name, **self.labels).set(v)
 
     @property
     def occupancy(self) -> float:
@@ -92,14 +113,23 @@ class ShardedQueryEngine(QueryEngine):
         self.index = index
         self.use_kernels = use_kernels
         self.router = ShardRouter(index, mesh=mesh, use_kernels=use_kernels)
+        self._telemetry = None      # bound by PathServer / IndexManager
+        eng_id = obs.next_instance_id("e")
         self._stats = [
             ShardStats(
                 shard=k, device=str(dev), regions=bx.num_regions,
                 device_bytes=bx.device_bytes(),
                 used_slots=bx.label_slots()[0],
-                total_slots=bx.label_slots()[1])
+                total_slots=bx.label_slots()[1],
+                labels={"eng": eng_id, "shard": k})
             for k, (bx, dev) in enumerate(zip(index.shards,
                                               self.router.devices))]
+
+    def bind_telemetry(self, telemetry) -> None:
+        """Attach an event sink (cross-shard covis-assist events); the
+        metrics registry is process-wide, so per-shard series are already
+        exported without binding."""
+        self._telemetry = telemetry
 
     # ------------------------------------------------- QueryEngine protocol
     @property
@@ -122,9 +152,12 @@ class ShardedQueryEngine(QueryEngine):
         st.slots += n
         if staged.j != staged.i:
             self._stats[staged.j].gathers_out += n
-        for k in staged.parts:
-            if k != staged.i:
-                self._stats[k].covis_assists += n
+        assists = [k for k in staged.parts if k != staged.i]
+        for k in assists:
+            self._stats[k].covis_assists += n
+        if assists and self._telemetry is not None:
+            self._telemetry.events.emit("covis_assist", home=staged.i,
+                                        helpers=assists, n=n)
 
     def _finish_argmin(self, staged, res6) -> tuple:
         """Quantized argmin epilogue: rescue ambiguous-margin rows against
