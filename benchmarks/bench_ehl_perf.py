@@ -23,7 +23,6 @@ from __future__ import annotations
 
 import json
 import os
-import time
 
 import numpy as np
 import jax
@@ -41,12 +40,8 @@ V5E_HBM = 819e9
 
 def _timeit(fn, *args, reps=5):
     jax.block_until_ready(fn(*args))
-    best = np.inf
-    for _ in range(reps):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn(*args))
-        best = min(best, time.perf_counter() - t0)
-    return best
+    return common.best_seconds(
+        lambda: jax.block_until_ready(fn(*args)), reps=reps)
 
 
 def _hubdense_query(idx, num_hubs):

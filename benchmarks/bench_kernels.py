@@ -10,8 +10,6 @@ for the derivation and the hillclimb on these terms).
 
 from __future__ import annotations
 
-import time
-
 import numpy as np
 import jax
 import jax.numpy as jnp
@@ -27,12 +25,8 @@ V5E_HBM = 819e9
 def _time(fn, *args, reps=5):
     fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
         jax.block_until_ready(fn(*args))
-    best = np.inf
-    for _ in range(reps):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn(*args))
-        best = min(best, time.perf_counter() - t0)
-    return best
+    return common.best_seconds(
+        lambda: jax.block_until_ready(fn(*args)), reps=reps)
 
 
 def run(quick=False):

@@ -23,7 +23,6 @@ from __future__ import annotations
 
 import json
 import os
-import time
 
 import numpy as np
 import jax
@@ -55,12 +54,8 @@ def _segments(scene, n: int, seed: int):
 
 
 def _best_us(fn, reps: int = 5) -> float:
-    best = np.inf
-    for _ in range(reps):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn())
-        best = min(best, time.perf_counter() - t0)
-    return best * 1e6
+    return common.best_seconds(
+        lambda: jax.block_until_ready(fn()), reps=reps) * 1e6
 
 
 def run(maps=MAPS, n_segments: int = 2048, quick: bool = False):

@@ -139,6 +139,18 @@ def _rate_async(srv, s, t, arrivals, max_wait_ms: float, swap_fn=None):
 def run(map_name: str = "rooms-M", budget: float = 0.3,
         batch_size: int = 64, quick: bool = False):
     """Returns (csv rows, gate-failure strings)."""
+    # Compile/cost capture must be live before the FIRST warmup: the pjit
+    # cache is process-wide, so every cold compile in this bench happens
+    # exactly once — at srv_ref.warmup() below.  The capture gets its own
+    # registry so its series don't dilute the overhead-gate registries.
+    prof = obs.enable_profile(registry=obs.MetricsRegistry())
+    try:
+        return _run(map_name, budget, batch_size, quick, prof)
+    finally:
+        obs.disable_profile()
+
+
+def _run(map_name, budget, batch_size, quick, prof):
     n = 600 if quick else 2000
     wait_ms = 5.0
     min_ratio = 1.15 if quick else 1.5
@@ -237,6 +249,34 @@ def run(map_name: str = "rooms-M", budget: float = 0.3,
     p50_off, p95_off, p99_off = _pcts3(lat_off)
     p50_on, p95_on, p99_on = _pcts3(lat_on)
 
+    # ---- profile-capture overhead gate (DESIGN.md §13) ------------------
+    # Same servers, steady state (everything compiled long ago): with the
+    # capture installed every dispatch goes through the profiler wrapper
+    # (thread-local trace check + stopwatch); with it disabled the wrapper
+    # short-circuits to the bare jit callable.  Interleaved best-of-3
+    # capacity + an open-loop replay for p99 at equal offered load.
+    cap_pon = cap_poff = 0.0
+    for _ in range(3):
+        obs.disable_profile()
+        cap_poff = max(cap_poff, _burst_async(srv_off, s, t, wait_ms))
+        obs.enable_profile(capture=prof)
+        cap_pon = max(cap_pon, _burst_async(srv_off, s, t, wait_ms))
+    ratio_prof = cap_pon / cap_poff
+    obs.disable_profile()
+    _, lat_poff, _ = _rate_async(srv_off, s, t, arrivals, wait_ms)
+    obs.enable_profile(capture=prof)
+    _, lat_pon, _ = _rate_async(srv_off, s, t, arrivals, wait_ms)
+    _, _, p99_poff = _pcts3(lat_poff)
+    _, _, p99_pon = _pcts3(lat_pon)
+    compiles = prof.summary()
+    compile_s = sum(r["compile_s"] for r in compiles.values())
+    rows.append(common.emit(
+        f"serving/{map_name}/profile_overhead", 0.0,
+        f"qps_on={cap_pon:.0f};qps_off={cap_poff:.0f};"
+        f"ratio={ratio_prof:.3f};p99_on={p99_pon:.1f};"
+        f"p99_off={p99_poff:.1f};entries={len(compiles)};"
+        f"compile_s={compile_s:.2f}"))
+
     # span attribution: telescoping stages must reproduce e2e (<= 5% gap)
     spans = tel_on.spans.traces("async")
     gaps = [abs(tr.e2e_seconds - tr.stage_sum) / tr.e2e_seconds
@@ -257,6 +297,17 @@ def run(map_name: str = "rooms-M", budget: float = 0.3,
         failures.append(
             f"telemetry overhead: p99 {p99_on:.1f}ms vs disabled "
             f"{p99_off:.1f}ms (> 1.25x + 2ms band)")
+    if ratio_prof < 0.97:
+        failures.append(
+            f"profile capture: qps {cap_pon:.0f} is {ratio_prof:.3f}x of "
+            f"capture-off {cap_poff:.0f} (< 0.97x gate)")
+    if p99_pon > 1.25 * p99_poff + 2.0:
+        failures.append(
+            f"profile capture: p99 {p99_pon:.1f}ms vs capture-off "
+            f"{p99_poff:.1f}ms (> 1.25x + 2ms band)")
+    if not compiles:
+        failures.append("profile capture recorded no compiles "
+                        "(was it enabled before the first warmup?)")
     if not spans:
         failures.append("head sampling produced no async spans")
     elif span_gap > 0.05:
@@ -299,6 +350,10 @@ def run(map_name: str = "rooms-M", budget: float = 0.3,
                       p50_off_ms=p50_off, p95_off_ms=p95_off,
                       p99_off_ms=p99_off, spans=len(spans),
                       span_gap=span_gap),
+                  profile_overhead=dict(
+                      qps_on=cap_pon, qps_off=cap_poff, ratio=ratio_prof,
+                      p99_on_ms=p99_pon, p99_off_ms=p99_poff,
+                      compile_s=compile_s, compiles=compiles),
                   ratio=ratio, identical=identical, failures=failures))
     return rows, failures
 

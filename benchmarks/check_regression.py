@@ -1,0 +1,116 @@
+"""Bench regression gate — current run vs the committed history baseline.
+
+``common.write_bench_json`` appends every bench run to
+``artifacts/history/`` keyed by git sha.  This checker compares the
+*current* ``BENCH_<name>.json`` against the most recent history entry
+from a **different** commit with the **same config** (map / n / batch
+size / budget — throughput at unequal config is not comparable) and
+fails on:
+
+* qps drop  > ``--max-qps-drop``   (default 10%);
+* p99 inflation past ``p99_factor * baseline + p99_slack_ms``
+  (default 1.25x + 2ms — the same shape as the serving overhead gate,
+  with absolute slack so a 0.1ms baseline can't fail on noise).
+
+No baseline (first run at a config, empty history) passes with a note —
+the gate bites from the second commit onward, which is exactly when a
+regression *can* exist.
+
+    PYTHONPATH=src python -m benchmarks.check_regression serving
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+from . import common
+
+#: data[] keys that must match for two runs to be comparable.
+CONFIG_KEYS = ("map", "n", "batch_size", "budget_frac", "smoke")
+
+
+def config_of(rec: dict) -> dict:
+    data = rec.get("data") or {}
+    return {k: data.get(k) for k in CONFIG_KEYS}
+
+
+def find_baseline(current: dict, history: list) -> dict | None:
+    """Newest history entry from another commit at the same config."""
+    want = config_of(current)
+    sha = current.get("git_sha")
+    for rec in reversed(history):               # newest first
+        if rec.get("git_sha") != sha and config_of(rec) == want:
+            return rec
+    return None
+
+
+def check(name: str, *, max_qps_drop: float = 0.10,
+          p99_factor: float = 1.25, p99_slack_ms: float = 2.0,
+          out_dir: str = None, current: dict = None) -> list:
+    """Returns failure strings (empty == gate passes); prints a verdict
+    line per compared metric."""
+    out_dir = common.ARTIFACTS if out_dir is None else out_dir
+    if current is None:
+        path = os.path.join(out_dir, f"BENCH_{name}.json")
+        if not os.path.exists(path):
+            return [f"no current artifact {path} — run the bench first"]
+        with open(path) as f:
+            current = json.load(f)
+    base = find_baseline(current, common.load_history(name,
+                                                      out_dir=out_dir))
+    if base is None:
+        print(f"regression[{name}]: no same-config baseline from another "
+              "commit in history — first run at this config, gate passes")
+        return []
+    print(f"regression[{name}]: baseline sha "
+          f"{base.get('git_sha', '?')[:12]} vs current "
+          f"{current.get('git_sha', '?')[:12]}")
+    failures = []
+    q_cur, q_base = current.get("qps"), base.get("qps")
+    if q_cur is not None and q_base:
+        floor = (1.0 - max_qps_drop) * q_base
+        verdict = "OK" if q_cur >= floor else "FAIL"
+        print(f"  qps {q_cur:.0f} vs baseline {q_base:.0f} "
+              f"(floor {floor:.0f}): {verdict}")
+        if q_cur < floor:
+            failures.append(
+                f"{name}: qps {q_cur:.0f} dropped more than "
+                f"{max_qps_drop:.0%} below baseline {q_base:.0f}")
+    p_cur, p_base = current.get("p99_ms"), base.get("p99_ms")
+    if p_cur is not None and p_base is not None:
+        ceil = p99_factor * p_base + p99_slack_ms
+        verdict = "OK" if p_cur <= ceil else "FAIL"
+        print(f"  p99 {p_cur:.2f}ms vs baseline {p_base:.2f}ms "
+              f"(ceiling {ceil:.2f}ms): {verdict}")
+        if p_cur > ceil:
+            failures.append(
+                f"{name}: p99 {p_cur:.2f}ms inflated past "
+                f"{p99_factor:.2f}x baseline {p_base:.2f}ms + "
+                f"{p99_slack_ms:.1f}ms")
+    return failures
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("names", nargs="*", default=["serving"],
+                    help="bench names to check (default: serving)")
+    ap.add_argument("--max-qps-drop", type=float, default=0.10)
+    ap.add_argument("--p99-factor", type=float, default=1.25)
+    ap.add_argument("--p99-slack-ms", type=float, default=2.0)
+    args = ap.parse_args(argv)
+    failures = []
+    for name in (args.names or ["serving"]):
+        failures += check(name, max_qps_drop=args.max_qps_drop,
+                          p99_factor=args.p99_factor,
+                          p99_slack_ms=args.p99_slack_ms)
+    if failures:
+        print("BENCH REGRESSION GATE FAILED:\n  " + "\n  ".join(failures))
+        sys.exit(1)
+    print("bench regression gate OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -164,6 +164,20 @@ def query_sets(ctx: SuiteContext, n: int = 400, seed: int = 1):
     return out
 
 
+def best_seconds(fn, *args, reps: int = 5) -> float:
+    """Best-of-``reps`` wall seconds for ``fn(*args)`` on the shared
+    monotonic clock (``repro.obs.timing.Stopwatch``) — the one timer every
+    bench reports through, so kernel/serving/attribution numbers are
+    comparable run to run."""
+    from repro.obs import Stopwatch
+    best = np.inf
+    for _ in range(reps):
+        with Stopwatch() as sw:
+            fn(*args)
+        best = min(best, sw.seconds)
+    return float(best)
+
+
 def time_queries(index, qs, batch_size: int = 256, reps: int = 3,
                  use_kernels: bool = False) -> float:
     """Mean us/query through the batched JAX engine (packed index)."""
@@ -228,12 +242,19 @@ def write_bench_json(name: str, *, qps: float = None, p50_ms: float = None,
     ``registry`` (a ``repro.obs.MetricsRegistry``) is snapshotted so the
     artifact carries the full metric state the numbers were derived from;
     ``data`` holds bench-specific detail under one key, never at top level.
+
+    Every write also appends a sha-keyed copy under ``history/``
+    (``BENCH_<name>_<sha12>.json``) — the bench *trajectory* the trend
+    table and the CI regression gate read.  Re-running at the same
+    commit overwrites that commit's entry (one snapshot per sha), so
+    iterating locally never pollutes the history.
     """
     out_dir = ARTIFACTS if out_dir is None else out_dir
     rec = {
         "name": name,
         "schema_version": BENCH_SCHEMA_VERSION,
         "git_sha": git_sha(),
+        "written_at": time.time(),
         "qps": qps,
         "p50_ms": p50_ms,
         "p95_ms": p95_ms,
@@ -246,4 +267,39 @@ def write_bench_json(name: str, *, qps: float = None, p50_ms: float = None,
     path = os.path.join(out_dir, f"BENCH_{name}.json")
     with open(path, "w") as f:
         json.dump(rec, f, indent=1)
+    hist_dir = os.path.join(out_dir, "history")
+    os.makedirs(hist_dir, exist_ok=True)
+    sha12 = rec["git_sha"][:12] if rec["git_sha"] != "unknown" else "unknown"
+    with open(os.path.join(hist_dir, f"BENCH_{name}_{sha12}.json"),
+              "w") as f:
+        json.dump(rec, f, indent=1)
     return path
+
+
+def load_history(name: str, out_dir: str = None) -> list:
+    """All history snapshots for bench ``name``, oldest first.
+
+    Ordered by ``written_at`` (entries from schema v1 files without the
+    stamp sort first, by file mtime).
+    """
+    out_dir = ARTIFACTS if out_dir is None else out_dir
+    hist_dir = os.path.join(out_dir, "history")
+    if not os.path.isdir(hist_dir):
+        return []
+    entries = []
+    for fname in sorted(os.listdir(hist_dir)):
+        if not (fname.startswith(f"BENCH_{name}_")
+                and fname.endswith(".json")):
+            continue
+        path = os.path.join(hist_dir, fname)
+        try:
+            with open(path) as f:
+                rec = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            continue
+        if rec.get("name") != name:
+            continue
+        rec.setdefault("written_at", os.path.getmtime(path))
+        entries.append(rec)
+    entries.sort(key=lambda r: r["written_at"])
+    return entries

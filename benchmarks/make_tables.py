@@ -1,13 +1,16 @@
 """Assemble the generated tables into EXPERIMENTS.md §5.
 
-    PYTHONPATH=src python -m benchmarks.make_tables
+    PYTHONPATH=src python -m benchmarks.make_tables            # rewrite §5
+    PYTHONPATH=src python -m benchmarks.make_tables --trend    # history view
 """
 
 from __future__ import annotations
 
+import argparse
 import glob
 import json
 import os
+import time
 
 HERE = os.path.dirname(os.path.abspath(__file__))
 EXP = os.path.join(HERE, "..", "EXPERIMENTS.md")
@@ -169,6 +172,19 @@ def telemetry_table() -> str:
         f"{t['p99_on_ms']:.1f} | {t['p99_off_ms']:.1f} | {t['spans']} | "
         f"{t['span_gap']:.2%} |",
     ]
+    p = d["data"].get("profile_overhead")
+    if p:
+        rows += [
+            "",
+            "| profile capture qps | capture-off qps | ratio (gate >= "
+            "0.97) | p99 on ms | p99 off ms | entries compiled | compile "
+            "s |",
+            "|---|---|---|---|---|---|---|",
+            f"| {p['qps_on']:.0f} | {p['qps_off']:.0f} | "
+            f"{p['ratio']:.3f}x | {p['p99_on_ms']:.1f} | "
+            f"{p['p99_off_ms']:.1f} | {len(p.get('compiles', {}))} | "
+            f"{p['compile_s']:.2f} |",
+        ]
     rows.append(
         f"\n({d['data']['map']}, n={d['data']['n']}, batch "
         f"{d['data']['batch_size']}; head sampling at the production "
@@ -176,11 +192,97 @@ def telemetry_table() -> str:
         "records in both (it backs ServeStats), so the delta isolates "
         "span + event cost.  Span stages telescope over the batcher's own "
         "timestamps, so the attribution gap is float rounding, not "
-        "measurement error.)")
+        "measurement error.  The profile rows gate the DESIGN.md §13 "
+        "compile/cost capture: steady-state dispatch only pays the wrapper "
+        "check, compile + cost_analysis time lands at trace time.)")
     return head + "\n" + "\n".join(rows)
 
 
-def main():
+def attribution_table() -> str:
+    """Measured vs analytic kernel attribution (bench_attribution)."""
+    path = os.path.join(HERE, "artifacts", "BENCH_attribution.json")
+    head = ("### Roofline reconciliation (DESIGN.md §13, measured vs "
+            "analytic)\n")
+    if not os.path.exists(path):
+        return head + "\n(run `python -m benchmarks.bench_attribution`)"
+    d = json.load(open(path))
+    band = d["data"]["band"]
+    rows = [
+        "| family | size | term | measured ms | predicted ms | "
+        "meas/pred | gated | HLO/term flops |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in d["data"]["rows"]:
+        ratio = (f"{r['ratio']:.2f} [cal]" if r["calibration"]
+                 else f"{r['ratio']:.2f}"
+                 + ("" if r["in_band"] else " **OUT**"))
+        hlo = (f"{r['hlo_ratio']:.2f}" if "hlo_ratio" in r else "—")
+        rows.append(
+            f"| {r['family']} | {r['size']} | {r['term']:.3g} | "
+            f"{r['measured_s'] * 1e3:.2f} | {r['predicted_s'] * 1e3:.2f} | "
+            f"{ratio} | {'yes' if r['gated'] else 'no'} | {hlo} |")
+    rows.append(
+        f"\n(Acceptance band {band[0]}–{band[1]} on measured/predicted; "
+        "each family calibrates its rate on the first row and predicts "
+        "the rest from the analytic term alone, so the ratio tests the "
+        "term's *scaling*, not an absolute CPU rate.  HLO/term compares "
+        "the analytic flop count against XLA `cost_analysis()` — see "
+        "DESIGN.md §13 for the while-loop single-count caveat that "
+        "restricts this column to loop-free kernels.)")
+    return head + "\n" + "\n".join(rows)
+
+
+def trend_table(names=("serving", "harness", "attribution")) -> str:
+    """Sha-keyed bench history (common.load_history)."""
+    from . import common
+    out = ["### Bench history (sha-keyed, oldest first)"]
+    for name in names:
+        hist = common.load_history(name)
+        if not hist:
+            continue
+        out += [
+            "",
+            f"**{name}**",
+            "",
+            "| sha | written | qps | p50 ms | p99 ms | note |",
+            "|---|---|---|---|---|---|",
+        ]
+        for rec in hist:
+            when = time.strftime("%Y-%m-%d %H:%M",
+                                 time.localtime(rec["written_at"]))
+            qps = f"{rec['qps']:.0f}" if rec.get("qps") else "—"
+            p50 = (f"{rec['p50_ms']:.2f}" if rec.get("p50_ms") is not None
+                   else "—")
+            p99 = (f"{rec['p99_ms']:.2f}" if rec.get("p99_ms") is not None
+                   else "—")
+            data = rec.get("data") or {}
+            if name == "attribution":
+                n_rows = len(data.get("rows", []))
+                note = (f"{n_rows} rows, "
+                        f"{len(data.get('failures', []))} out-of-band")
+            elif "n" in data:
+                note = f"n={data['n']}"
+                if data.get("smoke"):
+                    note += " (smoke)"
+            else:                       # harness: csv row dump
+                note = (f"{len(data.get('rows', []))} rows, "
+                        f"{float(data.get('total_s', 0)):.0f}s")
+            out.append(f"| {str(rec.get('git_sha', '?'))[:12]} | {when} | "
+                       f"{qps} | {p50} | {p99} | {note} |")
+    if len(out) == 1:
+        out.append("\n(no history yet — benches append on every run)")
+    return "\n".join(out)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--trend", action="store_true",
+                    help="print the sha-keyed bench history view and exit "
+                         "(does not rewrite EXPERIMENTS.md)")
+    args = ap.parse_args(argv)
+    if args.trend:
+        print(trend_table())
+        return
     if os.path.exists(EXP):
         text = open(EXP).read()
     else:
@@ -191,7 +293,8 @@ def main():
     out = (base + MARK + "\n\n" + roofline_table() + "\n\n"
            + dryrun_table() + "\n\n" + adaptive_table() + "\n\n"
            + sharded_table() + "\n\n" + segvis_grid_table() + "\n\n"
-           + quantized_table() + "\n\n" + telemetry_table() + "\n")
+           + quantized_table() + "\n\n" + telemetry_table() + "\n\n"
+           + attribution_table() + "\n\n" + trend_table() + "\n")
     open(EXP, "w").write(out)
     print(f"EXPERIMENTS.md updated "
           f"({len(out.splitlines())} lines)")

@@ -123,6 +123,12 @@ def main():
                     help="[metrics] output directory")
     args = ap.parse_args()
     backend = "pallas" if args.kernels else args.backend
+    if args.metrics:
+        # compile/cost attribution (DESIGN.md §13) rides along with the
+        # telemetry export; it must be enabled before the FIRST warmup —
+        # the pjit cache is process-wide, so every cold compile happens
+        # exactly once, and a capture installed later sees none of them
+        obs.enable_profile()
     if args.adaptive:
         return run_adaptive(args, backend)
     if args.shards > 1:
@@ -352,8 +358,12 @@ def dump_metrics(args, telemetry, *, expect_shards: int = 0,
 
     * the Prometheus text must round-trip through ``parse_prometheus``;
     * ``serve_queries_total`` must be present with a nonzero sum;
+    * compile/cost attribution series (``jit_compiles_total`` +
+      ``jit_cost_flops_total``, DESIGN.md §13) must be present — the
+      capture is enabled with ``--metrics`` before the first warmup;
     * sharded runs must export per-shard series for every shard id;
-    * adaptive runs must have logged >= ``expect_swaps`` swap events.
+    * adaptive runs must have logged >= ``expect_swaps`` swap events and
+      exported build-pipeline stage spans (``build_stage_ms``).
     """
     out = os.path.abspath(args.metrics_dir)
     os.makedirs(out, exist_ok=True)
@@ -373,6 +383,13 @@ def dump_metrics(args, telemetry, *, expect_shards: int = 0,
     served = sum(parsed.get("serve_queries_total", {}).values())
     if served <= 0:
         failures.append("metrics: no serve_queries_total series exported")
+    compiles = sum(parsed.get("jit_compiles_total", {}).values())
+    if compiles <= 0:
+        failures.append("metrics: no jit_compiles_total series exported "
+                        "(profile capture not live before first warmup?)")
+    if sum(parsed.get("jit_cost_flops_total", {}).values()) <= 0:
+        failures.append("metrics: no jit_cost_flops_total series "
+                        "(cost_analysis capture produced nothing)")
     if expect_shards > 0:
         shards = {dict(k).get("shard")
                   for k in parsed.get("shard_slots_total", {})}
@@ -385,8 +402,19 @@ def dump_metrics(args, telemetry, *, expect_shards: int = 0,
         if swaps < expect_swaps:
             failures.append(f"metrics: {swaps} swap events in the log, "
                             f"expected >= {expect_swaps}")
+        builds = sum(parsed.get("builds_total", {}).values())
+        if builds < expect_swaps:
+            failures.append(f"metrics: {builds:.0f} builds_total, "
+                            f"expected >= {expect_swaps}")
+        if sum(parsed.get("build_stage_ms_count", {}).values()) <= 0:
+            failures.append("metrics: no build_stage_ms stage spans "
+                            "exported for the adaptive build pipeline")
+        if telemetry.events.counts().get("plan_execute", 0) < 1:
+            failures.append("metrics: no plan_execute planner decision "
+                            "records in the event log")
     print(f"metrics: exported {len(parsed)} series "
-          f"({served:.0f} queries served), {n_events} events -> {out}")
+          f"({served:.0f} queries served, {compiles:.0f} jit compiles), "
+          f"{n_events} events -> {out}")
     return failures
 
 

@@ -69,7 +69,8 @@ runs, so the spliced winners (and path answers) match it bit for bit.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
+import threading
+from functools import partial, wraps
 
 import numpy as np
 
@@ -224,27 +225,71 @@ class TraceCounter:
     unchanged.  Bumps happen inside the traced bodies — they run at trace
     time only, never per call.
 
-    ``count`` stays the in-process fast path; each bump also lands on the
-    ``jit_traces_total`` counter in the process-wide metrics registry so
-    cold-compile events show up in the Prometheus/JSON exports next to
-    the serving series they perturb (DESIGN.md §12).
+    ``count`` stays the in-process fast path; each bump also lands on an
+    entry-labeled ``jit_traces_total{entry=}`` counter in the process-wide
+    metrics registry so cold-compile events show up in the Prometheus/JSON
+    exports next to the serving series they perturb (DESIGN.md §12/§13).
+
+    Two profiling hooks ride along (DESIGN.md §13): a *thread-local*
+    count (``thread_count()``) lets :class:`repro.obs.CompileCapture`
+    detect "this call traced" without crediting a background build
+    thread's compile to a foreground serving call, and ``profiler`` is
+    the installed capture (None when profiling is off — the only cost
+    then is one attribute read per entry call).
     """
 
     def __init__(self):
         self.count = 0
-        self._metric = None
+        self.profiler = None            # CompileCapture | None
+        self._tl = threading.local()
+        self._metrics = {}
 
-    def bump(self) -> None:
+    def thread_count(self) -> int:
+        return getattr(self._tl, "count", 0)
+
+    def bump(self, entry: str = "") -> None:
         self.count += 1
-        if self._metric is None:
+        self._tl.count = self.thread_count() + 1
+        m = self._metrics.get(entry)
+        if m is None:
             # deferred: repro.obs is import-light (numpy + stdlib), but
             # binding lazily keeps module import order unconstrained
             from repro.obs import REGISTRY
-            self._metric = REGISTRY.counter("jit_traces_total")
-        self._metric.inc()
+            m = (REGISTRY.counter("jit_traces_total", entry=entry)
+                 if entry else REGISTRY.counter("jit_traces_total"))
+            self._metrics[entry] = m
+        m.inc()
 
 
 TRACES = TraceCounter()
+
+
+def _jit_entry(entry: str, **jit_kw):
+    """``jax.jit`` for a named serving entry, routed via the profiler.
+
+    With no profiler installed the wrapper is one attribute read + one
+    ``is None`` per call on top of the jit dispatch.  With one installed
+    (:func:`repro.obs.enable_profile`) the call goes through
+    ``CompileCapture.call``, which times the call and — when the entry's
+    ``TRACES.bump(entry)`` fired on this thread, i.e. the call traced —
+    attributes compile wall-time and XLA ``cost_analysis()`` to the
+    entry label.  The traced body must call ``TRACES.bump(entry)`` with
+    the same name.
+    """
+    def deco(fn):
+        jf = jax.jit(fn, **jit_kw)
+
+        @wraps(fn)
+        def wrapper(*args, **kw):
+            prof = TRACES.profiler
+            if prof is None:
+                return jf(*args, **kw)
+            return prof.call(entry, jf, args, kw)
+
+        wrapper.jit = jf                # the underlying jit callable
+        wrapper.entry = entry
+        return wrapper
+    return deco
 
 
 def _round_up(x: int, m: int) -> int:
@@ -1037,7 +1082,7 @@ def _edges_of(idx) -> tuple:
     return (idx.edges_a, idx.edges_b, idx.edges_c, idx.grid)
 
 
-@partial(jax.jit, static_argnames=("bucket", "use_kernels"))
+@_jit_entry("fold_endpoint", static_argnames=("bucket", "use_kernels"))
 def _fold_endpoint(idx, pts: jnp.ndarray, bucket=None,
                    use_kernels: bool = False):
     """locate + gather + visibility-fold one endpoint side (own jit entry).
@@ -1053,7 +1098,7 @@ def _fold_endpoint(idx, pts: jnp.ndarray, bucket=None,
     (``gather_masked_labels`` + ``join_masked``) and is bitwise-identical
     to the fused engine.
     """
-    TRACES.bump()
+    TRACES.bump("fold_endpoint")
     pts = pts.astype(jnp.float32)
     r = locate_regions(idx, pts)
     labels = (_gather_packed(idx, r) if bucket is None
@@ -1061,12 +1106,12 @@ def _fold_endpoint(idx, pts: jnp.ndarray, bucket=None,
     return _mask_labels(labels, pts, _edges_of(idx), use_kernels)
 
 
-@partial(jax.jit, static_argnames=("use_kernels", "want_argmin"))
+@_jit_entry("join_endpoints", static_argnames=("use_kernels", "want_argmin"))
 def _join_endpoints(idx, masked_s, masked_t, s: jnp.ndarray, t: jnp.ndarray,
                     use_kernels: bool = False, want_argmin: bool = False,
                     qerr2=None):
     """Co-visibility + Eq. 1-3 join over folded endpoint sides (jit entry)."""
-    TRACES.bump()
+    TRACES.bump("join_endpoints")
     s = s.astype(jnp.float32)
     t = t.astype(jnp.float32)
     covis = _segvis(s, t, _edges_of(idx), use_kernels)
@@ -1197,7 +1242,7 @@ def query_batch_at_bucket(bx: BucketedIndex, s: jnp.ndarray, t: jnp.ndarray,
 # sharded dispatch primitives (repro.sharding)
 # ---------------------------------------------------------------------------
 
-@partial(jax.jit, static_argnames=("width",))
+@_jit_entry("gather_labels_at_width", static_argnames=("width",))
 def gather_labels_at_width(bx: BucketedIndex, regions: jnp.ndarray,
                            width: int):
     """Gather [B] regions' labels as dense [B, width] tensors.
@@ -1206,13 +1251,13 @@ def gather_labels_at_width(bx: BucketedIndex, regions: jnp.ndarray,
     the host router guarantees that by dispatching at ``max(endpoint
     widths)``.
     """
-    TRACES.bump()
+    TRACES.bump("gather_labels_at_width")
     bucket = max((k for k, w in enumerate(bx.widths) if w <= width),
                  default=0)
     return _gather_bucketed(bx, regions, bucket, width)
 
 
-@partial(jax.jit, static_argnames=("use_kernels", "want_argmin"))
+@_jit_entry("join_gathered", static_argnames=("use_kernels", "want_argmin"))
 def join_gathered(labels_s, labels_t, s: jnp.ndarray, t: jnp.ndarray,
                   edges_a: jnp.ndarray, edges_b: jnp.ndarray,
                   edges_c: jnp.ndarray | None = None,
@@ -1226,7 +1271,7 @@ def join_gathered(labels_s, labels_t, s: jnp.ndarray, t: jnp.ndarray,
     side's visibility runs on the device whose clipped edge set covers it.
     ``qerr2``: see :func:`_join_masked` (quantized argmin ambiguity).
     """
-    TRACES.bump()
+    TRACES.bump("join_gathered")
     s = s.astype(jnp.float32)
     t = t.astype(jnp.float32)
     edges = (edges_a, edges_b, edges_b if edges_c is None else edges_c, grid)
@@ -1234,7 +1279,7 @@ def join_gathered(labels_s, labels_t, s: jnp.ndarray, t: jnp.ndarray,
                                 use_kernels, want_argmin, qerr2=qerr2)
 
 
-@partial(jax.jit, static_argnames=("width", "use_kernels"))
+@_jit_entry("gather_masked_labels", static_argnames=("width", "use_kernels"))
 def gather_masked_labels(bx: BucketedIndex, regions: jnp.ndarray,
                          pts: jnp.ndarray, width: int,
                          use_kernels: bool = False):
@@ -1248,7 +1293,7 @@ def gather_masked_labels(bx: BucketedIndex, regions: jnp.ndarray,
     cross-shard query the t-side triple then ships to the s-side device
     ([B, W] tensors, not slabs) for :func:`join_masked`.
     """
-    TRACES.bump()
+    TRACES.bump("gather_masked_labels")
     bucket = max((k for k, w in enumerate(bx.widths) if w <= width),
                  default=0)
     labels = _gather_bucketed(bx, regions, bucket, width)
@@ -1256,7 +1301,7 @@ def gather_masked_labels(bx: BucketedIndex, regions: jnp.ndarray,
                         use_kernels)
 
 
-@partial(jax.jit, static_argnames=("use_kernels",))
+@_jit_entry("covis_blocked", static_argnames=("use_kernels",))
 def covis_blocked(s: jnp.ndarray, t: jnp.ndarray, edges_a, edges_b, edges_c,
                   grid: EdgeGrid | None = None,
                   use_kernels: bool = False) -> jnp.ndarray:
@@ -1267,14 +1312,14 @@ def covis_blocked(s: jnp.ndarray, t: jnp.ndarray, edges_a, edges_b, edges_c,
     ORs the verdicts — the union of participating clips covers every edge
     the segment can cross, so the OR equals the single-device covis bit.
     """
-    TRACES.bump()
+    TRACES.bump("covis_blocked")
     s = s.astype(jnp.float32)
     t = t.astype(jnp.float32)
     vis = _segvis(s, t, (edges_a, edges_b, edges_c, grid), use_kernels)
     return (~vis).astype(jnp.int32)
 
 
-@partial(jax.jit, static_argnames=("use_kernels", "want_argmin"))
+@_jit_entry("join_masked", static_argnames=("use_kernels", "want_argmin"))
 def join_masked(masked_s, masked_t, s: jnp.ndarray, t: jnp.ndarray,
                 covis: jnp.ndarray, use_kernels: bool = False,
                 want_argmin: bool = False, qerr2=None):
@@ -1286,7 +1331,7 @@ def join_masked(masked_s, masked_t, s: jnp.ndarray, t: jnp.ndarray,
     it is the same code.  ``qerr2``: see :func:`_join_masked` (quantized
     argmin ambiguity; pass the *sum* of the two shards' error bounds).
     """
-    TRACES.bump()
+    TRACES.bump("join_masked")
     s = s.astype(jnp.float32)
     t = t.astype(jnp.float32)
     return _join_masked(masked_s, masked_t, s, t, covis.astype(bool),
@@ -1297,7 +1342,7 @@ def join_masked(masked_s, masked_t, s: jnp.ndarray, t: jnp.ndarray,
 # quantized layouts: exact-argmin rescue + cross-shard quantized wire
 # ---------------------------------------------------------------------------
 
-@partial(jax.jit, static_argnames=("width", "use_kernels"))
+@_jit_entry("gather_masked_exact", static_argnames=("width", "use_kernels"))
 def gather_masked_exact(idx, pts: jnp.ndarray, d_exact: jnp.ndarray,
                         width: int, use_kernels: bool = False):
     """Rescue gather: quantized slabs with the exact f32 distance rows.
@@ -1309,7 +1354,7 @@ def gather_masked_exact(idx, pts: jnp.ndarray, d_exact: jnp.ndarray,
     to the f32 engine's visibility fold — the rescue join then reproduces
     the f32 argmin exactly.
     """
-    TRACES.bump()
+    TRACES.bump("gather_masked_exact")
     pts = pts.astype(jnp.float32)
     regions = locate_regions(idx, pts)
     if isinstance(idx, PackedIndex):
@@ -1402,7 +1447,7 @@ def _gather_quant_plane(slabs, bases, src_bucket, src_row, widths,
     return enc, base
 
 
-@partial(jax.jit, static_argnames=("width", "use_kernels"))
+@_jit_entry("gather_quant_rows", static_argnames=("width", "use_kernels"))
 def gather_quant_rows(bx: BucketedIndex, regions: jnp.ndarray,
                       pts: jnp.ndarray, width: int,
                       use_kernels: bool = False):
@@ -1416,7 +1461,7 @@ def gather_quant_rows(bx: BucketedIndex, regions: jnp.ndarray,
     (:func:`dequant_masked_labels`), which reproduces the owner-side fold
     bit for bit (same expression, same input bits).
     """
-    TRACES.bump()
+    TRACES.bump("gather_quant_rows")
     pts = pts.astype(jnp.float32)
     bucket = max((k for k, w in enumerate(bx.widths) if w <= width),
                  default=0)
@@ -1446,14 +1491,14 @@ def gather_quant_rows(bx: BucketedIndex, regions: jnp.ndarray,
     return henc, hbase, dq, venc, vbase, vis
 
 
-@jax.jit
+@_jit_entry("dequant_masked_labels")
 def dequant_masked_labels(henc, hbase, dq, venc, vbase, vis,
                           pts: jnp.ndarray, vert_xy: jnp.ndarray):
     """Joining-device half: decode shipped quantized rows into the masked
     triple — the same ``where(vis, norm + d, inf)`` expression as the
     owner-side fold, so the result is bitwise-identical to having shipped
     the decoded rows."""
-    TRACES.bump()
+    TRACES.bump("dequant_masked_labels")
     pts = pts.astype(jnp.float32)
     hub = _decode_ids(henc, hbase, HUB_PAD)
     vid = _decode_ids(venc, vbase, -1)

@@ -29,7 +29,6 @@ from __future__ import annotations
 
 import dataclasses
 import threading
-import time
 
 import numpy as np
 
@@ -158,6 +157,9 @@ class IndexManager:
                                      exit_threshold=exit_threshold,
                                      min_dwell=min_dwell, lane=lane,
                                      layout=self.layout)
+        # planner decision/execution records join the same structured
+        # event stream as swaps and drift (DESIGN.md §13)
+        self.planner.events = self.telemetry.events
         # initial fit: uniform scores (no traffic observed yet)
         if bucketed_device_bytes(index, lane,
                                  layout=self.layout) > slab_budget:
@@ -266,16 +268,27 @@ class IndexManager:
         """
         if self._thread is not None and self._thread.is_alive():
             return False
+        # one stopwatch carries the whole attempt (DESIGN.md §13): every
+        # stage boundary is a lap() on it, so the BUILD_STAGES spans
+        # telescope to end-to-end exactly — including the thread handoff
+        # of an async build, which lands inside the "compress" lap
+        sw = obs.Stopwatch()
         decision = self.planner.decide(self.recorder, self.host_index)
+        plan_s = sw.lap()
         if decision.kind == "skip":
             return False
+        trace = obs.Trace(kind="build", decision=decision.kind,
+                          drift=decision.drift,
+                          async_build=not block)
+        trace.stage("plan", plan_s)
         self.telemetry.events.emit("drift", decision=decision.kind,
                                    drift=decision.drift,
                                    reason=decision.reason,
                                    recorded_queries=self.recorder.queries)
         if block:
-            return self._adapt(decision)
-        self._thread = threading.Thread(target=self._adapt, args=(decision,),
+            return self._adapt(decision, trace, sw)
+        self._thread = threading.Thread(target=self._adapt,
+                                        args=(decision, trace, sw),
                                         name="index-manager-adapt",
                                         daemon=True)
         self._thread.start()
@@ -286,18 +299,36 @@ class IndexManager:
         if self._thread is not None:
             self._thread.join(timeout)
 
-    def _adapt(self, decision: PlanDecision) -> bool:
+    def _close_build_trace(self, trace, sw, outcome: str) -> None:
+        """Publish one attempt's span tree + per-stage histograms."""
+        # sw.t0 is the timestamp of the last lap, so stage_sum == e2e
+        # bit-for-bit; the stopwatch's construction time is the root start
+        trace.close(trace.attrs.pop("t_start"), sw.t0, outcome)
+        reg = self.telemetry.registry
+        for name, seconds in trace.stages.items():
+            reg.histogram("build_stage_ms", stage=name).record(seconds * 1e3)
+        reg.counter("builds_total", outcome=outcome).inc()
+        if self.telemetry.enabled:
+            self.telemetry.spans.add(trace)
+
+    def _adapt(self, decision: PlanDecision, trace=None, sw=None) -> bool:
+        if sw is None:                  # direct call (tests): self-rooted
+            sw = obs.Stopwatch()
+            trace = obs.Trace(kind="build", decision=decision.kind,
+                              drift=decision.drift, async_build=False)
+            trace.stage("plan", 0.0)
+        trace.attrs["t_start"] = sw.t0 - sum(trace.stages.values())
         with self._adapt_lock:          # one rebuild at a time
             # pre-adapt snapshot: an aborted candidate must not leave
             # host_index (the unwinding mirror of the live artifact) or the
             # planner baseline describing an index that never went live
             pre = self.host_index.snapshot_regions()
-            t0 = time.perf_counter()
+            trace.attrs["device_bytes_in"] = self.engine.device_bytes()
             stats = self.planner.execute(decision, self.host_index,
                                          self.recorder, self._base)
-            build_s = time.perf_counter() - t0
+            build_s = sw.lap()
+            trace.stage("compress", build_s)
 
-            t0 = time.perf_counter()
             reuse = self.engine.artifact
             if self._shard_planner is not None:
                 # alias the *device-placed* per-shard edge tensors (the
@@ -309,12 +340,9 @@ class IndexManager:
                     reuse = router.shards
             bx = self._pack(reuse_from=reuse)
             candidate = self._make_engine(bx)
-            # warm the candidate's jit entries off the serving path so the
-            # first post-swap batch pays zero compile time
-            candidate.warmup(self.batch_size, want_argmin=self.warm_argmin)
-            pack_s = time.perf_counter() - t0
+            repack_s = sw.lap()
+            trace.stage("repack", repack_s)
 
-            t0 = time.perf_counter()
             d_live = engine_answers(self.engine.current,
                                     self._probe_s, self._probe_t)
             d_cand = engine_answers(candidate, self._probe_s, self._probe_t)
@@ -351,7 +379,18 @@ class IndexManager:
                              f"per-device cap {cap:.0f}B "
                              f"({self.shard_tol:.2f}x budget/"
                              f"{self.num_shards})")
-            validate_s = time.perf_counter() - t0
+            validate_s = sw.lap()
+            trace.stage("validate", validate_s)
+
+            stage_s = 0.0
+            if ok:
+                # warm the candidate's jit entries off the serving path so
+                # the first post-swap batch pays zero compile time — only
+                # survivors pay it; an aborted candidate is dropped cold
+                candidate.warmup(self.batch_size,
+                                 want_argmin=self.warm_argmin)
+                stage_s = sw.lap()
+            trace.stage("stage", stage_s)
 
             rec = SwapRecord(
                 generation=self.engine.generation + 1, kind=decision.kind,
@@ -359,7 +398,7 @@ class IndexManager:
                 merges=stats.merges, regions=stats.regions,
                 label_bytes=stats.final_bytes,
                 device_bytes=bx.device_bytes(), build_s=build_s,
-                pack_s=pack_s, validate_s=validate_s,
+                pack_s=repack_s + stage_s, validate_s=validate_s,
                 probe_max_err=max_err, swapped=ok, abort_reason=abort)
             self.history.append(rec)
             self.telemetry.events.emit(
@@ -367,10 +406,18 @@ class IndexManager:
                 **{("decision" if f.name == "kind" else f.name):
                    getattr(rec, f.name)
                    for f in dataclasses.fields(rec)})
+            trace.attrs.update(
+                generation=rec.generation, merges=stats.merges,
+                regions_out=stats.regions,
+                regions_in=stats.regions + stats.merges,
+                label_bytes=stats.final_bytes,
+                device_bytes_out=bx.device_bytes())
             if not ok:
                 self.validation_failures += 1
                 self.planner.discard()
                 self.host_index.restore_regions(pre)    # roll back mirror
+                trace.stage("swap", sw.lap())
+                self._close_build_trace(trace, sw, "abort")
                 return False
             self._emit_quant_fallbacks(bx, rec.generation)
             # validation traffic must not leak into the live serving stats
@@ -379,6 +426,8 @@ class IndexManager:
                 reset()
             self.engine.swap(candidate)
             self.planner.commit()
+            trace.stage("swap", sw.lap())
+            self._close_build_trace(trace, sw, "ok")
             return True
 
     def stats(self) -> dict:

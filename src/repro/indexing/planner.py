@@ -86,6 +86,11 @@ class BudgetPlanner:
         # drift-trigger observability (DESIGN.md §12): decision mix,
         # live drift and alarm state as per-planner registry series
         self._obs_labels = {"planner": obs.next_instance_id("p")}
+        # structured decision/execution records (DESIGN.md §13): the
+        # manager points this at its Telemetry's EventLog; standalone
+        # planners leave it None and skip the records
+        self.events: obs.EventLog | None = None
+        self._last_dev = 0
 
     # ------------------------------------------------------------ decisions
     def drift(self, recorder) -> float:
@@ -102,12 +107,22 @@ class BudgetPlanner:
                     **self._obs_labels).inc()
         reg.gauge("planner_drift", **self._obs_labels).set(d.drift)
         reg.gauge("planner_alarm", **self._obs_labels).set(int(self._alarm))
+        if self.events is not None and d.kind != "skip":
+            # skips fire every serving block — only actionable decisions
+            # become structured records (budget pressure + alarm state)
+            self.events.emit("plan_decision", decision=d.kind, drift=d.drift,
+                             reason=d.reason,
+                             budget_bytes=self.device_budget_bytes,
+                             device_bytes=self._last_dev,
+                             alarm=self._alarm,
+                             dwell_left=self._dwell_left)
         return d
 
     def _decide(self, recorder, index) -> PlanDecision:
         from repro.core.packed import bucketed_device_bytes
 
         dev = bucketed_device_bytes(index, self.lane, layout=self.layout)
+        self._last_dev = int(dev)
         fresh = recorder.queries - self._planned_at_queries
         if fresh < self.min_queries:
             if dev > self.device_budget_bytes:
@@ -178,6 +193,19 @@ class BudgetPlanner:
         else:
             raise ValueError(f"nothing to execute for {decision.kind!r}")
         self._pending = (recorder.distribution(), recorder.queries)
+        if self.events is not None:
+            # the budget-in/out + regions-admitted/evicted record the
+            # attribution layer joins against the swap's BUILD_STAGES span
+            self.events.emit(
+                "plan_execute", decision=decision.kind,
+                budget_bytes=self.device_budget_bytes,
+                label_bytes_in=stats.initial_bytes,
+                label_bytes_out=stats.final_bytes,
+                device_bytes=stats.device_bytes,
+                regions_in=stats.regions + stats.merges,
+                regions_admitted=stats.regions,
+                regions_evicted=stats.merges,
+                hit_single_region=stats.hit_single_region)
         return stats
 
     def commit(self) -> None:

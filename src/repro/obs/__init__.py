@@ -23,18 +23,24 @@ from .metrics import (DEFAULT_LATENCY_BOUNDS_MS, Counter, Gauge, Histogram,
                       MetricsRegistry, REGISTRY, log_bounds,
                       next_instance_id)
 from .export import json_snapshot, parse_prometheus, prometheus_text
+from .profile import (CompileCapture, CompileRecord, aot_cost,
+                      disable_profile, enable_profile, normalize_cost,
+                      profiled)
 from .timing import Stopwatch, monotonic
-from .trace import (ASYNC_STAGES, SYNC_STAGES, HeadSampler, Span, Trace,
-                    TraceLog)
+from .trace import (ASYNC_STAGES, BUILD_STAGES, SYNC_STAGES, HeadSampler,
+                    Span, Trace, TraceLog)
 from .views import StatsView
 
 __all__ = [
-    "ASYNC_STAGES", "SYNC_STAGES", "Counter", "DEFAULT_LATENCY_BOUNDS_MS",
+    "ASYNC_STAGES", "BUILD_STAGES", "SYNC_STAGES",
+    "CompileCapture", "CompileRecord", "Counter",
+    "DEFAULT_LATENCY_BOUNDS_MS",
     "EventLog", "Gauge", "HeadSampler", "Histogram", "MetricsRegistry",
     "REGISTRY", "Span", "StatsView", "Stopwatch", "Telemetry", "Trace",
     "TraceLog",
-    "json_snapshot", "log_bounds", "monotonic", "next_instance_id",
-    "parse_prometheus", "prometheus_text",
+    "aot_cost", "disable_profile", "enable_profile", "json_snapshot",
+    "log_bounds", "monotonic", "next_instance_id", "normalize_cost",
+    "parse_prometheus", "profiled", "prometheus_text",
 ]
 
 

@@ -1,0 +1,245 @@
+"""Compile & cost attribution for the jit entry points (DESIGN.md §13).
+
+Every device entry in ``core.packed`` is wrapped by a tiny dispatcher
+(``packed._jit_entry``) that normally adds one attribute read per call.
+When profiling is enabled (:func:`enable_profile`), the dispatcher routes
+through a :class:`CompileCapture` which detects *traces* — the wrapped
+``TraceCounter`` bumps a thread-local count at trace time, so a changed
+count across the call means XLA compiled a new executable for this
+(entry, shapes, statics) cache key — and attributes, per entry label:
+
+* ``jit_compiles_total{entry=}`` / ``jit_compile_seconds_total{entry=}``
+  — how many executables and how much wall time tracing+compiling cost;
+* ``jit_cost_flops_total{entry=}`` / ``jit_cost_bytes_total{entry=}`` /
+  ``jit_cost_output_bytes_total{entry=}`` — XLA ``cost_analysis()`` of
+  the compiled executable (flops, bytes accessed, output bytes);
+* ``jit_cost_capture_seconds_total{entry=}`` — what the capture itself
+  cost (the AOT ``lower().compile()`` used to read ``cost_analysis()``
+  does not populate jax's dispatch cache, so cost capture roughly
+  doubles each *compile* — never steady-state dispatch).
+
+All series land in an ordinary :class:`MetricsRegistry`, so the existing
+Prometheus/JSON exporters pick them up with zero changes.
+
+Caveats (see also ``benchmarks/roofline.py``): XLA's ``cost_analysis``
+counts ``while``-loop bodies **once**, not per iteration, so looped
+kernels under-report flops unless calibrated; on CPU the returned dict
+may arrive as a one-element list.  Output bytes fall back to summing
+``.nbytes`` over the result leaves when the backend omits the
+``bytes accessedout{}`` key.
+
+This module keeps **all jax imports function-local**: ``repro.obs`` must
+stay importable without jax (the exporters run host-side), and
+``core.packed`` imports obs for its trace counter — a module-level jax
+or packed import here would cycle.
+"""
+
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from .metrics import MetricsRegistry, REGISTRY
+from .timing import Stopwatch
+
+# cost_analysis key names as emitted by XLA (CPU + TPU backends).
+_K_FLOPS = "flops"
+_K_BYTES = "bytes accessed"
+_K_OUT_BYTES = "bytes accessedout{}"
+
+
+@dataclass
+class CompileRecord:
+    """One observed trace+compile of a jit entry."""
+
+    entry: str
+    compile_s: float
+    flops: float = 0.0
+    bytes_accessed: float = 0.0
+    output_bytes: float = 0.0
+    capture_s: float = 0.0
+    cost: dict = field(default_factory=dict)
+
+
+def _leaf_nbytes(out) -> float:
+    """Best-effort output-byte count: sum ``.nbytes`` over result leaves
+    (duck-typed tree walk — no jax import needed)."""
+    total = 0.0
+    stack = [out]
+    while stack:
+        x = stack.pop()
+        if x is None:
+            continue
+        nb = getattr(x, "nbytes", None)
+        if nb is not None:
+            total += float(nb)
+        elif isinstance(x, dict):
+            stack.extend(x.values())
+        elif isinstance(x, (list, tuple)):
+            stack.extend(x)
+    return total
+
+
+def normalize_cost(ca) -> dict:
+    """Flatten a ``cost_analysis()`` result to a plain key->float dict.
+
+    Handles the CPU backend's one-element-list wrapping and drops
+    non-numeric values.
+    """
+    if ca is None:
+        return {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    out = {}
+    for k, v in dict(ca).items():
+        try:
+            out[str(k)] = float(v)
+        except (TypeError, ValueError):
+            pass
+    return out
+
+
+class CompileCapture:
+    """Routes profiled jit-entry calls and attributes compile cost.
+
+    One instance is installed process-wide via :func:`enable_profile`
+    (it becomes ``core.packed.TRACES.profiler``).  The capture is
+    thread-safe: the trace detector reads the counter's *thread-local*
+    count, so a background build thread compiling its own entries never
+    credits a compile to a foreground serving call.
+    """
+
+    def __init__(self, registry: Optional[MetricsRegistry] = None,
+                 costs: bool = True, max_records: int = 512):
+        self.registry = REGISTRY if registry is None else registry
+        self.costs = bool(costs)
+        self.records: List[CompileRecord] = []
+        self.max_records = int(max_records)
+        self.counter = None          # TraceCounter, bound by enable_profile
+        self._lock = threading.Lock()
+
+    # -- dispatcher hook (called from packed._jit_entry wrappers) ---------
+
+    def call(self, entry: str, jf, args, kw):
+        c = self.counter
+        before = -1 if c is None else c.thread_count()
+        with Stopwatch() as sw:
+            out = jf(*args, **kw)
+        if c is not None and c.thread_count() != before:
+            self._record(entry, jf, args, kw, sw.seconds, out)
+        return out
+
+    # -- attribution ------------------------------------------------------
+
+    def _record(self, entry: str, jf, args, kw, compile_s: float,
+                out) -> None:
+        reg = self.registry
+        reg.counter("jit_compiles_total", entry=entry).inc()
+        reg.counter("jit_compile_seconds_total", entry=entry).inc(compile_s)
+        rec = CompileRecord(entry=entry, compile_s=float(compile_s))
+        if self.costs:
+            with Stopwatch() as sw:
+                try:
+                    cost = normalize_cost(
+                        jf.lower(*args, **kw).compile().cost_analysis())
+                except Exception:            # pragma: no cover - backend gap
+                    cost = {}
+            rec.capture_s = sw.seconds
+            rec.cost = cost
+            rec.flops = cost.get(_K_FLOPS, 0.0)
+            rec.bytes_accessed = cost.get(_K_BYTES, 0.0)
+            rec.output_bytes = cost.get(_K_OUT_BYTES, 0.0)
+            if rec.output_bytes == 0.0:
+                rec.output_bytes = _leaf_nbytes(out)
+            reg.counter("jit_cost_flops_total", entry=entry).inc(rec.flops)
+            reg.counter("jit_cost_bytes_total",
+                        entry=entry).inc(rec.bytes_accessed)
+            reg.counter("jit_cost_output_bytes_total",
+                        entry=entry).inc(rec.output_bytes)
+            reg.counter("jit_cost_capture_seconds_total",
+                        entry=entry).inc(rec.capture_s)
+        with self._lock:
+            if len(self.records) < self.max_records:
+                self.records.append(rec)
+
+    # -- readback ---------------------------------------------------------
+
+    def by_entry(self) -> Dict[str, List[CompileRecord]]:
+        with self._lock:
+            recs = list(self.records)
+        out: Dict[str, List[CompileRecord]] = {}
+        for r in recs:
+            out.setdefault(r.entry, []).append(r)
+        return out
+
+    def summary(self) -> dict:
+        """Per-entry totals, JSON-ready (for bench artifacts)."""
+        out = {}
+        for entry, recs in sorted(self.by_entry().items()):
+            out[entry] = {
+                "compiles": len(recs),
+                "compile_s": sum(r.compile_s for r in recs),
+                "flops": sum(r.flops for r in recs),
+                "bytes_accessed": sum(r.bytes_accessed for r in recs),
+                "output_bytes": sum(r.output_bytes for r in recs),
+                "capture_s": sum(r.capture_s for r in recs),
+            }
+        return out
+
+
+def enable_profile(registry: Optional[MetricsRegistry] = None,
+                   costs: bool = True,
+                   capture: Optional[CompileCapture] = None
+                   ) -> CompileCapture:
+    """Install a :class:`CompileCapture` on ``core.packed.TRACES``.
+
+    Returns the installed capture.  Must run before the first call of
+    the shapes you want attributed: jax's jit cache is process-wide, so
+    an entry traced before capture was enabled stays warm and silent.
+    """
+    from repro.core.packed import TRACES   # lazy: obs stays jax-free
+    cap = capture if capture is not None \
+        else CompileCapture(registry=registry, costs=costs)
+    cap.counter = TRACES
+    TRACES.profiler = cap
+    return cap
+
+
+def disable_profile() -> Optional[CompileCapture]:
+    """Uninstall the active capture (returns it, or None)."""
+    from repro.core.packed import TRACES
+    cap, TRACES.profiler = TRACES.profiler, None
+    return cap
+
+
+class profiled:
+    """Context manager: profile capture enabled inside the block."""
+
+    def __init__(self, registry: Optional[MetricsRegistry] = None,
+                 costs: bool = True):
+        self._registry = registry
+        self._costs = costs
+        self.capture: Optional[CompileCapture] = None
+
+    def __enter__(self) -> CompileCapture:
+        self.capture = enable_profile(self._registry, costs=self._costs)
+        return self.capture
+
+    def __exit__(self, *exc) -> None:
+        disable_profile()
+
+
+def aot_cost(fn, *args, static_argnames=None, **kw) -> dict:
+    """AOT-compile ``fn`` on ``args`` and return its normalized
+    ``cost_analysis()`` dict (``flops`` / ``bytes accessed`` / ...).
+
+    Standalone helper for benches — does not touch the dispatch cache
+    or the installed capture.
+    """
+    import jax                              # lazy: obs stays jax-free
+    jit_kw = {}
+    if static_argnames is not None:
+        jit_kw["static_argnames"] = static_argnames
+    jf = fn if hasattr(fn, "lower") else jax.jit(fn, **jit_kw)
+    return normalize_cost(jf.lower(*args, **kw).compile().cost_analysis())

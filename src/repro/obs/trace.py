@@ -26,6 +26,14 @@ reply           scatter results to tickets + stats bookkeeping
 Sync queries (``PathServer.query``/``query_paths``) reuse the same trace
 type with ``SYNC_STAGES`` (route → dispatch → rescue → unwind → reply).
 
+The offline build pipeline reuses the same type with ``BUILD_STAGES``
+(plan → compress → repack → validate → stage → swap): one trace per
+``IndexManager`` adaptation attempt, stage boundaries taken from a
+single shared stopwatch so the stages telescope to the end-to-end build
+wall time exactly — including the thread handoff of an async swap,
+which lands inside the ``compress`` lap rather than leaking out of the
+span tree.
+
 Head sampling: the submit path decides *once per request* whether to
 build a trace (deterministic leaky-bucket at ``sample_rate`` — no RNG, so
 tests and resumable workflows see stable picks).  Requests slower than
@@ -45,6 +53,15 @@ ASYNC_STAGES: Tuple[str, ...] = (
 
 SYNC_STAGES: Tuple[str, ...] = (
     "route", "dispatch", "rescue", "unwind", "reply")
+
+BUILD_STAGES: Tuple[str, ...] = (
+    "plan", "compress", "repack", "validate", "stage", "swap")
+
+STAGE_TAXONOMY: Dict[str, Tuple[str, ...]] = {
+    "async": ASYNC_STAGES,
+    "sync": SYNC_STAGES,
+    "build": BUILD_STAGES,
+}
 
 
 class Span:
@@ -96,13 +113,13 @@ class Trace:
         return sum(self.stages.values())
 
     def complete(self, required=None) -> bool:
-        req = (ASYNC_STAGES if self.kind == "async" else SYNC_STAGES) \
+        req = STAGE_TAXONOMY.get(self.kind, SYNC_STAGES) \
             if required is None else required
         return self.closed and all(s in self.stages for s in req)
 
     def tree(self) -> dict:
         """Root span with one child per stage, in taxonomy order."""
-        order = ASYNC_STAGES if self.kind == "async" else SYNC_STAGES
+        order = STAGE_TAXONOMY.get(self.kind, SYNC_STAGES)
         names = [s for s in order if s in self.stages] + \
             [s for s in self.stages if s not in order]
         t, children = 0.0, []

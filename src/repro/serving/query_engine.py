@@ -22,7 +22,6 @@ from __future__ import annotations
 
 import abc
 import contextlib
-import time
 
 import numpy as np
 
@@ -189,18 +188,18 @@ class DeviceEngine(QueryEngine):
         # quantized: 6-tuple — rescue ambiguous-margin rows against the
         # exact residual so argmin winners match the f32 engine bitwise
         if bool(np.asarray(res[5]).any()):
-            t0 = time.perf_counter()
-            exact = rescue_exact(self.index, s, t,
-                                 self.bucket_width(bucket), res[1],
-                                 use_kernels=self.use_kernels)
-            out = splice_rescue(res, exact)
+            with obs.Stopwatch() as sw:
+                exact = rescue_exact(self.index, s, t,
+                                     self.bucket_width(bucket), res[1],
+                                     use_kernels=self.use_kernels)
+                out = splice_rescue(res, exact)
             # argmin-rescue attribution (DESIGN.md §12): the rescue is
             # fused into the dispatch stage from the span's point of view,
             # so its cost is surfaced through these engine-side series
             obs.REGISTRY.counter("rescue_batches_total",
                                  engine=self.name).inc()
             obs.REGISTRY.histogram("rescue_ms", engine=self.name).record(
-                (time.perf_counter() - t0) * 1e3)
+                sw.seconds * 1e3)
             return out
         return tuple(np.asarray(r) for r in res[:5])
 

@@ -1,0 +1,310 @@
+"""Performance attribution layer (DESIGN.md §13): jit compile/cost
+capture, build-pipeline spans, bench history + the regression gate.
+
+The capture tests drive a private ``MetricsRegistry`` and restore the
+process-wide profiler in ``finally`` blocks, so nothing here leaks into
+other modules' steady-state dispatch.  ``jax.clear_caches()`` forces the
+cold compiles the capture exists to observe — the pjit cache is
+process-wide, so without it a session-scoped fixture may already have
+traced every shape.
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core.grid import build_ehl
+from repro.core.packed import TRACES, bucketed_device_bytes, pack_bucketed
+from repro.core.workload import cluster_queries
+from repro.indexing import IndexManager
+from repro.serving.engine import PathServer
+from repro.serving.query_engine import JnpEngine
+
+
+def _total(reg, name):
+    return sum(m.value for m in reg.series(name))
+
+
+# ------------------------------------------------------ cost normalization
+
+def test_normalize_cost_variants():
+    # jax 0.4.x returns either a dict or a one-element list of dicts
+    d = {"flops": 10.0, "bytes accessed": 20.0, "utilization": "high"}
+    assert obs.normalize_cost([d]) == {"flops": 10.0, "bytes accessed": 20.0}
+    assert obs.normalize_cost(d)["flops"] == 10.0
+    assert obs.normalize_cost(None) == {}
+    assert obs.normalize_cost([]) == {}
+
+
+def test_aot_cost_counts_known_flops():
+    import jax.numpy as jnp
+    a = jnp.ones((8, 16), jnp.float32)
+    cost = obs.aot_cost(lambda x: x @ x.T, a)
+    # 8x16 @ 16x8 matmul: 2*M*N*K = 2048 flops, XLA counts exactly this
+    assert cost.get("flops") == pytest.approx(2 * 8 * 8 * 16)
+    assert cost.get("bytes accessed", 0) > 0
+
+
+# ---------------------------------------------- compile capture (serving)
+
+def test_compile_and_cost_series_after_cold_warmup(compressed_s):
+    """Cold ``PathServer.warmup()`` with capture live: every jit entry the
+    query path hits lands compile-count, compile-time, and cost_analysis
+    series in the capture's registry; warm re-execution adds nothing."""
+    import jax
+
+    idx, _ = compressed_s
+    reg = obs.MetricsRegistry()
+    prof = obs.enable_profile(registry=reg)
+    try:
+        jax.clear_caches()                      # force cold compiles
+        bx = pack_bucketed(idx)
+        srv = PathServer(JnpEngine(bx), batch_size=16)
+        srv.warmup()
+
+        from repro.core import packed
+
+        compiles = _total(reg, "jit_compiles_total")
+        assert compiles >= 1
+        entries = {dict(m.labels)["entry"]
+                   for m in reg.series("jit_compiles_total")}
+        assert entries                           # labeled per jit entry
+        declared = {w.entry for w in vars(packed).values()
+                    if hasattr(w, "entry")}
+        assert entries <= declared
+        assert _total(reg, "jit_compile_seconds_total") > 0
+        assert _total(reg, "jit_cost_flops_total") > 0
+        assert _total(reg, "jit_cost_bytes_total") > 0
+        assert _total(reg, "jit_cost_output_bytes_total") > 0
+        # capture kept per-compile records with the raw cost dicts
+        assert prof.records and all(r.compile_s > 0 for r in prof.records)
+        summ = prof.summary()
+        assert sum(v["compiles"] for v in summ.values()) == compiles
+
+        # steady state: identical shapes re-dispatch without re-tracing,
+        # so the capture must not grow (the ~zero-overhead property the
+        # bench gates on)
+        rng = np.random.default_rng(0)
+        pts = rng.uniform(0, 10, (16, 2)).astype(np.float32)
+        srv.query(pts, pts)
+        warm = _total(reg, "jit_compiles_total")
+        srv.query(pts, pts)
+        assert _total(reg, "jit_compiles_total") == warm
+    finally:
+        obs.disable_profile()
+
+
+def test_disable_profile_stops_capture(compressed_s):
+    import jax
+
+    idx, _ = compressed_s
+    reg = obs.MetricsRegistry()
+    obs.enable_profile(registry=reg)
+    obs.disable_profile()
+    assert TRACES.profiler is None
+    jax.clear_caches()
+    bx = pack_bucketed(idx)
+    srv = PathServer(JnpEngine(bx), batch_size=16)
+    srv.warmup()                                 # cold, but capture is off
+    assert not reg.series("jit_compiles_total")
+
+
+def test_trace_counter_thread_attribution():
+    """A compile on another thread must not be credited to this one —
+    the foreground wrapper keys on the thread-local count, not the
+    process-wide total."""
+    import threading
+
+    before_global = TRACES.count
+    before_local = TRACES.thread_count()
+    th = threading.Thread(target=lambda: TRACES.bump("elsewhere"))
+    th.start()
+    th.join()
+    assert TRACES.count == before_global + 1
+    assert TRACES.thread_count() == before_local
+
+
+# ----------------------------------------------- build-pipeline spans
+
+@pytest.fixture()
+def traced_manager(scene_s, graph_s, hl_s):
+    idx = build_ehl(scene_s, 2.0, graph=graph_s, hl=hl_s)
+    budget = int(bucketed_device_bytes(idx) * 0.5)
+    tel = obs.Telemetry(registry=obs.MetricsRegistry(), sample_rate=1.0)
+    mgr = IndexManager(idx, budget, batch_size=16, min_queries=40,
+                       replan_threshold=0.10, probe_n=8, seed=29,
+                       telemetry=tel)
+    return mgr, tel, budget
+
+
+def _drive(mgr, scene_s, graph_s, seed):
+    qs = cluster_queries(scene_s, graph_s, 2, 60, seed=seed,
+                         require_path=False)
+    mgr.recorder.record(qs.s, qs.t)
+
+
+def test_build_stage_spans_telescope_to_e2e(traced_manager, scene_s,
+                                            graph_s):
+    mgr, tel, _ = traced_manager
+    _drive(mgr, scene_s, graph_s, seed=61)
+    assert mgr.maybe_adapt() is True
+
+    (tr,) = tel.spans.traces("build")
+    assert tr.closed and tr.complete(obs.BUILD_STAGES)
+    assert tr.attrs["outcome"] == "ok"
+    assert [c["name"] for c in tr.tree()["children"]] == \
+        list(obs.BUILD_STAGES)
+    # stage boundaries are one stopwatch's consecutive laps, so the
+    # telescoped sum reproduces e2e up to float summation noise — far
+    # tighter than the 5% gate the serving spans get
+    assert tr.e2e_seconds > 0
+    assert abs(tr.stage_sum - tr.e2e_seconds) <= 1e-6 * tr.e2e_seconds
+    # every stage also landed its histogram + the outcome counter
+    reg = tel.registry
+    for st in obs.BUILD_STAGES:
+        (h,) = reg.find("build_stage_ms", stage=st)
+        assert h.count == 1
+    (ok,) = reg.find("builds_total", outcome="ok")
+    assert ok.value == 1
+    # planner decision records in the structured event log
+    (dec,) = tel.events.events("plan_decision")
+    assert dec["decision"] != "skip" and dec["budget_bytes"] > 0
+    (ex,) = tel.events.events("plan_execute")
+    assert ex["regions_in"] == ex["regions_admitted"] + ex["regions_evicted"]
+    assert ex["label_bytes_out"] <= ex["label_bytes_in"]
+
+
+def test_async_build_span_covers_hot_swap_under_serving(traced_manager,
+                                                        scene_s, graph_s):
+    """A background build (hot-swap mid-serving): the span is produced on
+    the builder thread and still telescopes; the foreground keeps serving
+    through the swap."""
+    mgr, tel, budget = traced_manager
+    srv = PathServer(mgr.engine, batch_size=16, recorder=mgr.recorder,
+                     telemetry=tel)
+    srv.warmup()
+    qs = cluster_queries(scene_s, graph_s, 2, 60, seed=91,
+                         require_path=False)
+    s, t = qs.s.astype(np.float32), qs.t.astype(np.float32)
+    srv.query(s, t)
+    gen0 = mgr.generation
+    assert mgr.maybe_adapt(block=False) is False   # builds on the thread
+    srv.query(s, t)                                # serve during the build
+    mgr.join(timeout=120.0)
+    assert mgr.generation == gen0 + 1 and mgr.swaps == 1
+    srv.query(s, t)                                # and after the swap
+
+    (tr,) = tel.spans.traces("build")
+    assert tr.complete(obs.BUILD_STAGES) and tr.attrs["outcome"] == "ok"
+    assert tr.attrs["async_build"] is True
+    assert abs(tr.stage_sum - tr.e2e_seconds) <= 1e-6 * tr.e2e_seconds
+    assert tr.attrs["generation"] == mgr.generation
+    # byte/region deltas ride on the span
+    assert tr.attrs["device_bytes_out"] <= budget
+    assert tr.attrs["regions_out"] <= tr.attrs["regions_in"]
+
+
+def test_aborted_build_traced_with_abort_outcome(traced_manager, scene_s,
+                                                 graph_s):
+    mgr, tel, budget = traced_manager
+    mgr.set_budget(10_000)                       # no candidate can fit
+    assert mgr.maybe_adapt() is False
+    (tr,) = tel.spans.traces("build")
+    assert tr.closed and tr.complete(obs.BUILD_STAGES)
+    assert tr.attrs["outcome"] == "abort"
+    assert abs(tr.stage_sum - tr.e2e_seconds) <= 1e-6 * tr.e2e_seconds
+    (ab,) = tel.registry.find("builds_total", outcome="abort")
+    assert ab.value == 1
+    assert not tel.registry.find("builds_total", outcome="ok")
+
+
+def test_build_series_export_round_trip(traced_manager, scene_s, graph_s):
+    """New series survive the Prometheus text + JSON round trip."""
+    mgr, tel, _ = traced_manager
+    _drive(mgr, scene_s, graph_s, seed=71)
+    reg = tel.registry
+    reg.counter("jit_compiles_total", entry="join_gathered").inc(2)
+    reg.counter("jit_cost_flops_total", entry="join_gathered").inc(12345)
+    assert mgr.maybe_adapt() is True
+
+    parsed = obs.parse_prometheus(obs.prometheus_text(reg))
+    assert parsed["jit_compiles_total"][(("entry", "join_gathered"),)] == 2
+    assert parsed["jit_cost_flops_total"][
+        (("entry", "join_gathered"),)] == 12345
+    assert sum(parsed["builds_total"].values()) == 1
+    stages = {dict(k)["stage"] for k in parsed["build_stage_ms_count"]}
+    assert stages == set(obs.BUILD_STAGES)
+    snap = json.loads(obs.json_snapshot(reg))
+    hist_names = {h["name"] for h in snap["histograms"]}
+    assert "build_stage_ms" in hist_names
+    ctr_names = {c["name"] for c in snap["counters"]}
+    assert {"jit_compiles_total", "builds_total"} <= ctr_names
+
+
+# ------------------------------------------- bench history + regression
+
+def _fake_bench(monkeypatch, tmp_path, sha, qps, p99, n=600):
+    from benchmarks import common
+    monkeypatch.setattr(common, "git_sha", lambda: sha)
+    common.write_bench_json(
+        "serving", qps=qps, p50_ms=p99 / 2, p99_ms=p99,
+        out_dir=str(tmp_path),
+        data=dict(map="rooms-M", n=n, batch_size=64, budget_frac=0.3))
+
+
+def test_write_bench_json_appends_sha_keyed_history(monkeypatch, tmp_path):
+    from benchmarks import common
+    _fake_bench(monkeypatch, tmp_path, "a" * 40, 1000.0, 10.0)
+    _fake_bench(monkeypatch, tmp_path, "b" * 40, 1100.0, 9.0)
+    # same-sha rerun overwrites that sha's entry instead of appending
+    _fake_bench(monkeypatch, tmp_path, "b" * 40, 1050.0, 9.5)
+    hist = common.load_history("serving", out_dir=str(tmp_path))
+    assert [h["git_sha"][:1] for h in hist] == ["a", "b"]
+    assert hist[-1]["qps"] == 1050.0             # oldest first, overwritten
+    assert all("written_at" in h for h in hist)
+    # the main artifact is the newest run
+    cur = json.load(open(tmp_path / "BENCH_serving.json"))
+    assert cur["git_sha"].startswith("b") and cur["qps"] == 1050.0
+
+
+def test_regression_gate_passes_and_fails_on_injected_slowdown(
+        monkeypatch, tmp_path):
+    """The CI gate demonstrated end-to-end: a healthy run passes against
+    the history baseline; an injected qps drop / p99 inflation fails."""
+    from benchmarks import check_regression
+
+    _fake_bench(monkeypatch, tmp_path, "a" * 40, 1000.0, 10.0)  # baseline
+    _fake_bench(monkeypatch, tmp_path, "b" * 40, 980.0, 10.5)   # healthy
+    assert check_regression.check("serving", out_dir=str(tmp_path)) == []
+
+    # injected slowdown: 20% qps drop at the same config
+    _fake_bench(monkeypatch, tmp_path, "c" * 40, 800.0, 10.0)
+    failures = check_regression.check("serving", out_dir=str(tmp_path))
+    assert failures and "qps" in failures[0]
+    with pytest.raises(SystemExit):
+        monkeypatch.setattr(check_regression.common, "ARTIFACTS",
+                            str(tmp_path))
+        check_regression.main(["serving"])
+
+    # injected p99 inflation: qps fine, tail blown past 1.25x + 2ms
+    _fake_bench(monkeypatch, tmp_path, "d" * 40, 1000.0, 40.0)
+    failures = check_regression.check("serving", out_dir=str(tmp_path))
+    assert failures and "p99" in failures[0]
+
+
+def test_regression_gate_skips_unmatched_config(monkeypatch, tmp_path):
+    """A smoke run never gates against a full run's numbers."""
+    from benchmarks import check_regression
+
+    _fake_bench(monkeypatch, tmp_path, "a" * 40, 5000.0, 1.0, n=2000)
+    _fake_bench(monkeypatch, tmp_path, "b" * 40, 500.0, 50.0, n=600)
+    assert check_regression.check("serving", out_dir=str(tmp_path)) == []
+
+
+def test_trend_table_renders_committed_history():
+    from benchmarks import make_tables
+    text = make_tables.trend_table()
+    assert "Bench history" in text
+    assert "**serving**" in text                 # seeded in this repo
