@@ -50,9 +50,9 @@ import jax
 import jax.numpy as jnp
 
 from repro import obs
-from repro.core.edgegrid import build_edge_grid, segvis_grid
-from repro.core.maps import make_map
-from repro.core.packed import _pack_edges, pack_bucketed
+from repro.core import (build_edge_grid, make_map, pack_bucketed,
+                        segvis_grid)
+from repro.core.packed import _pack_edges  # repolint: disable=layering -- the private packer IS the benchmark subject
 from repro.kernels import ops
 
 from . import common
@@ -158,7 +158,7 @@ def _grid_entries(maps, n_segments, rng):
 def _gather_entries(map_name, budget, B, rng):
     """Bucketed label gather — the memory-bound family: term is the
     slab bytes moved per batch (B rows x W slots x 20 B/slot f32)."""
-    from repro.core.packed import gather_labels_at_width
+    from repro.core import gather_labels_at_width
     ctx = common.suite(map_name)
     idx, _, _ = common.ehl_star_cached(ctx, budget)
     bx = pack_bucketed(idx)

@@ -48,7 +48,7 @@ def _hubdense_query(idx, num_hubs):
     """query_batch variant with the beyond-paper hub-scatter join."""
     @jax.jit
     def f(pk, s, t):
-        from repro.core.packed import locate_regions
+        from repro.core import locate_regions
         s = s.astype(jnp.float32)
         t = t.astype(jnp.float32)
         rs = locate_regions(pk, s)
@@ -138,8 +138,8 @@ def run(quick=False):
     # iteration D: bucketed packed layout — per-bucket dispatch replaces
     # global-Lmax padding (beyond-paper; Lmax is set by one huge region).
     # Real end-to-end routing through PathServer, not an extrapolation.
-    from repro.core.packed import dispatch_buckets, pack_bucketed
-    from repro.serving.engine import PathServer
+    from repro.core import dispatch_buckets, pack_bucketed
+    from repro.serving import PathServer
     bx20 = pack_bucketed(idx)
     srv = PathServer(bx20, batch_size=B0)
     srv.warmup()

@@ -28,9 +28,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.edgegrid import build_edge_grid, segvis_grid
-from repro.core.maps import make_map
-from repro.core.packed import _pack_edges
+from repro.core import build_edge_grid, make_map, segvis_grid
+from repro.core.packed import _pack_edges  # repolint: disable=layering -- the private packer IS the benchmark subject
 from repro.kernels import ops
 
 from . import common

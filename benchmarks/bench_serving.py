@@ -33,7 +33,6 @@ exits nonzero when a gate fails either way.
 from __future__ import annotations
 
 import argparse
-import os
 import sys
 import time
 

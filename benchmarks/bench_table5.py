@@ -10,8 +10,6 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
-
 from repro.core import astar, cluster_queries, workload_scores
 
 from . import common
@@ -30,12 +28,9 @@ def run(maps=("rooms-M", "maze-M", "scatter-M"), n_queries=300,
 
         # EHL-k baselines (disk-cached: the visibility sweep + hub labels
         # are built once per (map, cell size), not once per invocation)
-        base_mem = None
         for k in (1, 2, 4):
             idx, t_build = common.fresh_ehl_cached(ctx, k)
             mem = idx.label_memory() / 1e6
-            if k == 1:
-                base_mem = idx.label_memory()
             for qname, qs in qsets.items():
                 us = common.time_queries(idx, qs)
                 rows.append(common.emit(

@@ -13,15 +13,10 @@ import time
 
 import numpy as np
 
-from repro.checkpoint.store import load_ehl_index, save_ehl_index
-from repro.core.compression import compress_to_fraction
-from repro.core.grid import build_ehl
-from repro.core.hublabel import build_hub_labels
-from repro.core.maps import make_map
-from repro.core.packed import pack_index
-from repro.core.visgraph import build_visgraph
-from repro.core.workload import (cluster_queries, mixed_queries,
-                                 uniform_queries, workload_scores)
+from repro.checkpoint import load_ehl_index, save_ehl_index
+from repro.core import (build_ehl, build_hub_labels, build_visgraph,
+                        cluster_queries, compress_to_fraction, make_map,
+                        pack_index, uniform_queries)
 
 # map suite -> base cell size (EHL-1); EHL-k multiplies by k
 SUITE_CELLS = {"rooms-M": 2.0, "maze-M": 2.0, "scatter-M": 2.0}
@@ -181,7 +176,7 @@ def best_seconds(fn, *args, reps: int = 5) -> float:
 def time_queries(index, qs, batch_size: int = 256, reps: int = 3,
                  use_kernels: bool = False) -> float:
     """Mean us/query through the batched JAX engine (packed index)."""
-    from repro.serving.engine import PathServer
+    from repro.serving import PathServer
     pk = pack_index(index)
     srv = PathServer(pk, batch_size=batch_size, use_kernels=use_kernels)
     srv.warmup()
@@ -254,7 +249,7 @@ def write_bench_json(name: str, *, qps: float = None, p50_ms: float = None,
         "name": name,
         "schema_version": BENCH_SCHEMA_VERSION,
         "git_sha": git_sha(),
-        "written_at": time.time(),
+        "written_at": time.time(),  # repolint: disable=monotonic-time -- wall stamp is run metadata, never subtracted
         "qps": qps,
         "p50_ms": p50_ms,
         "p95_ms": p95_ms,

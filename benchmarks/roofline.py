@@ -28,7 +28,6 @@ import argparse
 import dataclasses
 import json
 
-import numpy as np
 
 PEAK_FLOPS = 197e12
 HBM_BW = 819e9
@@ -53,7 +52,7 @@ def _calib_cfg(cfg, n_layers, n_dense, enc_layers, seq_len):
 def _measure(cfg, shape, mesh):
     """Lower + compile one calibration config; return cost vector."""
     import jax
-    from repro.launch.dryrun import build_step, collective_bytes
+    from repro.launch import build_step, collective_bytes
     with mesh:
         fn, args, in_sh = build_step(cfg, shape, mesh)
         compiled = jax.jit(fn, in_shardings=in_sh).lower(*args).compile()
@@ -179,9 +178,9 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     from repro.configs import ARCH_IDS, get_config
-    from repro.launch.mesh import make_production_mesh
-    from repro.models.config import LM_SHAPES, shape_applicable
-    from repro.distributed.hints import set_mesh_hints
+    from repro.launch import make_production_mesh
+    from repro.models import LM_SHAPES, shape_applicable
+    from repro.distributed import set_mesh_hints
 
     mesh = make_production_mesh()
     set_mesh_hints(mesh)

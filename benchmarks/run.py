@@ -14,7 +14,6 @@ import argparse
 import json
 import os
 import sys
-import time
 
 
 def main(argv=None) -> None:
@@ -30,7 +29,9 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
     only = set(args.only.split(",")) if args.only else None
 
-    t0 = time.time()
+    from repro import obs
+
+    t0 = obs.monotonic()
     print("name,us_per_call,derived")
 
     rows: list = []
@@ -100,15 +101,14 @@ def main(argv=None) -> None:
 
     # harness-level artifact: all collected CSV rows + the process-wide
     # metrics registry (every engine/server the benches built records there)
-    from repro import obs
     from . import common
     common.write_bench_json(
         "harness", registry=obs.REGISTRY,
         data={"rows": rows, "only": sorted(only) if only else None,
               "quick": args.quick, "full": args.full,
-              "total_s": time.time() - t0})
+              "total_s": obs.monotonic() - t0})
 
-    print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
+    print(f"# total {obs.monotonic() - t0:.1f}s", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,33 @@
+"""repolint: repo-specific invariants as a blocking static analysis pass.
+
+Usage::
+
+    python -m repro.analysis src benchmarks          # text report, exit 1
+    python -m repro.analysis --format json src
+    python -m repro.analysis --select lock-order src
+    python -m repro.analysis --list-rules
+
+The rules encode cross-cutting conventions the test suite cannot see
+(DESIGN.md §14): jit entries registered with the TRACES taxonomy, no host
+syncs on the staged dispatch path, subsystem import layering, monotonic
+timing, and a deadlock-free lock acquisition order.  Suppress a single
+site with ``# repolint: disable=<rule> -- <why>``.
+"""
+
+from __future__ import annotations
+
+from . import checkers  # noqa: F401  (registers the built-in rules)
+from .base import (Finding, Rule, get_rule, register, render_json,
+                   render_text, rules, run, suppressed)
+from .callgraph import CallGraph, ClassInfo, FuncInfo
+from .loader import ImportEdge, Module, Project, load_file, load_project
+
+__all__ = [
+    "Finding", "Rule", "register", "rules", "get_rule", "run",
+    "suppressed", "render_text", "render_json",
+    "CallGraph", "FuncInfo", "ClassInfo",
+    "ImportEdge", "Module", "Project", "load_file", "load_project",
+    "main",
+]
+
+from .cli import main  # noqa: E402  (CLI reuse in tests)

@@ -1,0 +1,7 @@
+"""Built-in checkers; importing this package registers all of them."""
+
+from . import (hot_path_sync, jit_registry, layering,  # noqa: F401
+               lock_order, monotonic_time)
+
+__all__ = ["hot_path_sync", "jit_registry", "layering", "lock_order",
+           "monotonic_time"]

@@ -1,0 +1,84 @@
+"""hot-path-sync: no host synchronization on the staged dispatch path.
+
+The continuous-batching loop overlaps H2D transfer with device compute by
+splitting every query into ``stage()`` (enqueue async copies) and
+``dispatch_staged()`` (launch kernels, return device handles).  Any host
+sync inside that path — ``.item()``, ``float(device_val)``,
+``np.asarray(device_val)``, ``block_until_ready`` — collapses the overlap
+and serializes the pipeline, without failing a single test: latency just
+quietly doubles.
+
+The walk is seeded from every ``stage`` / ``dispatch`` /
+``dispatch_staged`` / ``join_staged`` method in ``repro.serving`` and
+``repro.sharding`` (that covers each ``QueryEngine`` implementation, the
+``ShardRouter``, and the batcher's dispatch), follows the precise call
+graph, and flags sync constructs in any reached function that lives in
+those packages.  Sanctioned syncs (the quantized argmin rescue, terminal
+``_retire`` joins) carry ``# repolint: disable=hot-path-sync``
+suppressions with their justification.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator, List
+
+from ..base import Finding, register
+from ..callgraph import CallGraph, FuncInfo
+from ..loader import Project
+
+_SEED_NAMES = {"stage", "dispatch", "dispatch_staged", "join_staged"}
+_SCOPE = ("repro.serving", "repro.sharding")
+
+
+def _in_scope(mod_name: str) -> bool:
+    return mod_name.startswith(_SCOPE)
+
+
+def _flag(node: ast.AST) -> str:
+    """Reason string if ``node`` is a sync construct, else ''."""
+    if isinstance(node, ast.Call):
+        f = node.func
+        if isinstance(f, ast.Attribute):
+            if f.attr == "item" and not node.args and not node.keywords:
+                return ".item() forces a device->host sync"
+            if f.attr == "block_until_ready":
+                return "block_until_ready() blocks on device compute"
+            if f.attr == "asarray" and isinstance(f.value, ast.Name) \
+                    and f.value.id in ("np", "numpy"):
+                return "np.asarray() on a device value copies to host"
+        elif isinstance(f, ast.Name):
+            if f.id == "float" and node.args and \
+                    not isinstance(node.args[0], ast.Constant):
+                return "float() on a device value forces a sync"
+            if f.id == "block_until_ready":
+                return "block_until_ready() blocks on device compute"
+    return ""
+
+
+@register("hot-path-sync",
+          "no .item()/float()/np.asarray()/block_until_ready reachable "
+          "from stage/dispatch/dispatch_staged")
+def check(project: Project) -> Iterator[Finding]:
+    cg = CallGraph(project, precise=True)
+    seeds: List[FuncInfo] = [
+        fi for fi in cg.funcs.values()
+        if fi.name in _SEED_NAMES and fi.cls is not None
+        and _in_scope(fi.module.name)]
+    if not seeds:
+        return
+    reach = cg.reachable(seeds)
+    for qname in sorted(reach):
+        fi = cg.funcs.get(qname)
+        if fi is None or not _in_scope(fi.module.name):
+            continue
+        path = reach[qname]
+        via = "" if len(path) == 1 else \
+            f" (reached from {path[0]} via {' -> '.join(path[1:])})"
+        for node in ast.walk(fi.node):
+            reason = _flag(node)
+            if reason:
+                yield Finding("hot-path-sync", fi.module.path, node.lineno,
+                              node.col_offset,
+                              f"{reason} inside hot function "
+                              f"{qname}{via}")

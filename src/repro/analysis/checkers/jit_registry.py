@@ -1,0 +1,146 @@
+"""jit-registry: every jit trace point flows through ``_jit_entry``.
+
+Compile attribution (obs.profile), trace-count regression tests, and
+``PathServer.warmup()`` all key off the entry taxonomy in
+``core.packed``: a jit body that bypasses ``@_jit_entry("name")`` is
+invisible to all three — its compiles are unattributed and its first live
+trace pays an XLA compile inside the serving loop.  Three sub-checks:
+
+1. any reference to ``jax.jit`` in ``repro.*`` outside the ``_jit_entry``
+   implementation is a finding (this catches direct calls, decorators,
+   and ``partial(jax.jit, ...)`` alike, since all spell the attribute);
+2. the ``@_jit_entry`` decorator names must match ``TRACE_ENTRIES`` in
+   ``core.packed`` exactly, both directions — the static tuple is what
+   tests and docs enumerate;
+3. every entry's decorated function must be reachable from some engine
+   ``warmup`` method (call-graph walk): an unreachable entry means
+   ``PathServer.warmup()`` cannot pre-trace it and the taxonomy has
+   drifted from the serving surface.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Set, Tuple
+
+from ..base import Finding, register
+from ..callgraph import CallGraph, FuncInfo
+from ..loader import Module, Project
+
+_PACKED = "repro.core.packed"
+
+
+def _trace_entries(packed: Module) -> Tuple[Optional[int], Set[str]]:
+    """(lineno, names) of the ``TRACE_ENTRIES`` literal, if present."""
+    for node in packed.tree.body:
+        targets: List[ast.expr] = []
+        value: Optional[ast.expr] = None
+        if isinstance(node, ast.Assign):
+            targets, value = node.targets, node.value
+        elif isinstance(node, ast.AnnAssign):
+            targets, value = [node.target], node.value
+        for t in targets:
+            if isinstance(t, ast.Name) and t.id == "TRACE_ENTRIES":
+                names: Set[str] = set()
+                if isinstance(value, (ast.Tuple, ast.List)):
+                    for el in value.elts:
+                        if isinstance(el, ast.Constant) and \
+                                isinstance(el.value, str):
+                            names.add(el.value)
+                return node.lineno, names
+    return None, set()
+
+
+def _decorated_entries(project: Project) -> Dict[str, FuncInfo]:
+    """entry name -> decorated function, over all ``repro.*`` modules."""
+    out: Dict[str, FuncInfo] = {}
+    cg = CallGraph(project)
+    for fi in cg.funcs.values():
+        if not fi.module.name.startswith("repro"):
+            continue
+        for dec in getattr(fi.node, "decorator_list", ()):
+            if not isinstance(dec, ast.Call):
+                continue
+            fname = ""
+            if isinstance(dec.func, ast.Name):
+                fname = dec.func.id
+            elif isinstance(dec.func, ast.Attribute):
+                fname = dec.func.attr
+            if fname == "_jit_entry" and dec.args and \
+                    isinstance(dec.args[0], ast.Constant):
+                out[str(dec.args[0].value)] = fi
+    return out
+
+
+def _enclosing_ranges(mod: Module, names: Set[str]) -> List[Tuple[int, int]]:
+    """(start, end) line ranges of top-level defs named in ``names``."""
+    spans = []
+    for node in mod.tree.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) and \
+                node.name in names:
+            spans.append((node.lineno, node.end_lineno or node.lineno))
+    return spans
+
+
+@register("jit-registry",
+          "jax.jit only via core.packed._jit_entry; entry names match "
+          "TRACE_ENTRIES and are warmup-reachable")
+def check(project: Project) -> Iterator[Finding]:
+    packed = project.module(_PACKED)
+    in_repro = project.in_package("repro")
+
+    # (1) raw jax.jit references
+    allowed: Dict[str, List[Tuple[int, int]]] = {}
+    if packed is not None:
+        allowed[packed.path] = _enclosing_ranges(packed, {"_jit_entry"})
+    for mod in in_repro:
+        spans = allowed.get(mod.path, [])
+        for node in ast.walk(mod.tree):
+            if not (isinstance(node, ast.Attribute) and node.attr == "jit"
+                    and isinstance(node.value, ast.Name)
+                    and node.value.id == "jax"):
+                continue
+            if any(a <= node.lineno <= b for a, b in spans):
+                continue
+            yield Finding("jit-registry", mod.path, node.lineno,
+                          node.col_offset,
+                          "raw jax.jit reference; route this trace point "
+                          "through core.packed._jit_entry so TRACES / "
+                          "warmup / compile attribution see it")
+
+    if packed is None:
+        return
+    ent_line, declared = _trace_entries(packed)
+    decorated = _decorated_entries(project)
+
+    # (2) taxonomy drift, both directions
+    if ent_line is None:
+        yield Finding("jit-registry", packed.path, 1, 0,
+                      "core.packed has no TRACE_ENTRIES tuple to check "
+                      "the jit entry taxonomy against")
+    else:
+        for name in sorted(set(decorated) - declared):
+            fi = decorated[name]
+            yield Finding("jit-registry", fi.module.path, fi.lineno, 0,
+                          f"jit entry {name!r} is not listed in "
+                          f"core.packed.TRACE_ENTRIES")
+        for name in sorted(declared - set(decorated)):
+            yield Finding("jit-registry", packed.path, ent_line, 0,
+                          f"TRACE_ENTRIES lists {name!r} but no "
+                          f"@_jit_entry({name!r}) definition exists")
+
+    # (3) warmup reachability
+    cg = CallGraph(project)
+    seeds = [fi for fi in cg.funcs.values()
+             if fi.name == "warmup" and fi.cls is not None
+             and fi.module.name.startswith(("repro.serving",
+                                            "repro.sharding"))]
+    if not seeds:
+        return
+    reach = cg.reachable(seeds)
+    for name, fi in sorted(decorated.items()):
+        if fi.qname not in reach:
+            yield Finding("jit-registry", fi.module.path, fi.lineno, 0,
+                          f"jit entry {name!r} is not reachable from any "
+                          f"serving warmup(); first live trace would "
+                          f"compile inside the serving loop")

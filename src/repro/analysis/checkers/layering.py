@@ -1,0 +1,107 @@
+"""layering: the import graph respects the subsystem boundaries.
+
+Three rules, one per boundary that has bitten before:
+
+* ``repro.obs`` must be importable without jax at module scope — the obs
+  layer runs in collectors, notebooks, and the launch CLI where jax may
+  be absent or deliberately unloaded; function-local jax imports are the
+  sanctioned lazy escape (obs/profile.py uses them);
+* ``repro.core`` never imports ``repro.serving`` / ``repro.indexing`` —
+  core is the leaf layer; a core->serving edge makes the pack/join
+  kernels untestable in isolation and invites import cycles;
+* ``benchmarks/`` never deep-imports past a package ``__init__`` — the
+  package exports are the supported API surface; benches that reach into
+  private modules break silently on refactors and bypass the lazy-import
+  discipline the packages maintain.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Set
+
+from ..base import Finding, register
+from ..loader import Module, Project
+
+
+def _exported_names(mod: Module) -> Set[str]:
+    """Names bound at ``mod``'s top level (incl. ``__all__`` entries)."""
+    out: Set[str] = set()
+    for node in mod.tree.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            out.add(node.name)
+        elif isinstance(node, ast.Assign):
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    out.add(t.id)
+            if any(isinstance(t, ast.Name) and t.id == "__all__"
+                   for t in node.targets) and \
+                    isinstance(node.value, (ast.List, ast.Tuple)):
+                for el in node.value.elts:
+                    if isinstance(el, ast.Constant) and \
+                            isinstance(el.value, str):
+                        out.add(el.value)
+        elif isinstance(node, ast.AnnAssign) and \
+                isinstance(node.target, ast.Name):
+            out.add(node.target.id)
+    for e in mod.imports:
+        out.update(e.names)
+        if not e.names:          # plain `import x.y` binds `x`
+            out.add(e.module.split(".")[0])
+    return out
+
+
+@register("layering",
+          "obs stays jax-free at module scope; core never imports "
+          "serving/indexing; benchmarks use package exports only")
+def check(project: Project) -> Iterator[Finding]:
+    # obs: no toplevel jax
+    for mod in project.in_package("repro.obs"):
+        for e in project.imports_of(mod, toplevel_only=True):
+            if e.module == "jax" or e.module.startswith("jax."):
+                yield Finding("layering", mod.path, e.lineno, e.col,
+                              "repro.obs must stay importable without jax "
+                              "at module scope; import jax inside the "
+                              "function that needs it (DESIGN.md §12)")
+
+    # core: never serving/indexing, even lazily
+    for mod in project.in_package("repro.core"):
+        for e in mod.imports:
+            if e.module.startswith(("repro.serving", "repro.indexing")):
+                yield Finding("layering", mod.path, e.lineno, e.col,
+                              f"repro.core must not import {e.module} "
+                              "(core is the leaf layer; invert the "
+                              "dependency)")
+
+    # benchmarks: package exports only
+    for mod in project.in_package("benchmarks"):
+        for e in mod.imports:
+            if not e.module.startswith("repro"):
+                continue
+            target = project.module(e.module)
+            if target is None:
+                # not under the scanned roots (e.g. src/ not given);
+                # a dotted submodule name is still detectably deep
+                if e.module.count(".") >= 2:
+                    yield Finding("layering", mod.path, e.lineno, e.col,
+                                  f"benchmark deep-imports {e.module}; "
+                                  "import from the package __init__ "
+                                  "exports instead")
+                continue
+            if not target.path.endswith("__init__.py"):
+                yield Finding("layering", mod.path, e.lineno, e.col,
+                              f"benchmark deep-imports {e.module}; "
+                              "import from the package __init__ exports "
+                              "instead")
+                continue
+            exported = _exported_names(target)
+            for n in e.names:
+                if n == "*" or n in exported:
+                    continue
+                # `from repro import serving`-style subpackage pulls
+                if project.module(f"{e.module}.{n}") is not None:
+                    continue
+                yield Finding("layering", mod.path, e.lineno, e.col,
+                              f"benchmark imports {n!r} which "
+                              f"{e.module}.__init__ does not export")

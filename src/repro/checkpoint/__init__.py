@@ -1,1 +1,2 @@
 from . import store  # noqa: F401
+from .store import load_ehl_index, save_ehl_index  # noqa: F401

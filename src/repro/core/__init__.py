@@ -29,6 +29,7 @@ from .packed import (PackedIndex, BucketedIndex,            # noqa: F401
                      bucketed_device_bytes,
                      query_batch, query_batch_argmin,
                      query_batch_bucketed, dispatch_buckets,
+                     locate_regions,
                      gather_labels_at_width, join_gathered,
                      gather_masked_labels, join_masked, covis_blocked,
                      rescue_exact, splice_rescue, wire_dtypes)

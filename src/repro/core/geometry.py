@@ -32,7 +32,7 @@ vertices); a fully-interior segment is the oracle's job alone.
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterable, Sequence
+from typing import Iterable
 
 import numpy as np
 

@@ -95,7 +95,6 @@ def build_hub_labels(g: VisGraph, order: np.ndarray | None = None) -> HubLabels:
         pq = [(0.0, hub, hub)]   # (dist, vertex, next_hop_toward_hub)
         dist[hub] = 0.0
         touched.append(hub)
-        nh_arr = {hub: hub}
         settled = set()
         while pq:
             d, u, nh = heapq.heappop(pq)

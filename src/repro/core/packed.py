@@ -70,7 +70,7 @@ from __future__ import annotations
 
 import dataclasses
 import threading
-from functools import partial, wraps
+from functools import wraps
 
 import numpy as np
 
@@ -262,6 +262,23 @@ class TraceCounter:
 
 
 TRACES = TraceCounter()
+
+#: The jit entry taxonomy: every ``@_jit_entry("name")`` in the tree, in
+#: rough serving-path order.  Static so tests, docs, and the
+#: ``jit-registry`` checker can enumerate the surface without tracing;
+#: the checker fails CI if this tuple and the decorators ever drift.
+TRACE_ENTRIES = (
+    "fold_endpoint",
+    "join_endpoints",
+    "gather_labels_at_width",
+    "join_gathered",
+    "gather_masked_labels",
+    "covis_blocked",
+    "join_masked",
+    "gather_masked_exact",
+    "gather_quant_rows",
+    "dequant_masked_labels",
+)
 
 
 def _jit_entry(entry: str, **jit_kw):
@@ -1242,7 +1259,7 @@ def query_batch_at_bucket(bx: BucketedIndex, s: jnp.ndarray, t: jnp.ndarray,
 # sharded dispatch primitives (repro.sharding)
 # ---------------------------------------------------------------------------
 
-@_jit_entry("gather_labels_at_width", static_argnames=("width",))
+@_jit_entry("gather_labels_at_width", static_argnames=("width",))  # repolint: disable=jit-registry -- library-only full-gather API; no engine calls it, so warmup cannot reach it
 def gather_labels_at_width(bx: BucketedIndex, regions: jnp.ndarray,
                            width: int):
     """Gather [B] regions' labels as dense [B, width] tensors.
@@ -1257,7 +1274,7 @@ def gather_labels_at_width(bx: BucketedIndex, regions: jnp.ndarray,
     return _gather_bucketed(bx, regions, bucket, width)
 
 
-@_jit_entry("join_gathered", static_argnames=("use_kernels", "want_argmin"))
+@_jit_entry("join_gathered", static_argnames=("use_kernels", "want_argmin"))  # repolint: disable=jit-registry -- library-only full-gather API; no engine calls it, so warmup cannot reach it
 def join_gathered(labels_s, labels_t, s: jnp.ndarray, t: jnp.ndarray,
                   edges_a: jnp.ndarray, edges_b: jnp.ndarray,
                   edges_c: jnp.ndarray | None = None,

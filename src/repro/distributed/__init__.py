@@ -1,1 +1,2 @@
 from . import fault, sharding  # noqa: F401
+from .hints import set_mesh_hints  # noqa: F401

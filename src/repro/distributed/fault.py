@@ -21,7 +21,6 @@ timeouts).  This module packages the control-plane reaction:
 from __future__ import annotations
 
 import dataclasses
-import time
 
 
 @dataclasses.dataclass

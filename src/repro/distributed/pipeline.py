@@ -18,8 +18,6 @@ scope here and documented).
 
 from __future__ import annotations
 
-import numpy as np
-
 import jax
 import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
@@ -92,8 +90,6 @@ def pipeline_forward(cfg, params, tokens, *, n_micro: int,
         picked = jax.lax.psum(picked, axis)
         return picked.reshape(B, S, d)
 
-    dp = tuple(a for a in ("data",) if a in mesh.axis_names)
-    da = dp[0] if dp else None
     y = shard_map(
         inner, mesh=mesh,
         in_specs=(jax.tree.map(lambda _: P(axis), blocks), P(axis),

@@ -34,6 +34,7 @@ import numpy as np
 
 from repro import obs
 from repro.core.grid import EHLIndex
+from repro.obs.locks import make_lock
 from repro.core.packed import pack_bucketed
 from repro.serving.query_engine import make_engine
 
@@ -185,7 +186,7 @@ class IndexManager:
         self.history: list[SwapRecord] = []
         self.validation_failures = 0
         self._thread: threading.Thread | None = None
-        self._adapt_lock = threading.Lock()
+        self._adapt_lock = make_lock("indexing.adapt")
 
     # ------------------------------------------------------------- queries
     @property

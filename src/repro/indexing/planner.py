@@ -44,7 +44,7 @@ import dataclasses
 import numpy as np
 
 from repro import obs
-from repro.core.compression import (CompressionStats, compress_incremental,
+from repro.core.compression import (CompressionStats,
                                     compress_to_device_budget)
 
 

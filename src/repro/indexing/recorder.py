@@ -21,9 +21,9 @@ Properties:
 
 from __future__ import annotations
 
-import threading
-
 import numpy as np
+
+from repro.obs.locks import make_lock
 
 
 class WorkloadRecorder:
@@ -39,7 +39,7 @@ class WorkloadRecorder:
         self._decay = 0.5 ** (1.0 / halflife) if halflife > 0 else 1.0
         self.w = np.zeros(self.nx * self.ny, dtype=np.float64)
         self.queries = 0            # total queries ever recorded
-        self._lock = threading.Lock()
+        self._lock = make_lock("workload.recorder")
 
     @classmethod
     def for_index(cls, index, **kw) -> "WorkloadRecorder":

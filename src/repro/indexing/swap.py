@@ -22,10 +22,10 @@ than the lock's pointer flip — zero downtime by construction.
 from __future__ import annotations
 
 import contextlib
-import threading
 
 import numpy as np
 
+from repro.obs.locks import make_lock
 from repro.serving.query_engine import QueryEngine
 
 
@@ -35,7 +35,7 @@ class SwappableEngine(QueryEngine):
     name = "swappable"
 
     def __init__(self, engine: QueryEngine):
-        self._lock = threading.Lock()
+        self._lock = make_lock("engine.swap")
         self._current = engine
         engine.generation = 0   # each wrapped engine is 1:1 with its
         self._gen = 0           # generation (stamped here and in swap())

@@ -74,6 +74,7 @@ def _segvis_kernel(p_ref, q_ref, ea_ref, eb_ref, ec_ref, out_ref):
         out_ref[0, :] = out_ref[0, :] | blocked
 
 
+# repolint: disable=jit-registry -- build-time visibility kernel; never on the serving path
 @functools.partial(jax.jit, static_argnames=("seg_blk", "edge_blk", "interpret"))
 def segvis(p: jnp.ndarray, q: jnp.ndarray, ea: jnp.ndarray, eb: jnp.ndarray,
            ec: jnp.ndarray | None = None, *,
@@ -150,6 +151,7 @@ def _segvis_tiles_kernel(p_ref, q_ref, ax_ref, ay_ref, bx_ref, by_ref,
         out_ref[0, :] = out_ref[0, :] | blocked
 
 
+# repolint: disable=jit-registry -- build-time visibility kernel; never on the serving path
 @functools.partial(jax.jit, static_argnames=("seg_blk", "tile_blk",
                                              "interpret"))
 def segvis_tiles(p: jnp.ndarray, q: jnp.ndarray,

@@ -1,1 +1,14 @@
 from .mesh import make_host_mesh, make_production_mesh  # noqa: F401
+
+__all__ = ["make_host_mesh", "make_production_mesh",
+           "build_step", "collective_bytes"]
+
+
+def __getattr__(name):
+    # dryrun forces XLA_FLAGS to 512 host devices at import time (it
+    # must precede jax init), so it may only load when actually asked
+    # for — importing repro.launch must never change the device count.
+    if name in ("build_step", "collective_bytes"):
+        from . import dryrun
+        return getattr(dryrun, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -13,7 +13,6 @@ Usage (CPU example, also examples/train_lm.py):
 from __future__ import annotations
 
 import argparse
-import dataclasses
 from functools import partial
 
 import jax
@@ -116,6 +115,7 @@ def main(argv=None):
             lambda k: T.init_params(cfg, k, dtype=dtype),
             jax.random.PRNGKey(0))
         pshard = param_shardings(pshapes, mesh)
+        # repolint: disable=jit-registry -- training launcher, outside the serving taxonomy
         init = jax.jit(lambda k: T.init_params(cfg, k, dtype=dtype),
                        out_shardings=pshard)
         params = init(jax.random.PRNGKey(0))
@@ -123,7 +123,7 @@ def main(argv=None):
         bspec = NamedSharding(mesh, batch_spec(mesh))
         step_fn = build_train_step(cfg, ocfg, mesh,
                                    grad_compress=args.grad_compress)
-        jstep = jax.jit(step_fn, donate_argnums=(0, 1))
+        jstep = jax.jit(step_fn, donate_argnums=(0, 1))  # repolint: disable=jit-registry -- training step, outside the serving taxonomy
 
         start = 0
         if args.resume:

@@ -1,4 +1,5 @@
 """Model zoo: unified decoder/enc-dec covering the 10 assigned archs."""
-from .config import LM_SHAPES, MLAConfig, ModelConfig, ShapeSpec, SSMConfig  # noqa: F401
+from .config import (LM_SHAPES, MLAConfig, ModelConfig, ShapeSpec,  # noqa: F401
+                     SSMConfig, shape_applicable)
 from .transformer import (decode_step, forward, init_cache, init_params,    # noqa: F401
                           loss_fn, encode)

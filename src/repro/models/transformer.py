@@ -19,7 +19,6 @@ Public entry points: ``init_params``, ``forward`` (train/prefill),
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp

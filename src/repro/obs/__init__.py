@@ -19,6 +19,8 @@ sampling rate 0, events suppressed — the registry stays live because it
 """
 
 from .events import EventLog
+from .locks import (LOCK_RANKS, LockOrderError, OrderedLock, held_locks,
+                    lock_check_enabled, make_lock)
 from .metrics import (DEFAULT_LATENCY_BOUNDS_MS, Counter, Gauge, Histogram,
                       MetricsRegistry, REGISTRY, log_bounds,
                       next_instance_id)
@@ -35,11 +37,13 @@ __all__ = [
     "ASYNC_STAGES", "BUILD_STAGES", "SYNC_STAGES",
     "CompileCapture", "CompileRecord", "Counter",
     "DEFAULT_LATENCY_BOUNDS_MS",
-    "EventLog", "Gauge", "HeadSampler", "Histogram", "MetricsRegistry",
+    "EventLog", "Gauge", "HeadSampler", "Histogram", "LOCK_RANKS",
+    "LockOrderError", "MetricsRegistry", "OrderedLock",
     "REGISTRY", "Span", "StatsView", "Stopwatch", "Telemetry", "Trace",
     "TraceLog",
-    "aot_cost", "disable_profile", "enable_profile", "json_snapshot",
-    "log_bounds", "monotonic", "next_instance_id", "normalize_cost",
+    "aot_cost", "disable_profile", "enable_profile", "held_locks",
+    "json_snapshot", "lock_check_enabled", "log_bounds", "make_lock",
+    "monotonic", "next_instance_id", "normalize_cost",
     "parse_prometheus", "profiled", "prometheus_text",
 ]
 

@@ -25,10 +25,11 @@ covis_assist       a sharded dispatch needed cross-shard co-visibility
 from __future__ import annotations
 
 import json
-import threading
 import time
 from collections import deque
 from typing import List, Optional
+
+from .locks import make_lock
 
 
 class EventLog:
@@ -37,7 +38,7 @@ class EventLog:
     def __init__(self, capacity: int = 4096, path: Optional[str] = None,
                  enabled: bool = True):
         self._ring: deque = deque(maxlen=int(capacity))
-        self._lock = threading.Lock()
+        self._lock = make_lock("obs.events")
         self._seq = 0
         self._fh = None
         self.enabled = enabled
@@ -61,8 +62,12 @@ class EventLog:
     def emit(self, kind: str, **fields) -> Optional[dict]:
         if not self.enabled:
             return None
-        ev = {"kind": kind, "ts": time.time(),
-              "mono": time.perf_counter(), **fields}
+        # ts is wall-clock *on purpose* — it is a datum for humans
+        # correlating the JSONL with external logs, never a duration
+        # operand; ts_mono is what joins against span/stopwatch data.
+        ev = {"kind": kind,
+              "ts": time.time(),  # repolint: disable=monotonic-time -- wall time is the datum here, ts_mono carries ordering
+              "ts_mono": time.perf_counter(), **fields}
         with self._lock:
             self._seq += 1
             ev["seq"] = self._seq

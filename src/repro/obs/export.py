@@ -14,7 +14,7 @@ import math
 import re
 from typing import Dict, Tuple
 
-from .metrics import Counter, Gauge, Histogram, MetricsRegistry
+from .metrics import Gauge, Histogram, MetricsRegistry
 
 _NAME_RE = re.compile(r"^[a-zA-Z_:][a-zA-Z0-9_:]*$")
 _LINE_RE = re.compile(

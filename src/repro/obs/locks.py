@@ -1,0 +1,142 @@
+"""Named locks with a repo-wide acquisition order (DESIGN.md §14).
+
+Every lock in the serving/indexing/obs threading mesh is created through
+:func:`make_lock` under a name from :data:`LOCK_RANKS`.  The name buys two
+things:
+
+* the static lock-order checker (``repro.analysis``, rule ``lock-order``)
+  maps each ``with self._lock`` site to its rank and fails CI on any
+  acquisition-graph cycle or rank inversion — AB/BA deadlocks are caught
+  at lint time, before a scheduler ever interleaves them;
+* with ``REPRO_LOCK_CHECK=1`` in the environment, :func:`make_lock`
+  returns an :class:`OrderedLock` that asserts the same partial order at
+  runtime: acquiring a lock whose rank is <= any rank the thread already
+  holds raises immediately with both lock names.  The batcher/swap stress
+  tests run under this sanitizer in CI.
+
+The rank table is the authoritative partial order.  Lower rank = acquired
+first (outermost).  Locks that are never held while acquiring another can
+share neighborhood freely; the gaps leave room for new subsystems.
+"""
+
+from __future__ import annotations
+
+import os
+import threading
+from typing import Dict, List, Optional
+
+#: name -> rank.  An OrderedLock may only be acquired while every lock the
+#: thread already holds has a *strictly smaller* rank.
+LOCK_RANKS: Dict[str, int] = {
+    "indexing.adapt": 10,       # IndexManager._adapt_lock (one rebuild)
+    "batcher.queue": 20,        # CoalescingBatcher queue/condition
+    "engine.swap": 30,          # SwappableEngine pin/swap pointer flip
+    "batcher.ticket": 40,       # Ticket result scatter
+    "workload.recorder": 50,    # WorkloadRecorder histogram
+    "obs.profile": 55,          # CompileCapture record list
+    "obs.registry": 60,         # MetricsRegistry series creation
+    "obs.series": 70,           # Counter/Gauge/Histogram mutation (leaf)
+    "obs.events": 80,           # EventLog ring + JSONL sink (leaf)
+    "obs.spans": 85,            # TraceLog ring (leaf)
+    "obs.sampler": 90,          # HeadSampler accumulator (leaf)
+}
+
+
+def lock_check_enabled() -> bool:
+    """True when the runtime lock-order sanitizer is requested."""
+    return os.environ.get("REPRO_LOCK_CHECK", "") == "1"
+
+
+class LockOrderError(RuntimeError):
+    """A thread acquired locks against the declared partial order."""
+
+
+class _HeldStack(threading.local):
+    def __init__(self) -> None:
+        self.stack: List["OrderedLock"] = []
+
+
+_HELD = _HeldStack()
+
+
+class OrderedLock:
+    """Debug lock asserting the :data:`LOCK_RANKS` partial order.
+
+    Drop-in for ``threading.Lock`` (including as the lock behind a
+    ``threading.Condition``: ``_is_owned`` is provided so the condition
+    never probes ownership with a rank-checked ``acquire(0)``).  The
+    thread-local held stack is shared across all OrderedLocks, so nesting
+    across subsystems is checked, not just within one object.
+    """
+
+    def __init__(self, name: str):
+        if name not in LOCK_RANKS:
+            raise KeyError(f"lock name {name!r} has no declared rank "
+                           f"(add it to repro.obs.locks.LOCK_RANKS)")
+        self.name = name
+        self.rank = LOCK_RANKS[name]
+        self._lock = threading.Lock()
+        self._owner: Optional[int] = None
+
+    # ------------------------------------------------------------- protocol
+    def acquire(self, blocking: bool = True, timeout: float = -1) -> bool:
+        held = _HELD.stack
+        for h in held:
+            if h.rank >= self.rank:
+                raise LockOrderError(
+                    f"lock-order violation: acquiring {self.name!r} "
+                    f"(rank {self.rank}) while holding {h.name!r} "
+                    f"(rank {h.rank}); declared order requires strictly "
+                    "increasing ranks (see repro.obs.locks.LOCK_RANKS)")
+        got = self._lock.acquire(blocking, timeout)
+        if got:
+            self._owner = threading.get_ident()
+            held.append(self)
+        return got
+
+    def release(self) -> None:
+        self._owner = None
+        # release in any order is legal; drop the newest matching entry
+        stack = _HELD.stack
+        for i in range(len(stack) - 1, -1, -1):
+            if stack[i] is self:
+                del stack[i]
+                break
+        self._lock.release()
+
+    def locked(self) -> bool:
+        return self._lock.locked()
+
+    def _is_owned(self) -> bool:
+        """Condition-variable hook (avoids the ``acquire(0)`` probe)."""
+        return self._owner == threading.get_ident()
+
+    def __enter__(self) -> bool:
+        return self.acquire()
+
+    def __exit__(self, *exc: object) -> None:
+        self.release()
+
+    def __repr__(self) -> str:
+        return f"OrderedLock({self.name!r}, rank={self.rank})"
+
+
+def make_lock(name: str):
+    """A ``threading.Lock`` — or, under ``REPRO_LOCK_CHECK=1``, an
+    :class:`OrderedLock` asserting ``name``'s declared rank.
+
+    ``name`` must appear in :data:`LOCK_RANKS` (checked by the static
+    analysis pass even when the sanitizer is off, so an unranked name
+    fails CI rather than first failing in a debug run).
+    """
+    if lock_check_enabled():
+        return OrderedLock(name)
+    if name not in LOCK_RANKS:
+        raise KeyError(f"lock name {name!r} has no declared rank "
+                       f"(add it to repro.obs.locks.LOCK_RANKS)")
+    return threading.Lock()
+
+
+def held_locks() -> List[str]:
+    """Names of OrderedLocks held by the calling thread (debug aid)."""
+    return [h.name for h in _HELD.stack]

@@ -33,10 +33,11 @@ from __future__ import annotations
 
 import itertools
 import math
-import threading
 from typing import Dict, Iterable, List, Optional, Tuple
 
 import numpy as np
+
+from .locks import make_lock
 
 LabelKey = Tuple[Tuple[str, str], ...]
 
@@ -72,7 +73,7 @@ class Counter:
         self.name = name
         self.labels = labels
         self._value = 0.0
-        self._lock = threading.Lock()
+        self._lock = make_lock("obs.series")
 
     def inc(self, v: float = 1.0) -> None:
         with self._lock:
@@ -125,7 +126,7 @@ class Histogram:
         self.sum = 0.0
         self.min = math.inf
         self.max = -math.inf
-        self._lock = threading.Lock()
+        self._lock = make_lock("obs.series")
 
     @property
     def count(self) -> int:
@@ -201,7 +202,7 @@ class MetricsRegistry:
     """Get-or-create store of labeled Counter/Gauge/Histogram series."""
 
     def __init__(self):
-        self._lock = threading.Lock()
+        self._lock = make_lock("obs.registry")
         self._metrics: Dict[Tuple[str, LabelKey], object] = {}
 
     def _get(self, cls, name: str, labels: Dict[str, str], **kw):

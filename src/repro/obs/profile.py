@@ -36,10 +36,10 @@ or packed import here would cycle.
 
 from __future__ import annotations
 
-import threading
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
+from .locks import make_lock
 from .metrics import MetricsRegistry, REGISTRY
 from .timing import Stopwatch
 
@@ -117,7 +117,7 @@ class CompileCapture:
         self.records: List[CompileRecord] = []
         self.max_records = int(max_records)
         self.counter = None          # TraceCounter, bound by enable_profile
-        self._lock = threading.Lock()
+        self._lock = make_lock("obs.profile")
 
     # -- dispatcher hook (called from packed._jit_entry wrappers) ---------
 
@@ -241,5 +241,5 @@ def aot_cost(fn, *args, static_argnames=None, **kw) -> dict:
     jit_kw = {}
     if static_argnames is not None:
         jit_kw["static_argnames"] = static_argnames
-    jf = fn if hasattr(fn, "lower") else jax.jit(fn, **jit_kw)
+    jf = fn if hasattr(fn, "lower") else jax.jit(fn, **jit_kw)  # repolint: disable=jit-registry -- aot_cost probes arbitrary callables offline
     return normalize_cost(jf.lower(*args, **kw).compile().cost_analysis())

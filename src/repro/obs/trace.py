@@ -43,9 +43,10 @@ timestamps, so tail outliers always land in the ring regardless of rate.
 
 from __future__ import annotations
 
-import threading
 from collections import deque
 from typing import Dict, List, Optional, Tuple
+
+from .locks import make_lock
 
 ASYNC_STAGES: Tuple[str, ...] = (
     "admission", "queue_wait", "stage", "dispatch", "pipeline_wait",
@@ -147,7 +148,7 @@ class HeadSampler:
         self.rate = float(rate)
         self.slow_ms = float(slow_ms)
         self._acc = 0.0
-        self._lock = threading.Lock()
+        self._lock = make_lock("obs.sampler")
 
     def sample(self) -> bool:
         if self.rate <= 0.0:
@@ -168,7 +169,7 @@ class TraceLog:
 
     def __init__(self, capacity: int = 1024):
         self._ring: deque = deque(maxlen=int(capacity))
-        self._lock = threading.Lock()
+        self._lock = make_lock("obs.spans")
         self.recorded = 0
 
     def add(self, trace: Trace) -> None:

@@ -8,7 +8,6 @@ out of FSDP param sharding for free).
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any
 
 import jax

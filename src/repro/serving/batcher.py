@@ -49,6 +49,12 @@ import jax
 
 from repro import obs
 from repro.core.packed import empty_results
+from repro.obs.locks import make_lock
+
+from typing import TYPE_CHECKING
+
+if TYPE_CHECKING:             # import cycle: engine lazily imports us
+    from repro.serving.engine import PathServer
 
 
 class QueueFull(RuntimeError):
@@ -64,7 +70,7 @@ class Ticket:
         self.want_argmin = want_argmin
         self._outs = empty_results(n, want_argmin)
         self._remaining = n
-        self._lock = threading.Lock()
+        self._lock = make_lock("batcher.ticket")
         self._event = threading.Event()
         self.t_submit = time.perf_counter()      # span root (obs.Trace)
         self.completed_at: float | None = None   # perf_counter stamp
@@ -155,7 +161,7 @@ class CoalescingBatcher:
     server; constructed via ``PathServer.start_async()``.
     """
 
-    def __init__(self, server, max_wait_ms: float = 2.0,
+    def __init__(self, server: "PathServer", max_wait_ms: float = 2.0,
                  max_queue: int = 8192, policy: str = "block",
                  depth: int = 2, autostart: bool = True):
         if policy not in ("block", "shed"):
@@ -173,7 +179,7 @@ class CoalescingBatcher:
         self._in_flight = 0         # entries staged/dispatched, not retired
         self._force = False         # flush() latch: ship everything queued
         self._closing = False
-        self._lock = threading.Lock()
+        self._lock = make_lock("batcher.queue")
         self._cond = threading.Condition(self._lock)
         self._thread: threading.Thread | None = None
         if autostart:

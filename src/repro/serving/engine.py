@@ -416,6 +416,7 @@ class LMServer:
         self.params = params
         self.cache = cache
         self.stats = ServeStats()
+        # repolint: disable=jit-registry -- LM decode demo, not an EHL query entry
         self._step = jax.jit(
             lambda p, c, t: T.decode_step(cfg, p, c, t))
 

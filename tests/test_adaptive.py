@@ -5,7 +5,7 @@ import pytest
 
 from repro.core.compression import compress_to_device_budget
 from repro.core.grid import build_ehl
-from repro.core.packed import bucketed_device_bytes, pack_bucketed
+from repro.core.packed import bucketed_device_bytes
 from repro.core.workload import cluster_queries
 from repro.indexing import (BudgetPlanner, IndexManager, SwappableEngine,
                             WorkloadRecorder)

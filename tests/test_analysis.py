@@ -1,0 +1,486 @@
+"""repro.analysis: checker fixtures, suppressions, lock order, CLI.
+
+Each checker gets a known-bad fixture (must produce findings), a
+known-good fixture (must not), and a suppression fixture (finding
+silenced by ``# repolint: disable=<rule>``).  The lock-order section
+seeds an AB/BA deadlock and asserts both the rank inversion and the
+cycle are reported; the runtime ``OrderedLock`` sanitizer is exercised
+directly, including as the lock behind a ``threading.Condition``.  The
+final regression runs the full pass over the real tree and requires
+zero findings — the same gate CI enforces.
+"""
+
+import json
+import os
+import threading
+import time
+
+import pytest
+
+from repro.analysis import load_project, run
+from repro.analysis.cli import main as cli_main
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def make_project(tmp_path, files):
+    for rel, src in files.items():
+        p = tmp_path / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(src)
+    return load_project([str(tmp_path)], root=str(tmp_path))
+
+
+def findings_for(tmp_path, files, rule):
+    return [f for f in run(make_project(tmp_path, files), select=[rule])]
+
+
+# ------------------------------------------------------------ jit-registry
+def test_jit_registry_flags_raw_jax_jit(tmp_path):
+    fs = {"src/repro/serving/j.py":
+          "import jax\nf = jax.jit(lambda x: x)\n"}
+    out = findings_for(tmp_path, fs, "jit-registry")
+    assert len(out) == 1 and out[0].line == 2
+    assert "raw jax.jit" in out[0].message
+
+
+def test_jit_registry_flags_partial_jax_jit(tmp_path):
+    fs = {"src/repro/serving/j.py":
+          "import functools\nimport jax\n"
+          "@functools.partial(jax.jit, static_argnames=('n',))\n"
+          "def f(x, n):\n    return x\n"}
+    out = findings_for(tmp_path, fs, "jit-registry")
+    assert len(out) == 1 and out[0].line == 3
+
+
+def test_jit_registry_taxonomy_drift_both_directions(tmp_path):
+    fs = {"src/repro/core/packed.py": (
+        "TRACE_ENTRIES = ('a',)\n"
+        "def _jit_entry(entry, **kw):\n"
+        "    def deco(fn):\n        return fn\n    return deco\n"
+        "@_jit_entry('b')\n"
+        "def entry_b():\n    pass\n")}
+    msgs = [f.message for f in findings_for(tmp_path, fs, "jit-registry")]
+    assert any("'b' is not listed" in m for m in msgs)
+    assert any("lists 'a'" in m for m in msgs)
+
+
+def test_jit_registry_clean_and_suppressed(tmp_path):
+    assert not findings_for(
+        tmp_path, {"src/repro/serving/ok.py": "def f():\n    return 1\n"},
+        "jit-registry")
+    fs = {"src/repro/serving/j.py":
+          "import jax\n"
+          "f = jax.jit(lambda x: x)  "
+          "# repolint: disable=jit-registry -- fixture\n"}
+    assert not findings_for(tmp_path, fs, "jit-registry")
+
+
+# ----------------------------------------------------------- hot-path-sync
+_HOT_BAD = """\
+import numpy as np
+
+class Engine:
+    def stage(self, s):
+        return np.asarray(s)
+
+    def dispatch_staged(self, staged):
+        return self._finish(staged)
+
+    def _finish(self, staged):
+        return staged.item()
+"""
+
+
+def test_hot_path_sync_flags_direct_and_via_callee(tmp_path):
+    out = findings_for(tmp_path, {"src/repro/serving/e.py": _HOT_BAD},
+                       "hot-path-sync")
+    lines = {f.line for f in out}
+    assert 5 in lines                       # np.asarray inside stage
+    assert 11 in lines                      # .item() via call graph
+    via = [f for f in out if f.line == 11]
+    assert "reached from" in via[0].message
+
+
+def test_hot_path_sync_ignores_cold_functions(tmp_path):
+    fs = {"src/repro/serving/e.py":
+          "import numpy as np\n"
+          "class Engine:\n"
+          "    def build(self, s):\n"
+          "        return np.asarray(s)\n"}
+    assert not findings_for(tmp_path, fs, "hot-path-sync")
+
+
+def test_hot_path_sync_suppression(tmp_path):
+    fs = {"src/repro/serving/e.py":
+          "import numpy as np\n"
+          "class Engine:\n"
+          "    def stage(self, s):\n"
+          "        # repolint: disable=hot-path-sync -- host input\n"
+          "        return np.asarray(s)\n"}
+    assert not findings_for(tmp_path, fs, "hot-path-sync")
+
+
+# ---------------------------------------------------------------- layering
+def test_layering_obs_toplevel_jax(tmp_path):
+    out = findings_for(tmp_path,
+                       {"src/repro/obs/x.py": "import jax\n"}, "layering")
+    assert len(out) == 1 and "without jax" in out[0].message
+
+
+def test_layering_obs_lazy_jax_ok(tmp_path):
+    fs = {"src/repro/obs/x.py":
+          "def f():\n    import jax\n    return jax\n"}
+    assert not findings_for(tmp_path, fs, "layering")
+
+
+def test_layering_core_never_imports_serving(tmp_path):
+    fs = {"src/repro/core/x.py":
+          "def f():\n    from repro.serving import engine\n"}
+    out = findings_for(tmp_path, fs, "layering")
+    assert len(out) == 1 and "leaf layer" in out[0].message
+
+
+def test_layering_benchmarks_deep_import(tmp_path):
+    fs = {"src/repro/core/__init__.py": "from .packed import pack\n",
+          "src/repro/core/packed.py": "def pack():\n    return 1\n",
+          "benchmarks/b.py": "from repro.core.packed import pack\n"}
+    out = findings_for(tmp_path, fs, "layering")
+    assert len(out) == 1 and "deep-imports" in out[0].message
+
+
+def test_layering_benchmarks_init_export_ok(tmp_path):
+    fs = {"src/repro/core/__init__.py": "from .packed import pack\n",
+          "src/repro/core/packed.py": "def pack():\n    return 1\n",
+          "benchmarks/b.py": "from repro.core import pack\n"}
+    assert not findings_for(tmp_path, fs, "layering")
+
+
+def test_layering_benchmarks_unexported_name(tmp_path):
+    fs = {"src/repro/core/__init__.py": "from .packed import pack\n",
+          "src/repro/core/packed.py":
+              "def pack():\n    return 1\ndef _hidden():\n    return 2\n",
+          "benchmarks/b.py": "from repro.core import _hidden\n"}
+    out = findings_for(tmp_path, fs, "layering")
+    assert len(out) == 1 and "does not export" in out[0].message
+
+
+# ----------------------------------------------------------- monotonic-time
+def test_monotonic_time_flags_wall_clock(tmp_path):
+    fs = {"src/repro/serving/t.py":
+          "import time\ndef f():\n    return time.time()\n"}
+    out = findings_for(tmp_path, fs, "monotonic-time")
+    assert len(out) == 1 and out[0].line == 3
+
+
+def test_monotonic_time_bare_import_form(tmp_path):
+    fs = {"src/repro/serving/t.py":
+          "from time import time\ndef f():\n    return time()\n"}
+    assert findings_for(tmp_path, fs, "monotonic-time")
+
+
+def test_monotonic_time_allowlist_and_suppression(tmp_path):
+    fs = {"src/repro/obs/timing.py":
+          "import time\ndef wall():\n    return time.time()\n"}
+    assert not findings_for(tmp_path, fs, "monotonic-time")
+    fs = {"src/repro/serving/t.py":
+          "import time\n"
+          "t = time.time()  # repolint: disable=monotonic-time -- meta\n"}
+    assert not findings_for(tmp_path, fs, "monotonic-time")
+
+
+# --------------------------------------------------------------- lock-order
+_FIXTURE_LOCKS = """\
+LOCK_RANKS = {"a": 1, "b": 2}
+def make_lock(name):
+    import threading
+    return threading.Lock()
+"""
+
+_AB_BA = """\
+from repro.obs.locks import make_lock
+
+class S:
+    def __init__(self):
+        self._a = make_lock("a")
+        self._b = make_lock("b")
+
+    def good(self):
+        with self._a:
+            with self._b:
+                return 1
+
+    def bad(self):
+        with self._b:
+            with self._a:
+                return 2
+"""
+
+
+def test_lock_order_catches_ab_ba_deadlock(tmp_path):
+    fs = {"src/repro/obs/locks.py": _FIXTURE_LOCKS,
+          "src/repro/indexing/swap.py": _AB_BA}
+    out = findings_for(tmp_path, fs, "lock-order")
+    msgs = [f.message for f in out]
+    assert any("rank inversion" in m for m in msgs), msgs
+    assert any("cycle" in m for m in msgs), msgs
+    # the inversion is reported at the inner acquisition in bad()
+    inv = [f for f in out if "rank inversion" in f.message]
+    assert inv[0].line == 15
+
+
+def test_lock_order_clean_nesting_passes(tmp_path):
+    fs = {"src/repro/obs/locks.py": _FIXTURE_LOCKS,
+          "src/repro/indexing/swap.py": (
+              "from repro.obs.locks import make_lock\n"
+              "class S:\n"
+              "    def __init__(self):\n"
+              "        self._a = make_lock('a')\n"
+              "        self._b = make_lock('b')\n"
+              "    def good(self):\n"
+              "        with self._a:\n"
+              "            with self._b:\n"
+              "                return 1\n")}
+    assert not findings_for(tmp_path, fs, "lock-order")
+
+
+def test_lock_order_cross_function_edge(tmp_path):
+    fs = {"src/repro/obs/locks.py": _FIXTURE_LOCKS,
+          "src/repro/indexing/swap.py": (
+              "from repro.obs.locks import make_lock\n"
+              "class S:\n"
+              "    def __init__(self):\n"
+              "        self._a = make_lock('a')\n"
+              "        self._b = make_lock('b')\n"
+              "    def outer(self):\n"
+              "        with self._b:\n"
+              "            return self.inner()\n"
+              "    def inner(self):\n"
+              "        with self._a:\n"
+              "            return 1\n")}
+    out = findings_for(tmp_path, fs, "lock-order")
+    assert any("rank inversion" in f.message and "via" in f.message
+               for f in out)
+
+
+def test_lock_order_raw_lock_in_monitored_module(tmp_path):
+    fs = {"src/repro/obs/locks.py": _FIXTURE_LOCKS,
+          "src/repro/indexing/swap.py": (
+              "import threading\n"
+              "class S:\n"
+              "    def __init__(self):\n"
+              "        self._lock = threading.Lock()\n")}
+    out = findings_for(tmp_path, fs, "lock-order")
+    assert len(out) == 1 and "raw threading lock" in out[0].message
+
+
+def test_lock_order_unranked_name(tmp_path):
+    fs = {"src/repro/obs/locks.py": _FIXTURE_LOCKS,
+          "src/repro/indexing/swap.py": (
+              "from repro.obs.locks import make_lock\n"
+              "class S:\n"
+              "    def __init__(self):\n"
+              "        self._x = make_lock('zz')\n")}
+    out = findings_for(tmp_path, fs, "lock-order")
+    assert len(out) == 1 and "no declared rank" in out[0].message
+
+
+def test_lock_order_condition_aliases_lock_rank(tmp_path):
+    fs = {"src/repro/obs/locks.py": _FIXTURE_LOCKS,
+          "src/repro/indexing/swap.py": (
+              "import threading\n"
+              "from repro.obs.locks import make_lock\n"
+              "class S:\n"
+              "    def __init__(self):\n"
+              "        self._a = make_lock('a')\n"
+              "        self._cond = threading.Condition(self._a)\n"
+              "        self._b = make_lock('b')\n"
+              "    def f(self):\n"
+              "        with self._b:\n"
+              "            with self._cond:\n"
+              "                return 1\n")}
+    out = findings_for(tmp_path, fs, "lock-order")
+    assert any("rank inversion" in f.message for f in out)
+
+
+# ------------------------------------------------------------- suppressions
+def test_file_level_suppression(tmp_path):
+    fs = {"src/repro/serving/t.py":
+          "# repolint: disable-file=monotonic-time -- fixture file\n"
+          "import time\n"
+          "def f():\n    return time.time()\n"
+          "def g():\n    return time.time()\n"}
+    assert not findings_for(tmp_path, fs, "monotonic-time")
+
+
+def test_previous_line_suppression(tmp_path):
+    fs = {"src/repro/serving/t.py":
+          "import time\n"
+          "def f():\n"
+          "    # repolint: disable=monotonic-time -- why\n"
+          "    return time.time()\n"}
+    assert not findings_for(tmp_path, fs, "monotonic-time")
+
+
+def test_suppression_is_per_rule(tmp_path):
+    fs = {"src/repro/serving/t.py":
+          "import time\n"
+          "t = time.time()  # repolint: disable=jit-registry -- wrong rule\n"}
+    assert findings_for(tmp_path, fs, "monotonic-time")
+
+
+# -------------------------------------------------------------------- CLI
+def test_cli_exit_codes_and_json(tmp_path, capsys):
+    bad = tmp_path / "p1"
+    bad.mkdir()
+    (bad / "src" / "repro" / "serving").mkdir(parents=True)
+    (bad / "src" / "repro" / "serving" / "t.py").write_text(
+        "import time\nt = time.time()\n")
+    rc = cli_main(["--root", str(bad), "--format", "json",
+                   str(bad / "src")])
+    assert rc == 1
+    payload = json.loads(capsys.readouterr().out)
+    assert payload["count"] == 1
+    assert payload["findings"][0]["rule"] == "monotonic-time"
+
+    good = tmp_path / "p2"
+    (good / "src").mkdir(parents=True)
+    (good / "src" / "ok.py").write_text("x = 1\n")
+    assert cli_main(["--root", str(good), str(good / "src")]) == 0
+    capsys.readouterr()
+
+    assert cli_main(["--list-rules"]) == 0
+    listing = capsys.readouterr().out
+    for rule in ("jit-registry", "hot-path-sync", "layering",
+                 "monotonic-time", "lock-order"):
+        assert rule in listing
+
+    assert cli_main(["--select", "nope", str(good / "src"),
+                     "--root", str(good)]) == 2
+    assert cli_main([str(tmp_path / "empty-nothing")]) == 2
+
+
+# ------------------------------------------------------ OrderedLock runtime
+def test_make_lock_plain_by_default(monkeypatch):
+    from repro.obs import locks
+    monkeypatch.delenv("REPRO_LOCK_CHECK", raising=False)
+    lk = locks.make_lock("obs.events")
+    assert not isinstance(lk, locks.OrderedLock)
+    with pytest.raises(KeyError):
+        locks.make_lock("not-a-lock")
+
+
+def test_ordered_lock_asserts_partial_order(monkeypatch):
+    from repro.obs import locks
+    monkeypatch.setenv("REPRO_LOCK_CHECK", "1")
+    a = locks.make_lock("indexing.adapt")        # rank 10
+    b = locks.make_lock("engine.swap")           # rank 30
+    assert isinstance(a, locks.OrderedLock)
+    with a:
+        with b:
+            assert locks.held_locks() == ["indexing.adapt", "engine.swap"]
+    assert locks.held_locks() == []
+    with b:
+        with pytest.raises(locks.LockOrderError):
+            a.acquire()
+    assert locks.held_locks() == []
+    with pytest.raises(KeyError):
+        locks.make_lock("not-a-lock")
+
+
+def test_ordered_lock_same_rank_rejected(monkeypatch):
+    from repro.obs import locks
+    monkeypatch.setenv("REPRO_LOCK_CHECK", "1")
+    a1 = locks.make_lock("obs.series")
+    a2 = locks.make_lock("obs.series")
+    with a1:
+        with pytest.raises(locks.LockOrderError):
+            a2.acquire()
+
+
+def test_ordered_lock_behind_condition(monkeypatch):
+    from repro.obs import locks
+    monkeypatch.setenv("REPRO_LOCK_CHECK", "1")
+    lk = locks.make_lock("batcher.queue")
+    cond = threading.Condition(lk)
+    seen = []
+
+    def waiter():
+        with cond:
+            cond.wait(timeout=5)
+            seen.append(tuple(locks.held_locks()))
+
+    th = threading.Thread(target=waiter)
+    th.start()
+    time.sleep(0.05)
+    with cond:
+        cond.notify_all()
+    th.join(timeout=5)
+    assert not th.is_alive()
+    assert seen == [("batcher.queue",)]
+    assert locks.held_locks() == []
+
+
+def test_ordered_lock_stress_cross_subsystem(monkeypatch):
+    """Threads hammering the real nesting shape (queue -> ticket,
+    queue -> obs leaves) under the sanitizer: no LockOrderError."""
+    from repro.obs import locks
+    monkeypatch.setenv("REPRO_LOCK_CHECK", "1")
+    queue = locks.make_lock("batcher.queue")
+    ticket = locks.make_lock("batcher.ticket")
+    series = locks.make_lock("obs.series")
+    events = locks.make_lock("obs.events")
+    errors = []
+
+    def worker(_):
+        try:
+            for _ in range(200):
+                with queue:
+                    with series:
+                        pass
+                    with events:
+                        pass
+                with ticket:
+                    pass
+        except locks.LockOrderError as e:   # pragma: no cover
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker, args=(i,))
+               for i in range(4)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join(timeout=30)
+    assert not errors
+    assert locks.held_locks() == []
+
+
+# ------------------------------------------------------- full-tree regression
+def test_full_tree_has_zero_findings():
+    """The committed tree passes every checker — the same blocking gate
+    CI runs via ``python -m repro.analysis src benchmarks``."""
+    project = load_project([os.path.join(REPO, "src"),
+                            os.path.join(REPO, "benchmarks")], root=REPO)
+    assert project.modules, "expected sources under src/ and benchmarks/"
+    out = run(project)
+    assert out == [], "\n".join(f.render() for f in out)
+
+
+def test_lock_ranks_cover_every_made_lock():
+    """Every make_lock() call site in the tree names a declared rank —
+    checked statically so a rename cannot drift past the table."""
+    import ast as _ast
+
+    from repro.obs.locks import LOCK_RANKS
+
+    project = load_project([os.path.join(REPO, "src")], root=REPO)
+    names = set()
+    for mod in project.modules:
+        for node in _ast.walk(mod.tree):
+            if isinstance(node, _ast.Call) and \
+                    getattr(node.func, "id",
+                            getattr(node.func, "attr", "")) == "make_lock" \
+                    and node.args and isinstance(node.args[0], _ast.Constant):
+                names.add(node.args[0].value)
+    assert names, "expected make_lock call sites in src/"
+    assert names <= set(LOCK_RANKS)

@@ -3,8 +3,7 @@
 import numpy as np
 import pytest
 
-from repro.core.compression import (compress, compress_to_fraction, jaccard,
-                                    adjacent_regions, select_merge_target)
+from repro.core.compression import compress, compress_to_fraction, jaccard
 from repro.core.query import query
 from repro.core.visgraph import astar
 from repro.core.workload import (cluster_queries, workload_scores,
@@ -64,7 +63,6 @@ def test_mapper_consistency_after_compression(fresh_ehl):
 def test_regions_stay_grid_connected(fresh_ehl):
     """Merging only adjacent regions keeps every region 4-connected."""
     compress_to_fraction(fresh_ehl, 0.15)
-    nx = fresh_ehl.nx
     for r in fresh_ehl.regions.values():
         cells = set(r.cells)
         start = next(iter(cells))

@@ -12,7 +12,6 @@ import sys
 import textwrap
 
 import numpy as np
-import pytest
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 

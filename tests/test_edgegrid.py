@@ -13,8 +13,7 @@ import pytest
 import jax
 import jax.numpy as jnp
 
-from repro.core.edgegrid import (build_edge_grid, gather_edge_tiles,
-                                 plan_grid_shape, segvis_grid)
+from repro.core.edgegrid import build_edge_grid, segvis_grid
 from repro.core.geometry import Scene
 from repro.core.packed import _pack_edges, pack_index
 from repro.kernels import ops

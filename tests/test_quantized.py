@@ -13,7 +13,7 @@ import pytest
 import jax.numpy as jnp
 
 from repro.core.packed import (bucketed_device_bytes, encode_delta_u16,
-                               encode_dist, join_masked, pack_bucketed,
+                               encode_dist, join_masked,
                                query_batch_bucketed, slab_layout,
                                _quant_stats, _quantize_slab)
 

@@ -11,7 +11,6 @@ eager, jitted, in the Pallas kernel, and through the edge-grid path.
 """
 
 import numpy as np
-import pytest
 import jax
 import jax.numpy as jnp
 

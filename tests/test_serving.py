@@ -75,6 +75,34 @@ def test_warmup_covers_every_jit_entry(scene_s, graph_s, hl_s, queries_s):
     assert packed.TRACES.count > c0
 
 
+def test_trace_entries_taxonomy_matches_decorators():
+    """``TRACE_ENTRIES`` is the static jit-entry taxonomy the docs, the
+    jit-registry checker, and compile attribution all key off — it must
+    equal the set of ``@_jit_entry`` names actually defined, with no
+    duplicates (the ``repolint`` jit-registry rule enforces the same
+    invariant in CI; this is the in-process cross-check)."""
+    import ast
+    import inspect
+
+    from repro.core import packed
+
+    assert len(packed.TRACE_ENTRIES) == len(set(packed.TRACE_ENTRIES))
+    tree = ast.parse(inspect.getsource(packed))
+    decorated = set()
+    for node in ast.walk(tree):
+        for dec in getattr(node, "decorator_list", ()):
+            if isinstance(dec, ast.Call) and \
+                    getattr(dec.func, "id", "") == "_jit_entry" and \
+                    dec.args and isinstance(dec.args[0], ast.Constant):
+                decorated.add(dec.args[0].value)
+    assert decorated == set(packed.TRACE_ENTRIES)
+    # every wrapped entry carries its name for attribution
+    for name in packed.TRACE_ENTRIES:
+        fn = getattr(packed, name, None)
+        if fn is not None and hasattr(fn, "entry"):
+            assert fn.entry == name
+
+
 def test_lm_server_greedy_decode():
     import jax
     import jax.numpy as jnp

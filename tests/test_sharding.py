@@ -21,7 +21,7 @@ from repro.core.grid import build_ehl
 from repro.core.packed import (bucketed_device_bytes, pack_bucketed,
                                query_batch_bucketed)
 from repro.core.workload import cluster_queries, uniform_queries
-from repro.indexing import IndexManager, SwappableEngine
+from repro.indexing import IndexManager
 from repro.serving.engine import PathServer
 from repro.sharding import (ShardPlanner, ShardedQueryEngine,
                             sharded_overhead_bytes)

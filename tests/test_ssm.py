@@ -9,7 +9,6 @@ from hypothesis import given, settings, strategies as st
 
 from repro.configs import get_config
 from repro.models import ssm as S
-from repro.models.layers import rmsnorm
 
 CFG = get_config("mamba2-780m").reduced()
 KEY = jax.random.PRNGKey(1)

@@ -12,7 +12,7 @@ from jax.sharding import PartitionSpec as P
 from repro.checkpoint import store
 from repro.data.pipeline import DataConfig, host_batch_size, synthetic_batch
 from repro.distributed import fault
-from repro.distributed.sharding import batch_spec, param_specs
+from repro.distributed.sharding import param_specs
 from repro.launch.mesh import make_host_mesh
 from repro.optim import adamw
 from repro.optim.compression import compress_psum_ref
@@ -121,7 +121,6 @@ def test_checkpoint_latest_and_atomicity(tmp_path):
 def test_elastic_remesh_roundtrip(tmp_path):
     """Save under one mesh, restore under another (elastic resize)."""
     from jax.sharding import NamedSharding
-    mesh_a = make_host_mesh()
     tree = {"w": jnp.arange(16.0).reshape(4, 4)}
     store.save(str(tmp_path), 0, tree)
     mesh_b = make_host_mesh()          # same devices, fresh mesh object
